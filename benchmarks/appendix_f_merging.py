@@ -1,0 +1,66 @@
+"""Appendix F (Lemma 9): when is merging two clusters beneficial?
+
+Empirically verifies the merge condition D^2 <= ~1/(2n): two linear
+regression clusters at varying separation eps are trained (a) separately
+and (b) merged; the crossover point of which is better tracks 1/(2n).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core.erm import ridge_erm
+from repro.core.theory import merge_condition
+
+N = 200          # samples per user
+D_DIM = 10
+USERS_PER = 4
+RUNS = 5
+
+
+def run():
+    rng = np.random.default_rng(0)
+    bound = merge_condition(N * USERS_PER, N * USERS_PER)
+    rows = []
+    us = 0.0
+    for eps2 in (bound * 0.04, bound * 0.5, bound * 25, bound * 2500):
+        sep_err, merged_err = [], []
+        for run_i in range(RUNS):
+            theta_i = rng.normal(size=D_DIM)
+            delta = rng.normal(size=D_DIM)
+            delta *= np.sqrt(eps2) / np.linalg.norm(delta)
+            theta_j = theta_i + delta
+            xs_i = rng.normal(size=(USERS_PER * N, D_DIM)).astype(np.float32)
+            xs_j = rng.normal(size=(USERS_PER * N, D_DIM)).astype(np.float32)
+            y_i = xs_i @ theta_i + rng.normal(size=len(xs_i))
+            y_j = xs_j @ theta_j + rng.normal(size=len(xs_j))
+            th_i, us = timed(ridge_erm, jnp.asarray(xs_i),
+                             jnp.asarray(y_i.astype(np.float32)), 1e-8,
+                             iters=1)
+            th_j = ridge_erm(jnp.asarray(xs_j),
+                             jnp.asarray(y_j.astype(np.float32)), 1e-8)
+            x_all = np.concatenate([xs_i, xs_j])
+            y_all = np.concatenate([y_i, y_j]).astype(np.float32)
+            th_m = ridge_erm(jnp.asarray(x_all), jnp.asarray(y_all), 1e-8)
+            sep = 0.5 * (np.sum((np.asarray(th_i) - theta_i) ** 2)
+                         + np.sum((np.asarray(th_j) - theta_j) ** 2))
+            mer = 0.5 * (np.sum((np.asarray(th_m) - theta_i) ** 2)
+                         + np.sum((np.asarray(th_m) - theta_j) ** 2))
+            sep_err.append(sep)
+            merged_err.append(mer)
+        rows.append((eps2 / bound, float(np.mean(merged_err))
+                     / float(np.mean(sep_err))))
+    emit("appendix_f/merge_vs_separate_mse_ratio", us,
+         ";".join(f"D2_over_bound={r:.2g}:{v:.3f}" for r, v in rows))
+    # merging should win (<1) below the bound and lose (>1) far above it
+    emit("appendix_f/verdict", us,
+         f"below_bound={rows[0][1]:.3f}(<1 good);far_above={rows[-1][1]:.3f}(>1 good)")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

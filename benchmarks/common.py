@@ -1,0 +1,24 @@
+"""Benchmark helpers: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3, **kwargs):
+    """Returns (result, us_per_call)."""
+    result = fn(*args, **kwargs)
+    jax.block_until_ready(jax.tree_util.tree_leaves(result))
+    for _ in range(max(0, warmup - 1)):
+        jax.block_until_ready(jax.tree_util.tree_leaves(fn(*args, **kwargs)))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args, **kwargs)
+        jax.block_until_ready(jax.tree_util.tree_leaves(result))
+    us = (time.perf_counter() - t0) / iters * 1e6
+    return result, us
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

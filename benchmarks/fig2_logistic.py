@@ -1,0 +1,60 @@
+"""Figure 2 (Appendix E.2): logistic regression, K=4, d=2 — ODCL-CC MSE
+vs n (left panel) and the number of clusters convex clustering produces
+(right panel)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core import ODCLConfig, batched_logistic_erm, odcl, oracles
+from repro.core.clustering import lambda_interval
+from repro.data import make_logistic_federation
+
+N_GRID = (400, 1600, 4800)
+RUNS = 2
+
+
+def nmse(models, fed):
+    opt = fed.optima[fed.true_labels]
+    return float(np.mean(
+        np.sum((models - opt) ** 2, 1) / np.maximum(np.sum(opt ** 2, 1), 1e-9)))
+
+
+def run():
+    errs, kcounts, oracle_errs = [], [], []
+    us = 0.0
+    for n in N_GRID:
+        e, kk, oe = [], [], []
+        for seed in range(RUNS):
+            fed = make_logistic_federation(seed=seed, m=40, K=4, n=n)
+            local = np.asarray(batched_logistic_erm(
+                jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-5, 25))
+            lo, hi = lambda_interval(local, fed.true_labels)
+            lam = 0.5 * (lo + hi) if lo < hi else lo
+            res, us = timed(odcl, local,
+                            ODCLConfig(algo="convex", lam=lam,
+                                       cc_iters=250), iters=1)
+            e.append(nmse(res.user_models, fed))
+            kk.append(res.n_clusters)
+            oe.append(nmse(oracles.oracle_averaging(local, fed.true_labels),
+                           fed))
+        errs.append(float(np.mean(e)))
+        kcounts.append(float(np.mean(kk)))
+        oracle_errs.append(float(np.mean(oe)))
+
+    emit("fig2/odcl_cc_mse", us,
+         ";".join(f"n={n}:{v:.2e}" for n, v in zip(N_GRID, errs)))
+    emit("fig2/oracle_avg_mse", us,
+         ";".join(f"n={n}:{v:.2e}" for n, v in zip(N_GRID, oracle_errs)))
+    emit("fig2/n_clusters", us,
+         ";".join(f"n={n}:{v:.1f}" for n, v in zip(N_GRID, kcounts)))
+    return errs, kcounts
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

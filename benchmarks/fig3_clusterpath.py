@@ -1,0 +1,66 @@
+"""Figure 3 (Appendix E.3): exact-lambda ODCL-CC vs the practical
+clusterpath variant — MSE and cluster counts vs n (linear regression,
+K=4)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core import ODCLConfig, batched_ridge_erm, odcl
+from repro.core.clustering import lambda_interval
+from repro.data import make_linear_regression_federation
+
+N_GRID = (50, 200, 800)
+RUNS = 2
+M_USERS = 100
+
+
+def nmse(models, fed):
+    opt = fed.optima[fed.true_labels]
+    return float(np.mean(np.sum((models - opt) ** 2, 1) / np.sum(opt ** 2, 1)))
+
+
+def run():
+    us = 0.0
+    exact_curve, path_curve, exact_k, path_k = [], [], [], []
+    for n in N_GRID:
+        ee, pe, ek, pk = [], [], [], []
+        for seed in range(RUNS):
+            fed = make_linear_regression_federation(seed=seed, m=M_USERS, K=4, n=n)
+            local = np.asarray(batched_ridge_erm(
+                jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
+            # paper E.1 selection: bounds (17) on the true clustering;
+            # uniform-in-interval when non-empty else the upper bound
+            lo, hi = lambda_interval(local, fed.true_labels)
+            lam = 0.5 * (lo + hi) if lo < hi else lo
+            exact = odcl(local, ODCLConfig(algo="convex", lam=lam,
+                                           cc_iters=250))
+            path, us = timed(
+                odcl, local, ODCLConfig(algo="clusterpath", n_lambdas=8,
+                                        cc_iters=250), iters=1)
+            ee.append(nmse(exact.user_models, fed))
+            pe.append(nmse(path.user_models, fed))
+            ek.append(exact.n_clusters)
+            pk.append(path.n_clusters)
+        exact_curve.append(float(np.mean(ee)))
+        path_curve.append(float(np.mean(pe)))
+        exact_k.append(float(np.mean(ek)))
+        path_k.append(float(np.mean(pk)))
+
+    emit("fig3/exact_cc_mse", us,
+         ";".join(f"n={n}:{v:.2e}" for n, v in zip(N_GRID, exact_curve)))
+    emit("fig3/clusterpath_mse", us,
+         ";".join(f"n={n}:{v:.2e}" for n, v in zip(N_GRID, path_curve)))
+    emit("fig3/exact_k", us,
+         ";".join(f"n={n}:{v:.1f}" for n, v in zip(N_GRID, exact_k)))
+    emit("fig3/clusterpath_k", us,
+         ";".join(f"n={n}:{v:.1f}" for n, v in zip(N_GRID, path_k)))
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: the ODCL server-step hot spots through the
+public ops wrappers (CPU runs the jnp oracle path; on TPU these dispatch
+to the Pallas kernels — same call sites)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops
+
+
+def run():
+    rng = np.random.default_rng(0)
+    m, k, d = 1024, 16, 4096
+    pts = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    cts = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+
+    pd = jax.jit(ops.pairwise_sqdist)
+    _, us = timed(pd, pts, cts, warmup=2, iters=5)
+    emit("kernels/pairwise_sqdist_1024x16x4096", us,
+         f"gflops={2 * m * k * d / us / 1e3:.2f}")
+
+    ka = jax.jit(ops.kmeans_assign)
+    _, us = timed(ka, pts, cts, warmup=2, iters=5)
+    emit("kernels/kmeans_assign_1024x16x4096", us,
+         f"gflops={4 * m * k * d / us / 1e3:.2f}")
+
+    e = 4950
+    v = jnp.asarray(rng.normal(size=(e, 256)).astype(np.float32))
+    gp = jax.jit(lambda x: ops.group_ball_proj(x, 1.0))
+    _, us = timed(gp, v, warmup=2, iters=5)
+    emit("kernels/group_ball_proj_4950x256", us,
+         f"gbps={2 * e * 256 * 4 / us / 1e3:.2f}")
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
+    kk = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)).astype(np.float32))
+    fa = jax.jit(lambda a, b, c: ops.flash_attention(a, b, c, causal=True))
+    _, us = timed(fa, q, kk, kk, warmup=2, iters=3)
+    emit("kernels/attention_1x8x1024x64", us,
+         f"gflops={4 * 8 * 1024 * 1024 * 64 / us / 1e3:.2f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Roofline table reader: renders §Roofline rows from the sweep JSONLs
+(produced by repro.roofline.run_sweep + repro.launch.dryrun)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+BASE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return rows
+
+
+def run():
+    rows = load(os.path.join(BASE, "roofline_baseline.jsonl"))
+    seen = {}
+    for r in rows:
+        if r.get("status") != "OK":
+            continue
+        seen[(r["arch"], r["shape"])] = r["roofline"]
+    if not seen:
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.roofline.run_sweep")
+        return
+    for (arch, shape), rl in sorted(seen.items()):
+        emit(f"roofline/{arch}/{shape}", rl["compute_s"] * 1e6,
+             f"mem_s={rl['memory_s']:.3f};coll_s={rl['collective_s']:.3f};"
+             f"bottleneck={rl['bottleneck']};useful={rl['useful_flop_ratio']:.2f}")
+    # dominant bottleneck histogram
+    from collections import Counter
+
+    hist = Counter(v["bottleneck"] for v in seen.values())
+    emit("roofline/bottleneck_histogram", 0.0,
+         ";".join(f"{k}={v}" for k, v in sorted(hist.items())))
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

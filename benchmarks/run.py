@@ -1,0 +1,49 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    appendix_d_inexact,
+    appendix_f_merging,
+    fig1_mse_vs_n,
+    fig2_logistic,
+    fig3_clusterpath,
+    fig4_ifca_comm,
+    kernels_bench,
+    roofline_report,
+    table1_comparison,
+    table2_accuracy,
+)
+
+BENCHES = [
+    ("table1", table1_comparison.run),
+    ("fig1", fig1_mse_vs_n.run),
+    ("table2", table2_accuracy.run),
+    ("fig2", fig2_logistic.run),
+    ("fig3", fig3_clusterpath.run),
+    ("fig4", fig4_ifca_comm.run),
+    ("appendix_f", appendix_f_merging.run),
+    ("appendix_d", appendix_d_inexact.run),
+    ("kernels", kernels_bench.run),
+    ("roofline", roofline_report.run),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in BENCHES:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 - report all benches
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,8 @@
+"""Reproduce every paper figure/table in one go (CSV on stdout).
+
+    PYTHONPATH=src python examples/paper_experiments.py
+"""
+from benchmarks import run as bench_run
+
+if __name__ == "__main__":
+    bench_run.main()

@@ -1,0 +1,44 @@
+"""Quickstart: the complete ODCL-C pipeline on the paper's synthetic
+linear-regression federation (Section 5) in a few seconds on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ODCLConfig, batched_ridge_erm, odcl, oracles
+from repro.data import make_linear_regression_federation
+
+
+def nmse(models, fed):
+    opt = fed.optima[fed.true_labels]
+    return float(np.mean(np.sum((models - opt) ** 2, 1) / np.sum(opt ** 2, 1)))
+
+
+def main():
+    # m=100 users in K=10 hidden clusters, n samples each (unknown to us)
+    fed = make_linear_regression_federation(seed=0, n=200)
+    print(f"federation: m={fed.m} users, K={fed.K} hidden clusters, "
+          f"n={fed.n} samples/user, separation D={fed.D:.2f}")
+
+    # ---- step 1 (users): solve local ERMs, send models up (ONE round) --
+    local = np.asarray(batched_ridge_erm(
+        jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
+
+    # ---- steps 2-4 (server): cluster, average, send back ---------------
+    for algo, kwargs in (("kmeans++", {"k": 10}),
+                         ("clusterpath", {"n_lambdas": 8, "cc_iters": 200})):
+        res = odcl(local, ODCLConfig(algo=algo, **kwargs))
+        print(f"ODCL-{algo:11s} K'={res.n_clusters:3d} "
+              f"nmse={nmse(res.user_models, fed):.2e}")
+
+    # ---- reference points ----------------------------------------------
+    print(f"oracle averaging  nmse={nmse(oracles.oracle_averaging(local, fed.true_labels), fed):.2e}"
+          "   (knows the true clusters)")
+    print(f"local ERMs        nmse={nmse(oracles.local_erm(local), fed):.2e}")
+    print(f"naive averaging   nmse={nmse(oracles.naive_averaging(local), fed):.2e}"
+          "   (ignores heterogeneity)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Batched serving example: prefill + autoregressive generation through
+the ring-buffer KV-cache / recurrent-state serving path.
+
+    PYTHONPATH=src python examples/serve_clustered.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    # a dense GQA arch and a fully recurrent arch through the same API
+    main(["--arch", "qwen2-0.5b", "--reduced", "--batch", "4",
+          "--prompt-len", "32", "--gen", "16"])
+    main(["--arch", "xlstm-125m", "--reduced", "--batch", "4",
+          "--prompt-len", "32", "--gen", "16", "--temperature", "0.8"])

@@ -1,0 +1,63 @@
+"""Host checkpointing of pytrees: msgpack + zstd, atomic writes.
+
+Layout: <dir>/step_<n>.ckpt, each a zstd-compressed msgpack of
+{path: {dtype, shape, data}} plus a 'tree' structure descriptor.
+Restores into the exact pytree structure given as template.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+        arr = np.asarray(leaf)
+        out[key] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                    "data": arr.tobytes()}
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    payload = msgpack.packb(_flatten(tree), use_bin_type=True)
+    compressed = zstandard.ZstdCompressor(level=3).compress(payload)
+    path = os.path.join(ckpt_dir, f"step_{step}.ckpt")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(compressed)
+    os.replace(tmp, path)
+    return path
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, tree_template):
+    path = os.path.join(ckpt_dir, f"step_{step}.ckpt")
+    with open(path, "rb") as f:
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    stored = msgpack.unpackb(payload, raw=False)
+
+    flat = jax.tree_util.tree_flatten_with_path(tree_template)
+    leaves, treedef = flat[0], flat[1]
+    out = []
+    for p, leaf in leaves:
+        key = "/".join(str(getattr(q, "key", getattr(q, "name", q))) for q in p)
+        rec = stored[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        out.append(arr.reshape(rec["shape"]))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.ckpt$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,47 @@
+"""The paper's primary contribution: the ODCL-C one-shot framework.
+
+  odcl.py       — Algorithm 1 (local ERM -> server clustering -> averaging)
+  clustering/   — admissible clustering algorithms (KM/KM++/spectral, CC,
+                  clusterpath, gradient clustering) + admissibility theory
+  erm.py        — local ERM solvers (closed-form ridge, Newton logistic,
+                  Appendix-D inexact SGD)
+  ifca.py       — IFCA baseline [7]
+  oracles.py    — Oracle Averaging / Cluster Oracle / Local / Naive baselines
+  theory.py     — Table 1 & Theorem 1 sample thresholds and bounds
+  sketch.py     — JL sketching of parameter pytrees for at-scale clustering
+  federated.py  — multi-pod integration: client axis on the mesh,
+                  local-SGD train step (no cross-client collectives) and
+                  the one-shot clustered aggregation step
+"""
+from repro.core.odcl import ODCLConfig, ODCLResult, odcl, cluster_models, aggregate
+from repro.core.erm import (
+    ridge_erm,
+    batched_ridge_erm,
+    logistic_erm,
+    batched_logistic_erm,
+    sgd_erm,
+)
+from repro.core.ifca import IFCAConfig, ifca, ifca_init_near_optima, ifca_init_annulus
+from repro.core import oracles, theory
+from repro.core.sketch import sketch_vector, sketch_tree
+
+__all__ = [
+    "ODCLConfig",
+    "ODCLResult",
+    "odcl",
+    "cluster_models",
+    "aggregate",
+    "ridge_erm",
+    "batched_ridge_erm",
+    "logistic_erm",
+    "batched_logistic_erm",
+    "sgd_erm",
+    "IFCAConfig",
+    "ifca",
+    "ifca_init_near_optima",
+    "ifca_init_annulus",
+    "oracles",
+    "theory",
+    "sketch_vector",
+    "sketch_tree",
+]

@@ -1,0 +1,37 @@
+from repro.core.clustering.kmeans import (
+    kmeans,
+    kmeans_plus_plus_init,
+    spectral_init,
+    KMeansResult,
+)
+from repro.core.clustering.convex import (
+    convex_clustering,
+    clusterpath,
+    knn_weights,
+    lambda_interval,
+    ConvexClusteringResult,
+)
+from repro.core.clustering.gradient import gradient_clustering
+from repro.core.clustering.admissible import (
+    separability_alpha,
+    is_separable,
+    alpha_convex_clustering,
+    alpha_kmeans,
+)
+
+__all__ = [
+    "kmeans",
+    "kmeans_plus_plus_init",
+    "spectral_init",
+    "KMeansResult",
+    "convex_clustering",
+    "knn_weights",
+    "clusterpath",
+    "lambda_interval",
+    "ConvexClusteringResult",
+    "gradient_clustering",
+    "separability_alpha",
+    "is_separable",
+    "alpha_convex_clustering",
+    "alpha_kmeans",
+]

@@ -1,0 +1,54 @@
+"""Separability condition (4) and admissibility constants (Lemmas 1-2).
+
+Definition 1: a dataset {a_i} is separable wrt clustering {C_k} with
+margin alpha if  alpha * ||mu_k - a_i|| < ||mu_k - mu_l||  for all
+i in C_k, k != l.
+
+Lemma 1 (ODCL-CC):  admissible when alpha = 4 (m - |C_(K)|) / |C_(K)|.
+Lemma 2 (ODCL-KM):  admissible when alpha = 2 + 2 c sqrt(m) / |C_(K)|.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _stats(points, labels):
+    points = np.asarray(points, np.float64)
+    labels = np.asarray(labels)
+    ks = np.unique(labels)
+    mus = np.stack([points[labels == k].mean(axis=0) for k in ks])
+    radii = np.array([
+        np.linalg.norm(points[labels == k] - mus[i], axis=1).max()
+        for i, k in enumerate(ks)
+    ])
+    if len(ks) == 1:
+        min_sep = np.inf
+    else:
+        d = np.linalg.norm(mus[:, None] - mus[None, :], axis=-1)
+        np.fill_diagonal(d, np.inf)
+        min_sep = d.min()
+    return mus, radii, min_sep
+
+
+def separability_alpha(points, labels) -> float:
+    """Largest alpha for which condition (4) holds (inf if radii are 0)."""
+    _, radii, min_sep = _stats(points, labels)
+    rmax = radii.max()
+    if rmax == 0.0:
+        return np.inf
+    return float(min_sep / rmax)
+
+
+def is_separable(points, labels, alpha: float) -> bool:
+    """Check condition (4) for a given margin alpha."""
+    return separability_alpha(points, labels) > alpha
+
+
+def alpha_convex_clustering(m: int, c_min: int) -> float:
+    """Lemma 1 margin for convex clustering."""
+    return 4.0 * (m - c_min) / c_min
+
+
+def alpha_kmeans(m: int, c_min: int, c: float = 1.0) -> float:
+    """Lemma 2 margin for K-means with spectral init (c = global const)."""
+    return 2.0 + 2.0 * c * np.sqrt(m) / c_min

@@ -1,0 +1,41 @@
+"""Gradient clustering [Armacki et al., ICML 2022] — third admissible algo.
+
+Alternates nearest-center assignment with a *gradient* step on the
+quantization objective (instead of the exact mean update of Lloyd's):
+
+    x_k <- x_k - alpha * sum_{i in C_k} (x_k - a_i)
+
+which for alpha = 1/|C_k| reduces to Lloyd's. Smaller alpha gives the
+damped variant analysed in the paper's reference [21].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering.kmeans import KMeansResult, kmeans_plus_plus_init, _assign
+from repro.kernels import ops as kops
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def gradient_clustering(key, points, k: int, *, alpha: float = 0.5,
+                        iters: int = 100) -> KMeansResult:
+    points = points.astype(jnp.float32)
+    centers0 = kmeans_plus_plus_init(key, points, k)
+
+    def body(centers, _):
+        labels, _ = _assign(points, centers)
+        onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)
+        counts = jnp.sum(onehot, axis=0)                     # (k,)
+        sums = onehot.T @ points                             # (k, d)
+        # grad of 1/2 sum_i ||x_{c(i)} - a_i||^2 wrt x_k:
+        grad = counts[:, None] * centers - sums
+        step = alpha / jnp.maximum(counts, 1.0)[:, None]
+        return centers - step * grad, None
+
+    centers, _ = jax.lax.scan(body, centers0, None, length=iters)
+    labels, mind = _assign(points, centers)
+    return KMeansResult(labels=labels, centers=centers,
+                        inertia=jnp.sum(mind), n_iter=jnp.array(iters, jnp.int32))

@@ -1,0 +1,136 @@
+"""K-means clustering (Lloyd's algorithm) with K-means++ and spectral init.
+
+This is the server-side clustering step of ODCL-KM / ODCL-KM++ (paper
+Section 3 and Appendix B.2.2).  Everything is pure JAX and jittable with
+static ``k`` / ``iters`` so it can run inside the one-shot aggregation
+step on-device.
+
+The pairwise-distance hot spot is delegated to ``repro.kernels.ops``
+(Pallas kernel on TPU, jnp oracle elsewhere).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class KMeansResult(NamedTuple):
+    labels: jnp.ndarray     # (m,) int32 cluster assignment
+    centers: jnp.ndarray    # (k, d) cluster centers
+    inertia: jnp.ndarray    # () sum of squared distances to assigned center
+    n_iter: jnp.ndarray     # () iterations actually run
+
+
+def _assign(points, centers):
+    """Nearest-center assignment via the pairwise-distance kernel."""
+    d2 = kops.pairwise_sqdist(points, centers)      # (m, k)
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind = jnp.min(d2, axis=1)
+    return labels, mind
+
+
+def _update_centers(points, labels, k, prev_centers):
+    """Mean of assigned points; empty clusters keep their previous center."""
+    onehot = jax.nn.one_hot(labels, k, dtype=points.dtype)      # (m, k)
+    counts = jnp.sum(onehot, axis=0)                            # (k,)
+    sums = onehot.T @ points                                    # (k, d)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    means = sums / safe
+    return jnp.where(counts[:, None] > 0, means, prev_centers), counts
+
+
+def kmeans_plus_plus_init(key, points, k: int):
+    """K-means++ seeding [Arthur & Vassilvitskii 2007] (ODCL-KM++)."""
+    m, d = points.shape
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, m)
+    centers0 = jnp.zeros((k, d), points.dtype).at[0].set(points[first])
+
+    def body(i, carry):
+        centers, key = carry
+        key, sub = jax.random.split(key)
+        d2 = kops.pairwise_sqdist(points, centers)              # (m, k)
+        # only the first i centers are valid
+        valid = jnp.arange(k) < i
+        d2 = jnp.where(valid[None, :], d2, jnp.inf)
+        mind = jnp.min(d2, axis=1)
+        probs = mind / jnp.maximum(jnp.sum(mind), 1e-30)
+        nxt = jax.random.categorical(sub, jnp.log(probs + 1e-30))
+        centers = centers.at[i].set(points[nxt])
+        return centers, key
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers0, key))
+    return centers
+
+
+def spectral_init(points, k: int):
+    """SVD-space initialization (Awasthi–Sheffet style, Appendix B.2.2).
+
+    Project points onto the top-k right singular subspace and run a greedy
+    farthest-point seeding there; return seeds in the original space.
+    """
+    m, d = points.shape
+    mu = jnp.mean(points, axis=0, keepdims=True)
+    x = points - mu
+    # economical SVD of the (m, d) matrix
+    _, _, vt = jnp.linalg.svd(x, full_matrices=False)
+    proj = x @ vt[:k].T                                        # (m, k)
+    # farthest-point traversal in the projected space
+    start = jnp.argmax(jnp.sum(proj * proj, axis=1))
+    idxs = jnp.zeros((k,), jnp.int32).at[0].set(start.astype(jnp.int32))
+
+    def body(i, idxs):
+        chosen = proj[idxs]                                    # (k, k)
+        d2 = kops.pairwise_sqdist(proj, chosen)
+        valid = jnp.arange(k) < i
+        d2 = jnp.where(valid[None, :], d2, jnp.inf)
+        mind = jnp.min(d2, axis=1)
+        return idxs.at[i].set(jnp.argmax(mind).astype(jnp.int32))
+
+    idxs = jax.lax.fori_loop(1, k, body, idxs)
+    return points[idxs]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "init"))
+def kmeans(key, points, k: int, iters: int = 50, init: str = "kmeans++", tol: float = 1e-8):
+    """Lloyd's algorithm.
+
+    Args:
+      key: PRNG key (used by the ++ init).
+      points: (m, d) data — for ODCL these are local model (sketch) vectors.
+      k: number of clusters (static).
+      iters: max Lloyd iterations (static; fixed-shape loop with early
+        freeze once centers stop moving, so it is jittable).
+      init: 'kmeans++' | 'spectral' | 'random'.
+    """
+    points = points.astype(jnp.float32)
+    m, d = points.shape
+    if init == "kmeans++":
+        centers = kmeans_plus_plus_init(key, points, k)
+    elif init == "spectral":
+        centers = spectral_init(points, k)
+    elif init == "random":
+        sel = jax.random.choice(key, m, (k,), replace=False)
+        centers = points[sel]
+    else:  # pragma: no cover - guarded by static arg
+        raise ValueError(f"unknown init {init!r}")
+
+    def body(carry, _):
+        centers, done, it = carry
+        labels, _ = _assign(points, centers)
+        new_centers, _ = _update_centers(points, labels, k, centers)
+        moved = jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1))
+        new_done = done | (moved < tol)
+        centers = jnp.where(done, centers, new_centers)
+        return (centers, new_done, it + jnp.where(done, 0, 1)), None
+
+    (centers, _, n_iter), _ = jax.lax.scan(
+        body, (centers, jnp.array(False), jnp.array(0, jnp.int32)), None, length=iters
+    )
+    labels, mind = _assign(points, centers)
+    return KMeansResult(labels=labels, centers=centers, inertia=jnp.sum(mind), n_iter=n_iter)

@@ -1,0 +1,103 @@
+"""Local empirical-risk minimization — step 1 of Algorithm 1.
+
+Every user solves  theta_hat_i = argmin_theta f_i(theta)  on its own
+data.  Three solvers:
+
+  * ``ridge_erm``      — closed form for quadratic losses (the paper's
+                         synthetic linear-regression experiments).
+  * ``logistic_erm``   — Newton iterations for l2-regularized logistic
+                         regression (paper Appendix E.2 / MNIST Table 2).
+  * ``sgd_erm``        — projected SGD, the *inexact* ERM of Appendix D
+                         (Assumptions 7-8, step size 1/(mu t)).
+
+All are vmapped across users so the whole federation solves its local
+problems in one batched call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- ridge
+
+@jax.jit
+def ridge_erm(x, y, reg: float = 1e-6):
+    """Closed-form ERM for 1/2n ||X theta - y||^2 + reg/2 ||theta||^2.
+
+    x: (n, d), y: (n,) -> theta (d,)
+    """
+    n, d = x.shape
+    gram = x.T @ x / n + reg * jnp.eye(d, dtype=x.dtype)
+    rhs = x.T @ y / n
+    return jnp.linalg.solve(gram, rhs)
+
+
+batched_ridge_erm = jax.jit(jax.vmap(ridge_erm, in_axes=(0, 0, None)), static_argnums=())
+
+
+# ------------------------------------------------------------- logistic
+
+def _logistic_loss(theta, x, y, reg):
+    """Mean l2-regularized logistic loss; y in {-1, +1}; theta[(d+1)] = [w, b]."""
+    w, b = theta[:-1], theta[-1]
+    z = x @ w + b
+    return jnp.mean(jnp.logaddexp(0.0, -y * z)) + 0.5 * reg * jnp.sum(w * w)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def logistic_erm(x, y, reg: float = 1e-5, iters: int = 25):
+    """Damped-Newton solver for the logistic ERM. Returns theta=(d+1,)."""
+    d = x.shape[1]
+    theta0 = jnp.zeros((d + 1,), jnp.float32)
+
+    grad_fn = jax.grad(_logistic_loss)
+    hess_fn = jax.hessian(_logistic_loss)
+
+    def body(theta, _):
+        g = grad_fn(theta, x, y, reg)
+        h = hess_fn(theta, x, y, reg) + 1e-6 * jnp.eye(d + 1)
+        return theta - jnp.linalg.solve(h, g), None
+
+    theta, _ = jax.lax.scan(body, theta0, None, length=iters)
+    return theta
+
+
+batched_logistic_erm = jax.jit(
+    jax.vmap(logistic_erm, in_axes=(0, 0, None, None)), static_argnums=(3,)
+)
+
+
+# ------------------------------------------------------------------ sgd
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "steps", "batch"))
+def sgd_erm(key, theta0, data, loss_fn: Callable, *, steps: int = 200,
+            batch: int = 8, mu: float = 1.0, radius: float | None = None):
+    """Projected SGD with the Appendix-D step rule eta_t = 1/(mu t).
+
+    loss_fn(theta, batch_data) -> scalar. ``data`` is a pytree whose
+    leaves have leading axis n. Projection onto the ball of ``radius``
+    implements Assumption 2's compact Theta.
+    """
+    n = jax.tree_util.tree_leaves(data)[0].shape[0]
+    grad_fn = jax.grad(loss_fn)
+
+    def body(carry, t):
+        theta, key = carry
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (batch,), 0, n)
+        mb = jax.tree_util.tree_map(lambda a: a[idx], data)
+        g = grad_fn(theta, mb)
+        eta = 1.0 / (mu * (t + 1.0))
+        theta = jax.tree_util.tree_map(lambda p, gg: p - eta * gg, theta, g)
+        if radius is not None:
+            nrm = jnp.sqrt(sum(jnp.sum(l * l) for l in jax.tree_util.tree_leaves(theta)))
+            scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-30))
+            theta = jax.tree_util.tree_map(lambda p: p * scale, theta)
+        return (theta, key), None
+
+    (theta, _), _ = jax.lax.scan(body, (theta0, key), jnp.arange(steps, dtype=jnp.float32))
+    return theta

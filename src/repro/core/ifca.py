@@ -1,0 +1,94 @@
+"""IFCA baseline [Ghosh et al., 2022] — the paper's main comparison.
+
+Iterative Federated Clustering Algorithm (Appendix C description):
+
+  repeat T rounds:
+    1. server broadcasts K models {theta_k^t}
+    2. each user picks the model with the smallest local loss
+    3. gradient averaging: users send grad f_i(theta_(i)) and the server
+       does theta_k <- theta_k - alpha * mean_{i in C_k^t} g_i
+       (or model averaging: tau local steps then cluster-average)
+
+Needs knowledge of K and — per the paper's experiments — succeeds only
+with sufficiently close initialization (IFCA-1/IFCA-2/IFCA-R variants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class IFCAConfig:
+    k: int
+    rounds: int = 200
+    step_size: float = 0.1
+    mode: str = "gradient"         # 'gradient' | 'model'
+    local_steps: int = 5           # for mode='model'
+
+
+def ifca_init_near_optima(key, optima, noise_std: float):
+    """IFCA-1/IFCA-2 init: true optima + N(0, std^2) noise (Section 5)."""
+    return optima + noise_std * jax.random.normal(key, optima.shape)
+
+
+def ifca_init_annulus(key, optima, d_min: float, lo_frac: float = 0.2,
+                      hi_frac: float = 1.0 / 3.0):
+    """Appendix E.4 init: random point with D/5 <= ||.|| - opt <= D/3."""
+    k, d = optima.shape
+    k1, k2 = jax.random.split(key)
+    dirs = jax.random.normal(k1, (k, d))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=1, keepdims=True)
+    radii = jax.random.uniform(k2, (k, 1), minval=lo_frac * d_min,
+                               maxval=hi_frac * d_min)
+    return optima + dirs * radii
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "grad_fn", "cfg"))
+def ifca(theta0, xs, ys, loss_fn: Callable, grad_fn: Callable, cfg: IFCAConfig):
+    """Run IFCA.
+
+    theta0: (K, d) initial models.  xs: (m, n, ...), ys: (m, n).
+    loss_fn(theta, x, y) -> scalar;  grad_fn(theta, x, y) -> (d,).
+    Returns (theta_T (K,d), labels (m,), history (T, K, d)).
+    """
+    m = xs.shape[0]
+
+    def losses_for(theta):
+        # (m, K) local losses of every model at every user
+        per_user = jax.vmap(lambda x, y: jax.vmap(
+            lambda t: loss_fn(t, x, y))(theta))(xs, ys)
+        return per_user
+
+    def round_fn(theta, _):
+        per_user = losses_for(theta)                        # (m, K)
+        assign = jnp.argmin(per_user, axis=1)               # (m,)
+        onehot = jax.nn.one_hot(assign, cfg.k, dtype=jnp.float32)  # (m, K)
+        if cfg.mode == "gradient":
+            grads = jax.vmap(
+                lambda x, y, a: grad_fn(theta[a], x, y)
+            )(xs, ys, assign)                               # (m, d)
+            gsum = onehot.T @ grads                         # (K, d)
+            cnt = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)[:, None]
+            theta = theta - cfg.step_size * gsum / cnt
+        else:  # model averaging with tau local GD steps
+            def local(theta_i, x, y):
+                def step(t, _):
+                    return t - cfg.step_size * grad_fn(t, x, y), None
+                t, _ = jax.lax.scan(step, theta_i, None, length=cfg.local_steps)
+                return t
+            locals_ = jax.vmap(lambda x, y, a: local(theta[a], x, y))(xs, ys, assign)
+            msum = onehot.T @ locals_
+            cnt = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)[:, None]
+            avg = msum / cnt
+            hit = (jnp.sum(onehot, axis=0) > 0)[:, None]
+            theta = jnp.where(hit, avg, theta)
+        return theta, theta
+
+    theta, hist = jax.lax.scan(round_fn, theta0, None, length=cfg.rounds)
+    final_assign = jnp.argmin(losses_for(theta), axis=1)
+    return theta, final_assign, hist

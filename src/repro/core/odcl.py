@@ -1,0 +1,103 @@
+"""Algorithm 1: the ODCL-C one-shot protocol.
+
+    1. every user solves its local ERM and uploads theta_hat_i  (1 round)
+    2. the server clusters {theta_hat_i} with an admissible algorithm
+    3. the server averages models within each recovered cluster
+    4. each user receives its cluster's averaged model
+
+``odcl`` operates on an (m, d) stack of model vectors — the exact
+paper algorithm (used by the paper-scale experiments and benchmarks).
+The multi-pod deep-learning integration lives in ``federated.py`` and
+reuses this module's server step on sketched parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import (
+    kmeans,
+    gradient_clustering,
+    convex_clustering,
+    clusterpath,
+    lambda_interval,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ODCLConfig:
+    """Server-side configuration of Algorithm 1's step 2."""
+    algo: Literal["kmeans", "kmeans++", "spectral", "convex", "clusterpath",
+                  "gradient"] = "kmeans++"
+    k: Optional[int] = None          # required by kmeans/gradient variants
+    lam: Optional[float] = None      # required by 'convex'; None -> interval mid
+    kmeans_iters: int = 100
+    cc_iters: int = 400
+    n_lambdas: int = 10              # clusterpath sweep size
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ODCLResult:
+    labels: np.ndarray               # (m,) recovered cluster of each user
+    cluster_models: np.ndarray       # (K', d) averaged model per cluster
+    user_models: np.ndarray          # (m, d) model each user receives
+    n_clusters: int
+    meta: dict
+
+
+def cluster_models(local_models, cfg: ODCLConfig):
+    """Step 2 — run the chosen admissible clustering algorithm."""
+    pts = jnp.asarray(local_models, jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+    if cfg.algo in ("kmeans", "kmeans++", "spectral"):
+        assert cfg.k is not None, f"{cfg.algo} requires k"
+        init = {"kmeans": "random", "kmeans++": "kmeans++", "spectral": "spectral"}[cfg.algo]
+        res = kmeans(key, pts, cfg.k, iters=cfg.kmeans_iters, init=init)
+        return np.asarray(res.labels), {"inertia": float(res.inertia),
+                                        "n_iter": int(res.n_iter)}
+    if cfg.algo == "gradient":
+        assert cfg.k is not None, "gradient clustering requires k"
+        res = gradient_clustering(key, pts, cfg.k, iters=cfg.kmeans_iters)
+        return np.asarray(res.labels), {"inertia": float(res.inertia)}
+    if cfg.algo == "convex":
+        lam = cfg.lam
+        if lam is None:
+            # paper E.1 heuristic: take the upper recovery bound of the
+            # all-singletons clustering as a starting penalty
+            lo, hi = lambda_interval(np.asarray(pts), np.arange(pts.shape[0]))
+            lam = hi if np.isfinite(hi) else lo + 1e-3
+        res = convex_clustering(pts, float(lam), iters=cfg.cc_iters)
+        return res.labels, {"lam": res.lam, "n_clusters": res.n_clusters}
+    if cfg.algo == "clusterpath":
+        best, _ = clusterpath(pts, n_lambdas=cfg.n_lambdas, iters=cfg.cc_iters)
+        return best.labels, {"lam": best.lam, "n_clusters": best.n_clusters}
+    raise ValueError(f"unknown clustering algo {cfg.algo!r}")
+
+
+def aggregate(local_models, labels):
+    """Steps 3-4 — cluster-wise averaging + per-user model assignment."""
+    local_models = np.asarray(local_models, np.float32)
+    labels = np.asarray(labels)
+    n_clusters = int(labels.max()) + 1
+    cluster_avg = np.stack([
+        local_models[labels == c].mean(axis=0) for c in range(n_clusters)
+    ])
+    return cluster_avg, cluster_avg[labels]
+
+
+def odcl(local_models, cfg: ODCLConfig) -> ODCLResult:
+    """Run the full server side of Algorithm 1 on an (m, d) model stack."""
+    labels, meta = cluster_models(local_models, cfg)
+    cluster_avg, user_models = aggregate(local_models, labels)
+    return ODCLResult(
+        labels=labels,
+        cluster_models=cluster_avg,
+        user_models=user_models,
+        n_clusters=cluster_avg.shape[0],
+        meta=meta,
+    )

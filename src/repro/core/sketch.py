@@ -1,0 +1,63 @@
+"""Model-vector sketching for server-side clustering at scale.
+
+The paper clusters raw model vectors theta_hat_i in R^d.  For the
+assigned architectures d is 1e8..3e11, so the server clusters a
+Johnson-Lindenstrauss random projection  S theta in R^s  instead
+(DESIGN.md §3.3): JL preserves all pairwise distances to (1±eps) with
+s = O(log m / eps^2), which preserves the separability condition (4)
+with margin alpha' = alpha * (1-eps)/(1+eps).
+
+The projection is computed *shard-locally*: each device projects its
+parameter shard with the matching slice of S (regenerated from the seed
+and the global offset, never materialized whole) and the per-device
+partial sketches are psum'd.  Communication: s floats per client.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_to_vector
+
+
+def _sketch_block(key, block, sketch_dim: int, offset: int):
+    """Project a flat block (n,) with a fresh N(0, 1/s) matrix slice."""
+    sub = jax.random.fold_in(key, offset)
+    s = jax.random.normal(sub, (block.shape[0], sketch_dim), jnp.float32)
+    return block.astype(jnp.float32) @ s / jnp.sqrt(jnp.float32(sketch_dim))
+
+
+@functools.partial(jax.jit, static_argnames=("sketch_dim", "block"))
+def sketch_vector(key, vec, sketch_dim: int = 256, block: int = 1 << 16):
+    """Sketch a flat vector in fixed-size blocks (bounds peak memory).
+
+    Equivalent to vec @ S with S ~ N(0, 1/s), S generated blockwise.
+    """
+    n = vec.shape[0]
+    nb = (n + block - 1) // block
+    pad = nb * block - n
+    v = jnp.pad(vec, (0, pad)).reshape(nb, block)
+
+    def body(acc, i):
+        acc = acc + _sketch_block(key, v[i], sketch_dim, i)
+        return acc, None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((sketch_dim,), jnp.float32),
+                          jnp.arange(nb))
+    return acc
+
+
+def sketch_tree(key, params, sketch_dim: int = 256, *,
+                leaf_filter=None) -> jnp.ndarray:
+    """Sketch a parameter pytree. ``leaf_filter(path, leaf) -> bool``
+    selects which leaves participate (used for the router-invariant MoE
+    sketch, DESIGN.md §4)."""
+    if leaf_filter is not None:
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        leaves = [l for p, l in flat if leaf_filter(p, l)]
+        vec = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    else:
+        vec = tree_to_vector(params)
+    return sketch_vector(key, vec, sketch_dim)

@@ -1,0 +1,16 @@
+from repro.data.synthetic import (
+    make_linear_regression_federation,
+    make_logistic_federation,
+    make_mnist_like_federation,
+    paper_synthetic_optima,
+)
+from repro.data.lm_data import ClusteredTokenStream, make_lm_batch_iterator
+
+__all__ = [
+    "make_linear_regression_federation",
+    "make_logistic_federation",
+    "make_mnist_like_federation",
+    "paper_synthetic_optima",
+    "ClusteredTokenStream",
+    "make_lm_batch_iterator",
+]

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the ODCL hot spots + a block-attention kernel.
+
+Layout (per the repo convention):
+  <name>.py  — pl.pallas_call + BlockSpec kernel
+  ops.py     — jit'd public wrappers (TPU: pallas, CPU: ref fallback)
+  ref.py     — pure-jnp oracles, the correctness ground truth
+"""

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: block (flash) attention with online softmax.
+
+Used by the serving path for 32k prefill and the sliding-window 500k
+configs: attention is computed in (bq, bk) logit tiles that never leave
+VMEM, with the streaming max/denominator recurrence, so the full
+(sq, skv) score matrix is never materialized in HBM.
+
+  grid = (batch*heads, sq/bq, skv/bk)   (kv axis innermost, sequential)
+  Q tile: (bq, dh)   K/V tiles: (bk, dh)   O tile: (bq, dh) + (bq,) stats
+
+GQA is handled by the wrapper (head replication), causal and
+sliding-window masks are applied per tile with absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal,
+                  window, sq, skv, bq, bk):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                            # (bq, bk)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (skv - sq)
+    kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < skv  # guard kv padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]                                    # (bq,)
+    l_prev = l_ref[0]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows would give exp(NEG_INF - NEG_INF) = 1; zero them
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    o_ref[0] = o_ref[0] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret")
+)
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int | None = None,
+                           bq: int = 128, bk: int = 128, interpret: bool = False):
+    """q (b,h,sq,dh), k/v (b,hkv,skv,dh) -> (b,h,sq,dh)."""
+    b, h, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / (dh ** 0.5)
+    bq = min(bq, _rup(sq, 8))
+    bk = min(bk, _rup(skv, 128))
+    sqp, skvp = _rup(sq, bq), _rup(skv, bk)
+    g = b * h
+    qf = jnp.pad(q.reshape(g, sq, dh), ((0, 0), (0, sqp - sq), (0, 0)))
+    kf = jnp.pad(k.reshape(g, skv, dh), ((0, 0), (0, skvp - skv), (0, 0)))
+    vf = jnp.pad(v.reshape(g, skv, dh), ((0, 0), (0, skvp - skv), (0, 0)))
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        sq=sq, skv=skv, bq=bq, bk=bk,
+    )
+    out, _, _ = pl.pallas_call(
+        kern,
+        grid=(g, sqp // bq, skvp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda gi, i, j: (gi, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda gi, i, j: (gi, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda gi, i, j: (gi, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dh), lambda gi, i, j: (gi, i, 0)),
+            pl.BlockSpec((1, bq), lambda gi, i, j: (gi, i)),
+            pl.BlockSpec((1, bq), lambda gi, i, j: (gi, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, sqp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((g, sqp), jnp.float32),
+            jax.ShapeDtypeStruct((g, sqp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :sq].reshape(b, h, sq, dh).astype(q.dtype)
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

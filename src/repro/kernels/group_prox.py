@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: row-wise L2-ball projection (group prox).
+
+The AMA solver for convex clustering (repro.core.clustering.convex)
+projects every edge's dual variable onto the ball of radius lambda each
+iteration: for E = m(m-1)/2 edges and sketch dim d this is an (E, d)
+row-normalization — memory bound, so we tile rows through VMEM in
+(be, d) blocks and fuse the norm + rescale.
+
+  grid = (E/be,)
+  V tile: (be, d) VMEM    radius tile: (be,)    out: (be, d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _proj_kernel(v_ref, r_ref, o_ref):
+    v = v_ref[...].astype(jnp.float32)                    # (be, d)
+    r = r_ref[...].astype(jnp.float32)                    # (be,)
+    n = jnp.sqrt(jnp.sum(v * v, axis=1))                  # (be,)
+    scale = jnp.where(n > r, r / jnp.maximum(n, 1e-30), 1.0)
+    o_ref[...] = v * scale[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("be", "interpret"))
+def group_ball_proj_pallas(v, radius, *, be: int = 512, interpret: bool = False):
+    e, d = v.shape
+    radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (e,))
+    be = min(be, _rup(e, 8))
+    ep = _rup(e, be)
+    vp = jnp.pad(v, ((0, ep - e), (0, 0)))
+    rp = jnp.pad(radius, (0, ep - e), constant_values=1.0)
+    out = pl.pallas_call(
+        _proj_kernel,
+        grid=(ep // be,),
+        in_specs=[
+            pl.BlockSpec((be, d), lambda i: (i, 0)),
+            pl.BlockSpec((be,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((be, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ep, d), jnp.float32),
+        interpret=interpret,
+    )(vp, rp)
+    return out[:e]
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

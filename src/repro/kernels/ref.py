@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth the Pallas kernels are
+validated against (tests sweep shapes/dtypes and assert_allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distances between rows of a (m,d) and b (k,d).
+
+    Uses the expansion ||x-y||^2 = ||x||^2 + ||y||^2 - 2<x,y> (one matmul),
+    clamped at zero against rounding.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)          # (m, 1)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True).T        # (1, k)
+    d2 = a2 + b2 - 2.0 * (a @ b.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def kmeans_assign(points: jnp.ndarray, centers: jnp.ndarray):
+    """Fused assignment + accumulation step of Lloyd's algorithm.
+
+    Returns (labels (m,), sums (k,d), counts (k,)) where sums/counts are
+    the per-cluster sums and cardinalities of the assigned points.
+    """
+    d2 = pairwise_sqdist(points, centers)
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    k = centers.shape[0]
+    onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)
+    sums = onehot.T @ points.astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    return labels, sums, counts
+
+
+def group_ball_proj(v: jnp.ndarray, radius) -> jnp.ndarray:
+    """Row-wise projection of v (e,d) onto the L2 ball of ``radius``.
+
+    This is the dual update of the AMA solver for convex clustering.
+    ``radius`` may be scalar or per-row (e,).
+    """
+    v = v.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(v * v, axis=1, keepdims=True))
+    radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (v.shape[0],))[:, None]
+    scale = jnp.where(norms > radius, radius / jnp.maximum(norms, 1e-30), 1.0)
+    return v * scale
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None):
+    """Reference attention: q (b,h,sq,dh), k/v (b,hkv,skv,dh) with GQA.
+
+    ``window`` limits attention to the trailing ``window`` positions
+    (sliding-window / sub-quadratic serving mode). Positions are aligned
+    so that query i attends to kv positions <= i + (skv - sq).
+    """
+    b, h, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos <= qpos if causal else jnp.ones((sq, skv), bool)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any other import (jax locks device count on first init).
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+_DOC = """
+
+For each combination this proves, without hardware:
+  * the sharding config is coherent (no mismatched specs, no unsupported
+    collectives) — .lower().compile() would fail otherwise;
+  * the memory footprint fits (memory_analysis bytes per device);
+  * and it extracts cost_analysis + HLO collective schedule for the
+    §Roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --json out.json
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import inputs as inp
+from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models import transformer as tr
+from repro.roofline import roofline_terms
+from repro.sharding import (
+    ShardingRules,
+    batch_spec,
+    cache_specs,
+    opt_state_specs,
+    param_specs,
+)
+from repro.sharding.activations import activation_sharding
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# FSDP is a training-memory trade (per-step weight all-gathers).  At
+# serve time we replicate weights across the data axes whenever the
+# model-parallel shard fits comfortably in HBM — otherwise every decoded
+# token would pay the full FSDP gather tax.
+SERVE_FSDP_THRESHOLD_BYTES = 10 * 2 ** 30
+
+
+def make_rules(cfg, mesh, kind: str) -> ShardingRules:
+    import numpy as _np
+
+    from repro.utils import tree_size
+
+    data_axes = data_axes_of(mesh)
+    if kind == "train":
+        return ShardingRules(data_axes=data_axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes.get("model", 1)
+    n_params = tree_size(tr.abstract_params(cfg))
+    bytes_per_dev = n_params * _np.dtype(cfg.dtype).itemsize / msize
+    return ShardingRules(data_axes=data_axes,
+                         fsdp=bytes_per_dev > SERVE_FSDP_THRESHOLD_BYTES)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              mesh=None, step_kind: str | None = None, donate: bool = True,
+              remat: str = "full", cfg_override=None, unroll: bool = False,
+              layout: str = "tp_fsdp"):
+    """Lower + compile one combination. Returns (compiled, info dict).
+
+    layout:
+      tp_fsdp    — baseline: tensor parallel over 'model', FSDP+batch
+                   over the data axes.
+      pure_fsdp  — ZeRO-3 style: NO tensor parallelism; both mesh axes
+                   act as data axes (batch + parameter sharding).
+      odcl_local — the paper-faithful local phase: client axis on
+                   'data', per-client parameter replicas (stacked
+                   leading dim), zero cross-client collectives.
+    """
+    cfg = cfg_override or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = inp.shape_supported(cfg, shape)
+    if not ok:
+        return None, {"arch": arch, "shape": shape_name, "status": "SKIP",
+                      "reason": reason}
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = step_kind or shape.kind
+    if layout == "pure_fsdp":
+        rules = ShardingRules(data_axes=tuple(mesh.axis_names),
+                              model_axis=None, fsdp=True)
+    elif layout == "odcl_local":
+        assert kind == "train", "odcl_local is a training layout"
+        rules = ShardingRules(data_axes=(), model_axis="model", fsdp=False,
+                              client_axis="data")
+    elif layout == "odcl_local_fsdp":
+        # beyond-paper: each client runs ZeRO-3 over its own 16-device
+        # column (model axis) instead of tensor parallelism — the only
+        # remaining collectives are intra-client weight all-gathers
+        assert kind == "train", "odcl_local_fsdp is a training layout"
+        rules = ShardingRules(data_axes=("model",), model_axis=None,
+                              fsdp=True, client_axis="data")
+    else:
+        rules = make_rules(cfg, mesh, kind)
+
+    scfg = inp.serve_config(cfg, shape) if shape.kind == "decode" else cfg
+    params_sds = tr.abstract_params(scfg)
+    pspecs = param_specs(scfg, params_sds, rules, mesh)
+    bspec_fn = batch_spec(scfg, rules, mesh)
+
+    t0 = time.time()
+    with mesh, activation_sharding(mesh, rules.data_axes, rules.model_axis):
+        if kind == "train":
+            if layout.startswith("odcl_local"):
+                from repro.launch.steps import make_local_train_step
+
+                step = make_local_train_step(scfg, remat=remat, unroll=unroll)
+                n_clients = dict(zip(mesh.axis_names,
+                                     mesh.devices.shape))["data"]
+                specs = inp.input_specs(scfg, shape)
+                stack = lambda t: jax.tree_util.tree_map(
+                    lambda l: jax.ShapeDtypeStruct(
+                        (n_clients,) + l.shape, l.dtype), t)
+                # split the global batch across clients
+                def split_batch(l):
+                    return jax.ShapeDtypeStruct(
+                        (n_clients, l.shape[0] // n_clients) + l.shape[1:],
+                        l.dtype)
+                specs = {"params": stack(specs["params"]),
+                         "opt_state": stack(specs["opt_state"]),
+                         "batch": jax.tree_util.tree_map(
+                             split_batch, specs["batch"])}
+                pspecs = param_specs(scfg, specs["params"], rules, mesh)
+            else:
+                step = make_train_step(scfg, remat=remat, unroll=unroll)
+                specs = inp.input_specs(scfg, shape)
+            in_shardings = (
+                _named(mesh, pspecs),
+                _named(mesh, opt_state_specs(pspecs)),
+                _named(mesh, jax.tree_util.tree_map(
+                    lambda l: bspec_fn(l), specs["batch"])),
+            )
+            out_shardings = (NamedSharding(mesh, P()), in_shardings[0],
+                             in_shardings[1])
+            jitted = jax.jit(step, in_shardings=in_shardings,
+                             out_shardings=out_shardings,
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(specs["params"], specs["opt_state"],
+                                   specs["batch"])
+        elif kind == "prefill":
+            step = make_prefill_step(scfg, unroll=unroll)
+            specs = inp.input_specs(scfg, shape)
+            in_shardings = (
+                _named(mesh, pspecs),
+                _named(mesh, jax.tree_util.tree_map(
+                    lambda l: bspec_fn(l), specs["batch"])),
+            )
+            jitted = jax.jit(step, in_shardings=in_shardings)
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        else:  # decode
+            step = make_decode_step(scfg, unroll=unroll)
+            cache_sds, tokens_sds = inp.decode_input_specs(cfg, shape)
+            cspecs = cache_specs(scfg, cache_sds, rules, mesh)
+            in_shardings = (
+                _named(mesh, pspecs),
+                _named(mesh, cspecs),
+                NamedSharding(mesh, bspec_fn(tokens_sds)),
+            )
+            out_shardings = (NamedSharding(mesh, P()), in_shardings[1])
+            jitted = jax.jit(step, in_shardings=in_shardings,
+                             out_shardings=out_shardings,
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_sds, cache_sds, tokens_sds)
+
+        compiled = lowered.compile()
+    elapsed = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    chips = mesh.devices.size
+    info = {
+        "arch": arch, "shape": shape_name, "status": "OK",
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": chips, "step": kind,
+        "compile_s": round(elapsed, 1),
+        "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes_per_device": (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)),
+        "flops_per_device": cost.get("flops"),
+        "bytes_per_device": cost.get("bytes accessed"),
+    }
+    report = roofline_terms(
+        arch=arch, shape=shape, mesh_name=info["mesh"], chips=chips,
+        cost=cost, hlo_text=compiled.as_text(), cfg=scfg,
+        params_shape=params_sds, bytes_per_device=info["peak_bytes_per_device"])
+    info["roofline"] = report.row()
+    info["collectives"] = report.collective_detail
+    return compiled, info
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--step", default=None,
+                    help="override step kind (train|prefill|decode)")
+    ap.add_argument("--layout", default="tp_fsdp",
+                    choices=["tp_fsdp", "pure_fsdp", "odcl_local",
+                             "odcl_local_fsdp"])
+    ap.add_argument("--json", default=None, help="append results to this file")
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            combos.append((a, s))
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    results, failed = [], []
+    for arch, shape in combos:
+        try:
+            compiled, info = lower_one(arch, shape, mesh=mesh,
+                                       step_kind=args.step,
+                                       layout=args.layout)
+            del compiled
+        except Exception as e:  # noqa: BLE001 - report and continue
+            info = {"arch": arch, "shape": shape, "status": "FAIL",
+                    "error": f"{type(e).__name__}: {e}"}
+            failed.append(info)
+        results.append(info)
+        status = info["status"]
+        extra = (info.get("reason") or info.get("error")
+                 or f"compile {info.get('compile_s')}s "
+                    f"peak/dev {(info.get('peak_bytes_per_device') or 0)/2**30:.2f}GiB")
+        print(f"[{status:4s}] {arch:22s} {shape:12s} {extra}", flush=True)
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(info) + "\n")
+
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    print(f"\n{n_ok} OK, {n_skip} SKIP, {len(failed)} FAIL "
+          f"on mesh {'2x16x16' if args.multi_pod else '16x16'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation: this is the only thing
+the dry-run feeds to ``jit(...).lower``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import transformer as tr
+
+N_PATCHES = 256          # stub vision patch count per sequence
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def serve_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-dependent serving variant of an arch config.
+
+    decode_32k keeps the FULL 32k KV cache (the assignment's definition);
+    long_500k selects the sliding-window variant for attention archs
+    (cap = serve_window) — recurrent archs carry O(1) state natively.
+    """
+    if shape.name == "decode_32k":
+        return dataclasses.replace(cfg, serve_window=None)
+    return cfg
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-skipped) per the assignment skip rules."""
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        return False, "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k":
+        sub_quadratic = (cfg.block_pattern in ("xlstm", "hybrid")
+                         or cfg.serve_window is not None)
+        if not sub_quadratic:
+            return False, "pure full-attention arch: quadratic at 500k"
+    return True, ""
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        return {"tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        return {"frames": sds((b, s, tr.FRONTEND_DIM), jnp.dtype(cfg.dtype)),
+                "mask": sds((b, s), jnp.bool_),
+                "labels": sds((b, s), jnp.int32)}
+    if cfg.input_mode == "multimodal":
+        return {"tokens": sds((b, s), jnp.int32),
+                "patch_embeds": sds((b, N_PATCHES, tr.PATCH_DIM), jnp.dtype(cfg.dtype)),
+                "patch_positions": sds((b, N_PATCHES), jnp.int32),
+                "labels": sds((b, s), jnp.int32)}
+    raise ValueError(cfg.input_mode)
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    if cfg.input_mode == "embeddings":
+        specs.pop("mask")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape):
+    """(cache_sds, tokens_sds) for one-token decode against a seq_len cache."""
+    scfg = serve_config(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: tr.init_decode_cache(scfg, shape.global_batch, shape.seq_len))
+    tokens = sds((shape.global_batch, 1), jnp.int32)
+    return cache, tokens
+
+
+def abstract_opt_state(params_sds):
+    from repro.optim import adamw_init
+
+    return jax.eval_shape(adamw_init, params_sds)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """The full input bundle for the step matching ``shape.kind``."""
+    params = tr.abstract_params(cfg)
+    if shape.kind == "train":
+        return {"params": params,
+                "opt_state": abstract_opt_state(params),
+                "batch": train_input_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params, "batch": prefill_input_specs(cfg, shape)}
+    cache, tokens = decode_input_specs(cfg, shape)
+    return {"params": params, "cache": cache, "tokens": tokens}

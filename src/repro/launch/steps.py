@@ -1,0 +1,105 @@
+"""Step functions lowered by the dry-run and executed by the drivers.
+
+  * ``make_train_step``   — dp_sync: conventional synchronous data-parallel
+    training (the multi-round-communication baseline the paper compares
+    against; gradients all-reduce over the data axes every step).
+  * ``make_local_train_step`` — odcl_local: the paper-faithful local-ERM
+    phase.  Parameters carry a leading client axis sharded over ``data``;
+    the grad/optimizer update is vmapped per client, so NO cross-client
+    collectives exist in the step (this is the entire communication saving
+    of ODCL, visible in the §Roofline collective term).
+  * ``make_prefill_step`` / ``make_decode_step`` — serving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tr
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    remat: str = "full", unroll: bool = False) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: tr.train_loss(p, cfg, batch, remat=remat,
+                                    unroll=unroll))(params)
+        new_params, new_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return loss, new_params, new_state
+
+    return train_step
+
+
+def make_local_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                          remat: str = "full", unroll: bool = False) -> Callable:
+    """ODCL local phase: per-client params (leading C axis), per-client data
+    (C, b, s).  vmap over clients => gradients never cross the client axis."""
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def one_client(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: tr.train_loss(p, cfg, batch, remat=remat,
+                                    unroll=unroll))(params)
+        new_params, new_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return loss, new_params, new_state
+
+    def local_step(params_c, opt_state_c, batch_c):
+        return jax.vmap(one_client)(params_c, opt_state_c, batch_c)
+
+    return local_step
+
+
+def make_aggregate_step(cfg: ModelConfig, k: int, sketch_dim: int = 256,
+                        kmeans_iters: int = 32) -> Callable:
+    """The one-shot clustered aggregation as ONE jittable SPMD step.
+
+    params_c: per-client parameter stack (C, ...) sharded over the client
+    (data) axis.  The step sketches every client's parameters (local
+    matmuls), clusters the (C, sketch_dim) matrix with K-means++ (tiny,
+    replicated), and replaces every client's parameters with its
+    cluster's mean — a single masked all-reduce over the client axis.
+    This IS the paper's entire communication round.
+    """
+    from repro.core.clustering.kmeans import kmeans
+    from repro.core.sketch import sketch_tree
+
+    def aggregate_step(params_c, key):
+        sketches = jax.vmap(
+            lambda p: sketch_tree(key, p, sketch_dim))(params_c)   # (C, s)
+        res = kmeans(key, sketches, k, iters=kmeans_iters)
+        c = sketches.shape[0]
+        onehot = jax.nn.one_hot(res.labels, k, dtype=jnp.float32)  # (C, K)
+        counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)
+
+        def cluster_avg(leaf):
+            flat = leaf.reshape(c, -1).astype(jnp.float32)
+            means = (onehot.T @ flat) / counts[:, None]
+            back = onehot @ means
+            return back.reshape(leaf.shape).astype(leaf.dtype)
+
+        new_params = jax.tree_util.tree_map(cluster_avg, params_c)
+        return new_params, res.labels
+
+    return aggregate_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = tr.forward(params, cfg, batch, unroll=unroll)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
+    def decode_one(params, cache, tokens):
+        return tr.decode_step(params, cfg, cache, tokens, unroll=unroll)
+
+    return decode_one

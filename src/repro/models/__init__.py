@@ -1,0 +1,19 @@
+from repro.models.transformer import (
+    DecodeCache,
+    abstract_params,
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    train_loss,
+)
+
+__all__ = [
+    "DecodeCache",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_decode_cache",
+    "init_params",
+    "train_loss",
+]

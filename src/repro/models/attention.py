@@ -1,0 +1,203 @@
+"""Attention: GQA projections, chunked (flash-style) kernel, KV caches.
+
+Training/prefill uses a q-chunk x kv-chunk online-softmax scan — the
+pure-jnp analogue of the Pallas ``flash_attention`` kernel (which takes
+over on real TPUs; see ``repro.kernels.ops``) — so the (S, S) score
+matrix never materializes for 32k+ sequences.
+
+Decode uses a ring-buffer KV cache: for sliding-window configs the
+cache holds only ``window`` positions, giving O(window) per-token cost
+(the sub-quadratic path required by ``long_500k``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (b, hkv, C, dh) ring buffer
+    v: jnp.ndarray        # (b, hkv, C, dh)
+    pos: jnp.ndarray      # () int32 — absolute position of next token
+
+
+def rope_transpose(x, positions, theta):
+    """Apply RoPE to (b, h, s, dh) given positions (b, s)."""
+    return rope(x.transpose(0, 2, 1, 3), positions, theta).transpose(0, 2, 1, 3)
+
+
+def qkv_proj(params, x, cfg):
+    """x (b,s,D) -> q (b,h,s,dh), k/v (b,hkv,s,dh)."""
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def out_proj(params, attn_out):
+    """(b,h,s,dh) -> (b,s,D)."""
+    b, h, s, dh = attn_out.shape
+    return attn_out.transpose(0, 2, 1, 3).reshape(b, s, h * dh) @ params["wo"]
+
+
+def _direct_attention(q, k, v, *, causal, window, q_offset):
+    """Small-sequence einsum path. q (b,h,sq,dh), k/v (b,h,skv,dh)."""
+    dh = q.shape[-1]
+    scale = dh ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    sq, skv = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal, window, chunk_q, chunk_kv):
+    """Online-softmax scan over (q-chunk, kv-chunk) tiles."""
+    b, h, s, dh = q.shape
+    scale = dh ** -0.5
+    nq, nkv = s // chunk_q, s // chunk_kv
+    qc = q.reshape(b, h, nq, chunk_q, dh).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, h, nkv, chunk_kv, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nkv, chunk_kv, dh).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        qblk = qblk.astype(jnp.float32)
+
+        def kv_step(carry, kj_kv):
+            o, m, l = carry
+            kj, kblk, vblk = kj_kv
+            sc = jnp.einsum("bhqd,bhkd->bhqk", qblk,
+                            kblk.astype(jnp.float32)) * scale
+            qpos = qi * chunk_q + jnp.arange(chunk_q)[:, None]
+            kpos = kj * chunk_kv + jnp.arange(chunk_kv)[None, :]
+            mask = jnp.ones((chunk_q, chunk_kv), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            sc = jnp.where(mask[None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            o = o * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+            return (o, m_new, l), None
+
+        o0 = jnp.zeros((b, h, chunk_q, dh), jnp.float32)
+        m0 = jnp.full((b, h, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, chunk_q), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0), (jnp.arange(nkv), kc, vc))
+        return None, (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              q_offset=0, chunk: int = 1024):
+    """GQA attention dispatcher. q (b,h,sq,dh), k/v (b,hkv,skv,dh).
+
+    chunk=0 forces the direct einsum path (used by the roofline
+    cost-calibration lowerings, which must avoid inner while loops).
+    """
+    hkv, h = k.shape[1], q.shape[1]
+    if h != hkv:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    sq, skv = q.shape[2], k.shape[2]
+    if chunk > 0 and sq == skv and sq > 2 * chunk and sq % chunk == 0:
+        return _chunked_attention(q, k, v, causal=causal, window=window,
+                                  chunk_q=chunk, chunk_kv=chunk)
+    return _direct_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+
+
+# ----------------------------------------------------------------- caches
+
+def init_kv_cache(batch: int, n_kv_heads: int, capacity: int, head_dim: int,
+                  dtype=jnp.bfloat16, pos: int | jnp.ndarray = 0) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, n_kv_heads, capacity, head_dim), dtype),
+        v=jnp.zeros((batch, n_kv_heads, capacity, head_dim), dtype),
+        pos=jnp.asarray(pos, jnp.int32),
+    )
+
+
+def decode_attention(params, x, cache: KVCache, cfg, *, rope_theta=None):
+    """Single-token decode with a ring-buffer cache.
+
+    x: (b, 1, D). Returns (out (b,1,D), new_cache). The ring buffer keeps
+    ``capacity`` most-recent positions; for sliding-window archs capacity
+    = window, giving O(window) decode for 500k contexts.
+    """
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    capacity = cache.k.shape[2]
+    q, k, v = qkv_proj(params, x, cfg)                 # q (b,h,1,dh)
+    pos = cache.pos
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = rope(q.transpose(0, 2, 1, 3), posv, theta).transpose(0, 2, 1, 3)
+    k = rope(k.transpose(0, 2, 1, 3), posv, theta).transpose(0, 2, 1, 3)
+    slot = jnp.mod(pos, capacity)
+    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                         (0, 0, slot, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                         (0, 0, slot, 0))
+    # attend over valid slots only
+    kpos_abs = _ring_positions(pos, capacity)
+    valid = (kpos_abs <= pos) & (kpos_abs >= 0)
+    if cfg.serve_window is not None:
+        valid &= kpos_abs > pos - cfg.serve_window
+    hkv = cfg.n_kv_heads
+    kk, vv = new_k, new_v
+    if cfg.n_heads != hkv:
+        rep = cfg.n_heads // hkv
+        kk = jnp.repeat(kk, rep, axis=1)
+        vv = jnp.repeat(vv, rep, axis=1)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                    kk.astype(jnp.float32)) * dh ** -0.5
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(x.dtype)
+    return out_proj(params, out), KVCache(k=new_k, v=new_v, pos=pos + 1)
+
+
+def _ring_positions(pos, capacity):
+    """Absolute position stored in each ring slot after writing ``pos``."""
+    slots = jnp.arange(capacity)
+    cur = jnp.mod(pos, capacity)
+    # slots <= cur hold positions pos - (cur - slot); slots > cur hold
+    # positions from the previous wrap: pos - capacity + (slot - cur)
+    return jnp.where(slots <= cur,
+                     pos - (cur - slots),
+                     pos - capacity + (slots - cur))

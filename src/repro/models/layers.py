@@ -1,0 +1,78 @@
+"""Shared neural building blocks (pure JAX, no flax).
+
+Parameters are plain nested dicts of jnp arrays; layer-stacked weights
+carry a leading ``L`` axis and are consumed by ``jax.lax.scan`` in
+``transformer.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embeddings. x: (..., s, h, dh), positions: (..., s)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., s, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin,
+    ], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_forward(params, x, variant: str = "swiglu"):
+    """Gated MLP. params: w_in (D, 2F) [packed gate|up] or (D, F), w_out (F, D)."""
+    from repro.sharding.activations import constrain
+
+    h = x @ params["w_in"]
+    h = constrain(h, *(["batch"] + [None] * (h.ndim - 2) + ["model"]))
+    if variant in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(gate) if variant == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.relu(h)
+    return h @ params["w_out"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, variant: str, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    in_cols = 2 * d_ff if variant in ("swiglu", "geglu") else d_ff
+    return {
+        "w_in": _dense_init(k1, (d_model, in_cols), dtype),
+        "w_out": _dense_init(k2, (d_ff, d_model), dtype),
+    }
+
+
+def _dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean CE over valid positions. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer: top-k router + sort-based per-sequence dispatch.
+
+TPU mapping (DESIGN.md §3): tokens are routed *within each sequence*
+(batch row).  All dispatch steps (argsort by expert id, positioning,
+capacity clipping, scatter/gather) are then batched over the leading
+batch axis, which is sharded over the data mesh axes — so the dispatch
+never communicates across devices and compiled FLOPs match the
+activated-parameter math (the dense (T,E,C) one-hot dispatch einsum
+alternative would dwarf the experts' own FLOPs).
+
+Expert weights: expert axis sharded over ``model`` when divisible
+(DeepSeek/Moonshot: 64 experts / 16-way TP = 4 per device), otherwise
+per-expert hidden dim sharded (Grok: 8 experts, F=32768/16).  Capacity
+limits apply per sequence (capacity_factor over s*k/E tokens).
+
+Supports DeepSeekMoE-style shared experts (always-on dense path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp_forward
+from repro.sharding.activations import constrain
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def moe_forward(params, x, cfg):
+    """x (b, s, D) -> (y (b, s, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (b, s, e)
+    topv, topi = jax.lax.top_k(probs, k)                        # (b, s, k)
+    topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch-style, top-1 counts) ----
+    me = jnp.mean(probs, axis=(0, 1))                           # (e,)
+    rows = jnp.arange(b)[:, None]
+    ce_cnt = jnp.zeros((e,), jnp.float32).at[topi[..., 0].reshape(-1)].add(1.0)
+    ce = ce_cnt / (b * s)
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+
+    # ---- per-sequence sort-based dispatch (GATHER-only: scatters would
+    # materialize (b, e*cap, d)-sized u32 index tensors and defeat SPMD
+    # batch partitioning) ----
+    cap = _round_up(max(1, int(s * k / e * cfg.capacity_factor)), 8)
+    sk = s * k
+    flat_eid = topi.reshape(b, sk)                              # (b, sk)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), k)[None], (b, sk))            # (b, sk)
+    order = jnp.argsort(flat_eid, axis=1)
+    s_eid = jnp.take_along_axis(flat_eid, order, axis=1)
+    s_tok = jnp.take_along_axis(flat_tok, order, axis=1)
+    counts = jnp.sum(
+        (flat_eid[:, :, None] == jnp.arange(e)[None, None]), axis=1,
+        dtype=jnp.int32)                                        # (b, e)
+    starts = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.int32), jnp.cumsum(counts, axis=1)[:, :-1]],
+        axis=1)                                                 # (b, e)
+
+    # expert_in[b, ec] = x[b, s_tok[starts[e] + c]]  masked by c < counts[e]
+    slot = jnp.arange(cap)[None, None]                          # (1, 1, cap)
+    src_sorted = starts[..., None] + slot                       # (b, e, cap)
+    valid = slot < counts[..., None]                            # (b, e, cap)
+    src_sorted = jnp.clip(src_sorted, 0, sk - 1).reshape(b, e * cap)
+    tok_idx = jnp.take_along_axis(s_tok, src_sorted, axis=1)    # (b, e*cap)
+    expert_in = jnp.take_along_axis(x, tok_idx[..., None], axis=1)
+    expert_in = expert_in * valid.reshape(b, e * cap)[..., None].astype(x.dtype)
+    expert_in = expert_in.reshape(b, e, cap, d)
+    expert_in = constrain(expert_in, "batch", "experts", None, None)
+
+    # ---- expert FFN (batched over experts) ----
+    h = jnp.einsum("becd,edf->becf", expert_in, params["w_in"])
+    h = constrain(h, "batch", "experts", None, "model")
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    expert_out = jnp.einsum("becf,efd->becd", h, params["w_out"])
+    expert_out = constrain(expert_out, "batch", "experts", None, None)
+    flat_out = expert_out.reshape(b, e * cap, d)
+
+    # ---- combine: each token gathers its k expert outputs ----
+    inv_order = jnp.argsort(order, axis=1)                      # (b, sk)
+    pos_sorted = jnp.arange(sk)[None] - jnp.take_along_axis(starts, s_eid, axis=1)
+    kept_sorted = pos_sorted < cap
+    dest_sorted = jnp.clip(s_eid * cap + pos_sorted, 0, e * cap - 1)
+    dest_flat = jnp.take_along_axis(dest_sorted, inv_order, axis=1)   # (b, sk)
+    kept_flat = jnp.take_along_axis(kept_sorted, inv_order, axis=1)
+    back = jnp.take_along_axis(flat_out, dest_flat[..., None], axis=1)
+    back = back * kept_flat[..., None].astype(back.dtype)       # (b, sk, d)
+    w = topv.reshape(b, sk)[..., None].astype(back.dtype)
+    y = jnp.sum((back * w).reshape(b, s, k, d), axis=2)
+
+    # ---- shared experts (always-on dense path) ----
+    if cfg.n_shared_experts > 0:
+        y = y + mlp_forward(params["shared"], x, "swiglu")
+
+    return y, aux
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    params = {
+        "router": (jax.random.normal(k1, (d, e), jnp.float32) * d ** -0.5
+                   ).astype(jnp.float32),
+        "w_in": (jax.random.normal(k2, (e, d, 2 * f), jnp.float32) * d ** -0.5
+                 ).astype(dtype),
+        "w_out": (jax.random.normal(k3, (e, f, d), jnp.float32) * f ** -0.5
+                  ).astype(dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        fs = cfg.n_shared_experts * f
+        params["shared"] = {
+            "w_in": (jax.random.normal(k4, (d, 2 * fs), jnp.float32) * d ** -0.5
+                     ).astype(dtype),
+            "w_out": (jax.random.normal(k5, (fs, d), jnp.float32) * fs ** -0.5
+                      ).astype(dtype),
+        }
+    return params

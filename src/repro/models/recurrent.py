@@ -1,0 +1,253 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and Mamba-style selective SSM.
+
+TPU adaptation notes (DESIGN.md §3):
+
+* **mLSTM** is implemented in the *chunkwise-parallel* form rather than a
+  per-token scan: within a chunk of W tokens the matrix-memory recurrence
+  collapses to a decay-masked attention (one MXU matmul pair), and only
+  the inter-chunk (C, n) carry is sequential (S/W scan steps).  This
+  bounds scan residuals to O(S/W) instead of O(S) matrix memories and is
+  the standard TPU/GPU kernelization of xLSTM.
+* **Selective SSM** uses ``jax.lax.associative_scan`` over time — the
+  log-depth formulation suits TPU's preference for wide parallel ops
+  over long sequential loops.
+* **sLSTM** is an elementwise recurrence (cheap carry) via ``lax.scan``.
+
+Decode paths carry O(1) state per layer: mLSTM (C, n), sLSTM (c, n),
+SSM (h, conv window) — this is what makes ``long_500k`` native for these
+architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ===================================================================== mLSTM
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # (b, h, dh, dh) matrix memory
+    n: jnp.ndarray   # (b, h, dh) normalizer
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, chunk: int = 256,
+                    state: MLSTMState | None = None):
+    """Chunkwise-parallel mLSTM.
+
+    q/k/v: (b, h, s, dh); i_gate/f_gate: (b, h, s) pre-activations.
+    Returns (out (b,h,s,dh), final MLSTMState).
+    """
+    b, h, s, dh = q.shape
+    w = min(chunk, s)
+    assert s % w == 0, f"seq {s} not divisible by chunk {w}"
+    nc = s // w
+    scale = dh ** -0.5
+
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))       # (b,h,s)
+    logi = i_gate.astype(jnp.float32)                           # log-space input gate
+
+    def to_chunks(x):
+        return x.reshape(b, h, nc, w, *x.shape[3:]).transpose(2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    qc, kc, vc = to_chunks(q * scale), to_chunks(k), to_chunks(v)
+    lfc, lic = to_chunks(logf), to_chunks(logi)                 # (nc,b,h,w)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+    else:
+        c0, n0 = state.c.astype(jnp.float32), state.n.astype(jnp.float32)
+
+    def chunk_step(carry, inp):
+        c_prev, n_prev = carry
+        qb, kb, vb, lf, li = inp                                 # (b,h,w,...)
+        qb = qb.astype(jnp.float32); kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        csum = jnp.cumsum(lf, axis=-1)                           # log prod f_1..t
+        total = csum[..., -1]                                    # (b,h)
+        # intra-chunk decay: d[t,s] = exp(csum_t - csum_s + li_s), s <= t
+        dmat = csum[..., :, None] - csum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((w, w), bool))
+        dmat = jnp.where(tri[None, None], dmat, -jnp.inf)
+        dexp = jnp.exp(jnp.minimum(dmat, 30.0))                  # (b,h,w,w)
+        attn = jnp.einsum("bhtd,bhsd->bhts", qb, kb) * dexp
+        num_intra = jnp.einsum("bhts,bhsd->bhtd", attn, vb)
+        den_intra = jnp.sum(attn, axis=-1)                       # (b,h,t)
+        # inter-chunk: decay from chunk start to t = exp(csum_t)
+        dstart = jnp.exp(jnp.minimum(csum, 30.0))                # (b,h,w)
+        num_inter = jnp.einsum("bhtd,bhde->bhte", qb, c_prev) * dstart[..., None]
+        den_inter = jnp.einsum("bhtd,bhd->bht", qb, n_prev) * dstart
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+        out = (num_intra + num_inter) / den[..., None]
+        # carry update: C_new = e^{total} C + sum_s e^{csum_w - csum_s + li_s} k_s v_s^T
+        wdecay = jnp.exp(jnp.minimum(total[..., None] - csum + li, 30.0))  # (b,h,w)
+        kw = kb * wdecay[..., None]
+        c_new = jnp.exp(jnp.minimum(total, 30.0))[..., None, None] * c_prev + \
+            jnp.einsum("bhsd,bhse->bhde", kw, vb)
+        n_new = jnp.exp(jnp.minimum(total, 30.0))[..., None] * n_prev + \
+            jnp.sum(kw, axis=2)
+        return (c_new, n_new), out
+
+    (c_f, n_f), outs = jax.lax.scan(chunk_step, (c0, n0), (qc, kc, vc, lfc, lic))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+    return out, MLSTMState(c=c_f, n=n_f)
+
+
+def mlstm_decode_step(q, k, v, i_gate, f_gate, state: MLSTMState):
+    """One-token mLSTM update. q/k/v (b,h,dh); gates (b,h)."""
+    dh = q.shape[-1]
+    qf = q.astype(jnp.float32) * dh ** -0.5
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    f = jnp.exp(jax.nn.log_sigmoid(f_gate.astype(jnp.float32)))[..., None]
+    i = jnp.exp(jnp.minimum(i_gate.astype(jnp.float32), 30.0))[..., None]
+    c = f[..., None] * state.c + (i[..., None] * kf[..., :, None]) * vf[..., None, :]
+    n = f * state.n + i * kf
+    den = jnp.maximum(jnp.abs(jnp.sum(qf * n, axis=-1)), 1.0)
+    out = jnp.einsum("bhd,bhde->bhe", qf, c) / den[..., None]
+    return out, MLSTMState(c=c, n=n)
+
+
+# ===================================================================== sLSTM
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (b, d)
+    n: jnp.ndarray   # (b, d)
+
+
+def slstm_scan(z, i_gate, f_gate, o_gate, state: SLSTMState | None = None):
+    """Elementwise sLSTM over time. All inputs (b, s, d) pre-activations."""
+    b, s, d = z.shape
+    zf = jnp.tanh(z.astype(jnp.float32))
+    lf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    li = jnp.minimum(i_gate.astype(jnp.float32), 30.0)
+    o = jax.nn.sigmoid(o_gate.astype(jnp.float32))
+    if state is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        c0, n0 = state.c.astype(jnp.float32), state.n.astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n = carry
+        zt, lft, lit, ot = inp
+        f = jnp.exp(lft)
+        i = jnp.exp(lit)
+        c = f * c + i * zt
+        n = f * n + i
+        h = ot * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n), h
+
+    (c_f, n_f), hs = jax.lax.scan(
+        step, (c0, n0),
+        (zf.transpose(1, 0, 2), lf.transpose(1, 0, 2),
+         li.transpose(1, 0, 2), o.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), SLSTMState(c=c_f, n=n_f)
+
+
+def slstm_decode_step(z, i_gate, f_gate, o_gate, state: SLSTMState):
+    """One-token sLSTM update; all inputs (b, d)."""
+    zf = jnp.tanh(z.astype(jnp.float32))
+    f = jnp.exp(jax.nn.log_sigmoid(f_gate.astype(jnp.float32)))
+    i = jnp.exp(jnp.minimum(i_gate.astype(jnp.float32), 30.0))
+    o = jax.nn.sigmoid(o_gate.astype(jnp.float32))
+    c = f * state.c + i * zf
+    n = f * state.n + i
+    h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return h, SLSTMState(c=c, n=n)
+
+
+# ================================================================ selective SSM
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray       # (b, di, n) ssm hidden
+    conv: jnp.ndarray    # (b, cw-1, di) trailing conv window
+
+
+def _ssm_assoc(x, dt, bmat, cmat, a_log, d_skip, *, state_h=None):
+    """Associative-scan selective SSM over the full given length."""
+    b, s, di = x.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))                      # (di, n) negative
+    dtf = jax.nn.softplus(dt.astype(jnp.float32))                # (b, s, di)
+    decay = jnp.exp(dtf[..., None] * a[None, None])              # (b, s, di, n)
+    add = (dtf * x.astype(jnp.float32))[..., None] * bmat[..., None, :].astype(jnp.float32)
+
+    if state_h is not None:
+        # fold the incoming state into the first step's additive term
+        add = add.at[:, 0].add(decay[:, 0] * state_h.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    decays, hs = jax.lax.associative_scan(combine, (decay, add), axis=1)
+    del decays
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32)[None, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), hs[:, -1]                          # final (b, di, n)
+
+
+def ssm_scan(x, dt, bmat, cmat, a_log, d_skip, *, state_h=None,
+             chunk: int = 0):
+    """Selective state-space scan.
+
+    chunk=0: one associative scan over the whole sequence — O(s log s)
+    (di, n)-expanded materializations; used by the roofline FLOP
+    calibration (no inner loops) and short sequences.
+
+    chunk>0: sequential ``lax.scan`` over s/chunk chunks with the
+    associative form inside and a remat'd body, so the live/saved
+    expanded state is bounded by ONE chunk (the TPU-deployable form:
+    the (b, s, di, n) expansion never exists at once).
+    """
+    b, s, di = x.shape
+    if chunk <= 0 or s <= chunk or s % chunk:
+        return _ssm_assoc(x, dt, bmat, cmat, a_log, d_skip, state_h=state_h)
+
+    nc = s // chunk
+    if state_h is None:
+        state_h = jnp.zeros((b, di, bmat.shape[-1]), jnp.float32)
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(h, xs):
+        x_c, dt_c, b_c, c_c = xs
+        y_c, h_new = _ssm_assoc(x_c, dt_c, b_c, c_c, a_log, d_skip,
+                                state_h=h)
+        return h_new, y_c
+
+    h_final, ys = jax.lax.scan(
+        body, state_h,
+        (to_chunks(x), to_chunks(dt), to_chunks(bmat), to_chunks(cmat)))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    return y, h_final
+
+
+def ssm_decode_step(x, dt, bvec, cvec, a_log, d_skip, h):
+    """One-token SSM update. x/dt (b, di); bvec/cvec (b, n); h (b, di, n)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtf = jax.nn.softplus(dt.astype(jnp.float32))
+    decay = jnp.exp(dtf[..., None] * a[None])
+    h = decay * h + (dtf * x.astype(jnp.float32))[..., None] * bvec[:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, cvec.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32)[None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h
+
+
+def causal_conv1d(x, w, *, state=None):
+    """Depthwise causal conv. x (b, s, di), w (cw, di).
+
+    Returns (y (b, s, di), new trailing state (b, cw-1, di)).
+    """
+    b, s, di = x.shape
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((b, cw - 1, di), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                     # (b, s+cw-1, di)
+    y = sum(xp[:, i : i + s] * w[i][None, None] for i in range(cw))
+    new_state = xp[:, s:]                                        # trailing cw-1
+    return y, new_state

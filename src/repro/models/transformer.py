@@ -1,0 +1,557 @@
+"""Composable model assembly for all assigned architecture families.
+
+One parameter pytree schema, one forward, one decode — block types
+(attention / MoE / xLSTM / hybrid attn+SSM) selected by ``ModelConfig``.
+Layer weights are stacked on a leading ``L`` axis and consumed with
+``jax.lax.scan`` so HLO size is O(1) in depth (essential for the 64-layer
+grok dry-run).
+
+Input modes:
+  * tokens      — ordinary decoder (or encoder) LM over token ids
+  * embeddings  — audio carve-out: precomputed frame embeddings (stub
+                  frontend) + masked-frame prediction head
+  * multimodal  — VLM carve-out: token ids + precomputed patch embeddings
+                  scattered at given positions
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec
+from repro.models.layers import (
+    cross_entropy_loss,
+    embed_init,
+    init_mlp,
+    mlp_forward,
+    rms_norm,
+    _dense_init,
+)
+from repro.sharding.activations import constrain
+
+FRONTEND_DIM = 512     # stub audio frame-embedding dim
+PATCH_DIM = 1024       # stub vision patch-embedding dim
+
+
+class DecodeCache(NamedTuple):
+    """Per-layer state stacked on a leading L axis + global position."""
+    layers: Any
+    pos: jnp.ndarray     # () int32
+
+
+# ============================================================== init
+
+def _dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_layer_params(key, cfg: ModelConfig) -> dict:
+    """Parameters of ONE layer (un-stacked)."""
+    dtype = _dtype_of(cfg)
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    keys = iter(jax.random.split(key, 24))
+    p: dict = {}
+    if cfg.block_pattern == "xlstm":
+        inner = 2 * d
+        h = cfg.n_heads
+        p["m"] = {
+            "ln": jnp.zeros((d,), dtype),
+            "w_up": _dense_init(next(keys), (d, 2 * inner), dtype),
+            "w_q": _dense_init(next(keys), (inner, inner), dtype),
+            "w_k": _dense_init(next(keys), (inner, inner), dtype),
+            "w_v": _dense_init(next(keys), (inner, inner), dtype),
+            "w_if": _dense_init(next(keys), (inner, 2 * h), dtype),
+            "b_if": jnp.concatenate([jnp.zeros((h,), dtype),
+                                     jnp.full((h,), 2.0, dtype)]),
+            "w_down": _dense_init(next(keys), (inner, d), dtype),
+        }
+        p["s"] = {
+            "ln": jnp.zeros((d,), dtype),
+            "w_zifo": _dense_init(next(keys), (d, 4 * d), dtype),
+            "b_zifo": jnp.zeros((4 * d,), dtype),
+            "w_out": _dense_init(next(keys), (d, d), dtype),
+        }
+        return p
+
+    # --- attention (shared by dense/moe/hybrid) ---
+    p["ln1"] = jnp.zeros((d,), dtype)
+    p["attn"] = {
+        "wq": _dense_init(next(keys), (d, cfg.n_heads * dh), dtype),
+        "wk": _dense_init(next(keys), (d, cfg.n_kv_heads * dh), dtype),
+        "wv": _dense_init(next(keys), (d, cfg.n_kv_heads * dh), dtype),
+        "wo": _dense_init(next(keys), (cfg.n_heads * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["attn"]["bq"] = jnp.zeros((cfg.n_heads * dh,), dtype)
+        p["attn"]["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), dtype)
+        p["attn"]["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), dtype)
+
+    if cfg.block_pattern == "hybrid":
+        di, n, r = d, cfg.ssm_state, max(16, d // 64)
+        p["ssm"] = {
+            "w_in": _dense_init(next(keys), (d, 2 * di), dtype),
+            "conv_w": _dense_init(next(keys), (cfg.conv_width, di), dtype, scale=0.5),
+            "w_xdb": _dense_init(next(keys), (di, r + 2 * n), dtype),
+            "w_dt": _dense_init(next(keys), (r, di), dtype),
+            "b_dt": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+            "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+            "d_skip": jnp.ones((di,), jnp.float32),
+            "w_out": _dense_init(next(keys), (di, d), dtype),
+        }
+        p["beta_attn"] = jnp.zeros((d,), dtype)
+        p["beta_ssm"] = jnp.zeros((d,), dtype)
+
+    p["ln2"] = jnp.zeros((d,), dtype)
+    if cfg.is_moe:
+        p["moe"] = moe_lib.init_moe(next(keys), cfg, dtype)
+    if cfg.d_ff > 0 and not cfg.is_moe:
+        p["mlp"] = init_mlp(next(keys), d, cfg.d_ff, cfg.mlp_variant, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype_of(cfg)
+    k_embed, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    n_stack = cfg.n_layers // 2 if cfg.block_pattern == "xlstm" else cfg.n_layers
+    layer_keys = jax.random.split(k_layers, n_stack)
+    layers = jax.vmap(lambda k: init_layer_params(k, cfg))(layer_keys)
+    params = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.input_mode == "embeddings":
+        params["frontend_proj"] = _dense_init(k_extra, (FRONTEND_DIM, cfg.d_model), dtype)
+        params["mask_embed"] = jnp.zeros((cfg.d_model,), dtype)
+    elif cfg.input_mode == "multimodal":
+        params["patch_proj"] = _dense_init(k_extra, (PATCH_DIM, cfg.d_model), dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# ============================================================ block fwd
+
+def _rope_qk(q, k, positions, theta):
+    """Apply RoPE; q/k (b, h, s, dh); positions (b, s)."""
+    q = attn_lib.rope_transpose(q, positions, theta)
+    k = attn_lib.rope_transpose(k, positions, theta)
+    return q, k
+
+
+def _attn_block(lp, x, cfg: ModelConfig, positions):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = attn_lib.qkv_proj(lp["attn"], h, cfg)
+    q = constrain(q, "batch", "heads", None, None)
+    k = constrain(k, "batch", "heads", None, None)
+    v = constrain(v, "batch", "heads", None, None)
+    q, k = _rope_qk(q, k, positions, cfg.rope_theta)
+    o = attn_lib.attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                           chunk=cfg.attn_chunk)
+    o = constrain(o, "batch", "heads", None, None)
+    out = constrain(attn_lib.out_proj(lp["attn"], o), "batch", None, None)
+    return out, (k, v)
+
+
+def _ssm_branch(lp, h, cfg: ModelConfig):
+    """Returns (y, (final ssm_h, trailing conv state))."""
+    sp = lp["ssm"]
+    di, n = cfg.d_model, cfg.ssm_state
+    r = sp["w_dt"].shape[0]
+    xz = h @ sp["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = rec.causal_conv1d(xs, sp["conv_w"])
+    xs = jax.nn.silu(xs)
+    xdb = xs @ sp["w_xdb"]
+    dt_r, bmat, cmat = jnp.split(xdb, [r, r + n], axis=-1)
+    dt = dt_r @ sp["w_dt"] + sp["b_dt"]
+    y, final_h = rec.ssm_scan(xs, dt, bmat, cmat, sp["a_log"], sp["d_skip"],
+                              chunk=cfg.ssm_chunk)
+    return (y * jax.nn.silu(z)) @ sp["w_out"], (final_h, conv_state)
+
+
+def _layer_forward(lp, x, cfg: ModelConfig, positions, collect_cache=False):
+    """One (stacked-scan) layer. Returns (x, (aux_loss, cache_parts))."""
+    # residual stream sharded (batch over data, d_model over model): the
+    # scan-saved per-layer residual stack is the dominant training buffer
+    x = constrain(x, "batch", None, "model")
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if cfg.block_pattern == "xlstm":
+        m_out, mstate = _mlstm_block(lp["m"], x, cfg)
+        x = x + m_out
+        s_out, sstate = _slstm_block(lp["s"], x, cfg)
+        x = x + s_out
+        if collect_cache:
+            cache = {"m_c": mstate.c, "m_n": mstate.n,
+                     "s_c": sstate.c, "s_n": sstate.n}
+        return x, (aux, cache)
+    if cfg.block_pattern == "hybrid":
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn_lib.qkv_proj(lp["attn"], h, cfg)
+        q = constrain(q, "batch", "heads", None, None)
+        k = constrain(k, "batch", "heads", None, None)
+        v = constrain(v, "batch", "heads", None, None)
+        q, k = _rope_qk(q, k, positions, cfg.rope_theta)
+        o = attn_lib.attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                               chunk=cfg.attn_chunk)
+        a_out = attn_lib.out_proj(lp["attn"], o)
+        s_out, (ssm_h, conv_state) = _ssm_branch(lp, h, cfg)
+        if collect_cache:
+            cache = {"k": k, "v": v, "ssm_h": ssm_h, "conv": conv_state}
+        x = x + 0.5 * (rms_norm(a_out, lp["beta_attn"], cfg.norm_eps)
+                       + rms_norm(s_out, lp["beta_ssm"], cfg.norm_eps))
+    else:
+        a_out, (k, v) = _attn_block(lp, x, cfg, positions)
+        if collect_cache:
+            cache = {"k": k, "v": v}
+        x = x + a_out
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_lib.moe_forward(lp["moe"], h2, cfg)
+        x = x + y
+    elif cfg.d_ff > 0:
+        x = x + mlp_forward(lp["mlp"], h2, cfg.mlp_variant)
+    return x, (aux, cache)
+
+
+def _mlstm_block(mp, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    inner = mp["w_down"].shape[0]
+    dh = inner // h_heads
+    hx = rms_norm(x, mp["ln"], cfg.norm_eps)
+    up = hx @ mp["w_up"]
+    xm, gate = jnp.split(up, 2, axis=-1)
+    q = (xm @ mp["w_q"]).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+    k = (xm @ mp["w_k"]).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+    v = (xm @ mp["w_v"]).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+    gates = xm @ mp["w_if"] + mp["b_if"]
+    i_g = gates[..., :h_heads].transpose(0, 2, 1)
+    f_g = gates[..., h_heads:].transpose(0, 2, 1)
+    mchunk = s if cfg.mlstm_chunk <= 0 else min(cfg.mlstm_chunk, s)
+    out, mstate = rec.mlstm_chunkwise(q, k, v, i_g, f_g, chunk=mchunk)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, inner).astype(x.dtype)
+    return (out * jax.nn.silu(gate)) @ mp["w_down"], mstate
+
+
+def _slstm_block(sp, x, cfg: ModelConfig):
+    d = x.shape[-1]
+    hx = rms_norm(x, sp["ln"], cfg.norm_eps)
+    zifo = hx @ sp["w_zifo"] + sp["b_zifo"]
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    h, sstate = rec.slstm_scan(z, i, f, o)
+    return h.astype(x.dtype) @ sp["w_out"], sstate
+
+
+# ============================================================== forward
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """Produce the (b, s, D) input sequence for any input mode."""
+    if cfg.input_mode == "tokens":
+        return params["embed"][batch["tokens"]]
+    if cfg.input_mode == "embeddings":
+        x = batch["frames"] @ params["frontend_proj"]
+        if "mask" in batch:
+            x = jnp.where(batch["mask"][..., None], params["mask_embed"], x)
+        return x
+    if cfg.input_mode == "multimodal":
+        x = params["embed"][batch["tokens"]]
+        patches = batch["patch_embeds"] @ params["patch_proj"]
+        b = x.shape[0]
+        x = x.at[jnp.arange(b)[:, None], batch["patch_positions"]].set(
+            patches.astype(x.dtype))
+        return x
+    raise ValueError(cfg.input_mode)
+
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "full",          # save nothing, recompute the whole layer
+    "dots": "dots",          # save matmul outputs (skip recompute of dots)
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, remat: str = "none",
+            unroll: bool = False):
+    """Full-sequence forward. Returns (logits (b,s,V), aux_loss)."""
+    x = embed_inputs(params, cfg, batch)
+    x = constrain(x, "batch", None, "model")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    body = _maybe_remat(
+        lambda carry, lp: _layer_forward(lp, carry, cfg, positions), remat)
+
+    def layer_fn(carry, lp):
+        y, (aux, _) = body(carry, lp)
+        return y, aux
+
+    n_stack = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+    x, auxs = jax.lax.scan(layer_fn, x, params["layers"],
+                           unroll=n_stack if unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, jnp.sum(auxs)
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict, *, remat: str = "none",
+               unroll: bool = False):
+    logits, aux = forward(params, cfg, batch, remat=remat, unroll=unroll)
+    if cfg.input_mode == "embeddings":
+        # masked-frame prediction (encoder-only audio)
+        loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    else:
+        loss = cross_entropy_loss(logits, batch["labels"])
+    return loss + aux
+
+
+def prefill_with_cache(params, cfg: ModelConfig, batch: dict,
+                       capacity: int | None = None):
+    """Forward over the prompt AND build the decode cache in one pass.
+
+    Returns (logits (b,s,V), DecodeCache at pos=s).  ``capacity`` is the
+    ring-buffer size (>= prompt len for full-cache serving; = window for
+    sliding-window serving).
+    """
+    if cfg.serve_window is not None:
+        # serving applies the sliding window during the prompt pass too,
+        # so prefill logits match window-constrained decode exactly
+        cfg = dataclasses.replace(cfg, window=cfg.serve_window)
+    x = embed_inputs(params, cfg, batch)
+    x = constrain(x, "batch", None, "model")
+    b, s, _ = x.shape
+    if capacity is None:
+        capacity = s if cfg.serve_window is None else min(s, cfg.serve_window)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def layer_fn(carry, lp):
+        y, (aux, cache) = _layer_forward(lp, carry, cfg, positions,
+                                         collect_cache=True)
+        return y, (aux, cache)
+
+    x, (auxs, caches) = jax.lax.scan(layer_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(x @ head, "batch", None, "vocab")
+
+    def to_ring(kv):
+        """(L, b, hkv, s, dh) -> ring buffer (L, b, hkv, cap, dh)."""
+        if capacity >= s:
+            pad = capacity - s
+            return jnp.pad(kv, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        last = kv[:, :, :, s - capacity:]
+        return jnp.roll(last, shift=s % capacity, axis=3)
+
+    if cfg.block_pattern == "xlstm":
+        layers = caches
+    else:
+        layers = dict(caches)
+        layers["k"] = to_ring(caches["k"])
+        layers["v"] = to_ring(caches["v"])
+    return logits, DecodeCache(layers=layers, pos=jnp.asarray(s, jnp.int32))
+
+
+# =============================================================== decode
+
+def init_decode_cache(cfg: ModelConfig, batch: int, context: int) -> DecodeCache:
+    """Abstract-friendly cache init (zeros; prefill fills it).
+
+    Capacity is min(context, serve_window) for attention caches; SSM /
+    xLSTM state is O(1).
+    """
+    dtype = _dtype_of(cfg)
+    dh = cfg.resolved_head_dim
+    cap = context if cfg.serve_window is None else min(context, cfg.serve_window)
+    n_stack = cfg.n_layers // 2 if cfg.block_pattern == "xlstm" else cfg.n_layers
+
+    def one_layer(_):
+        if cfg.block_pattern == "xlstm":
+            inner = 2 * cfg.d_model
+            dhm = inner // cfg.n_heads
+            return {
+                "m_c": jnp.zeros((batch, cfg.n_heads, dhm, dhm), jnp.float32),
+                "m_n": jnp.zeros((batch, cfg.n_heads, dhm), jnp.float32),
+                "s_c": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                "s_n": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            }
+        cache = {
+            "k": jnp.zeros((batch, cfg.n_kv_heads, cap, dh), dtype),
+            "v": jnp.zeros((batch, cfg.n_kv_heads, cap, dh), dtype),
+        }
+        if cfg.block_pattern == "hybrid":
+            cache["ssm_h"] = jnp.zeros((batch, cfg.d_model, cfg.ssm_state), jnp.float32)
+            cache["conv"] = jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model), dtype)
+        return cache
+
+    layers = jax.vmap(one_layer)(jnp.arange(n_stack))
+    return DecodeCache(layers=layers, pos=jnp.zeros((), jnp.int32))
+
+
+def _attn_decode(lp, x, kc, vc, pos, cfg: ModelConfig):
+    """One-token attention with ring-buffer cache. x (b,1,D)."""
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    cap = kc.shape[2]
+    q, k, v = attn_lib.qkv_proj(lp, x, cfg)
+    posv = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k = _rope_qk(q, k, posv, cfg.rope_theta)
+    slot = jnp.mod(pos, cap)
+    if cfg.splitk_decode:
+        # split-K serving: the cache LENGTH dim is sharded over the model
+        # axis, so each rank scores its slice of the context and the
+        # softmax/output reductions psum tiny (b,h,1[,dh]) partials.  The
+        # ring write must then be an elementwise select (a dynamic-update
+        # -slice at an unknown shard boundary would force SPMD full
+        # rematerialization of the cache).
+        hit = (jnp.arange(cap) == slot)[None, None, :, None]
+        kc = jnp.where(hit, k.astype(kc.dtype), kc)
+        vc = jnp.where(hit, v.astype(vc.dtype), vc)
+    else:
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, 0, slot, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, 0, slot, 0))
+    kpos = attn_lib._ring_positions(pos, cap)
+    valid = (kpos <= pos) & (kpos >= 0)
+    if cfg.serve_window is not None:
+        valid &= kpos > pos - cfg.serve_window
+    # pin cache reads: anything else makes SPMD all-gather the 32k-entry
+    # cache across model ranks every token
+    q = constrain(q, "batch", "heads", None, None)
+    if cfg.splitk_decode:
+        kc = constrain(kc, "batch", None, "model", None)
+        vc = constrain(vc, "batch", None, "model", None)
+    else:
+        kc = constrain(kc, "batch", "heads", None, None)
+        vc = constrain(vc, "batch", "heads", None, None)
+    # grouped-head GQA einsums read the cache DIRECTLY — a jnp.repeat to
+    # n_heads would materialize an n_heads/hkv-times-larger cache copy
+    # (and under split-K, SPMD then retiles it across ranks)
+    b = x.shape[0]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, rep, dh)
+    sc = jnp.einsum("bgrd,bgcd->bgrc", qg.astype(jnp.float32),
+                    kc.astype(jnp.float32)) * dh ** -0.5
+    sc = jnp.where(valid[None, None, None, :], sc, attn_lib.NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bgrc,bgcd->bgrd", p, vc.astype(jnp.float32))
+    o = o.reshape(b, cfg.n_heads, 1, dh).astype(x.dtype)
+    return constrain(attn_lib.out_proj(lp, o), "batch", None, None), kc, vc
+
+
+def _layer_decode(lp, cache_l, x, pos, cfg: ModelConfig):
+    """Single-token decode through one layer. x (b, 1, D)."""
+    if cfg.block_pattern == "xlstm":
+        return _xlstm_decode(lp, cache_l, x, cfg)
+    new_cache = dict(cache_l)
+    if cfg.block_pattern == "hybrid":
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a_out, kc, vc = _attn_decode(lp["attn"], h, cache_l["k"], cache_l["v"], pos, cfg)
+        s_out, ssm_h, conv = _ssm_decode(lp, h[:, 0], cache_l, cfg)
+        new_cache.update(k=kc, v=vc, ssm_h=ssm_h, conv=conv)
+        x = x + 0.5 * (rms_norm(a_out, lp["beta_attn"], cfg.norm_eps)
+                       + rms_norm(s_out[:, None], lp["beta_ssm"], cfg.norm_eps))
+    else:
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a_out, kc, vc = _attn_decode(lp["attn"], h, cache_l["k"], cache_l["v"], pos, cfg)
+        new_cache.update(k=kc, v=vc)
+        x = x + a_out
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe_lib.moe_forward(lp["moe"], h2, cfg)
+        x = x + y
+    elif cfg.d_ff > 0:
+        x = x + mlp_forward(lp["mlp"], h2, cfg.mlp_variant)
+    return x, new_cache
+
+
+def _ssm_decode(lp, h, cache_l, cfg: ModelConfig):
+    """h (b, D) -> (y (b, D), new ssm_h, new conv state)."""
+    sp = lp["ssm"]
+    n = cfg.ssm_state
+    r = sp["w_dt"].shape[0]
+    xz = h @ sp["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    y1, conv = rec.causal_conv1d(xs[:, None], sp["conv_w"], state=cache_l["conv"])
+    xs = jax.nn.silu(y1[:, 0])
+    xdb = xs @ sp["w_xdb"]
+    dt_r, bvec, cvec = jnp.split(xdb, [r, r + n], axis=-1)
+    dt = dt_r @ sp["w_dt"] + sp["b_dt"]
+    y, hh = rec.ssm_decode_step(xs, dt, bvec, cvec, sp["a_log"], sp["d_skip"],
+                                cache_l["ssm_h"])
+    y = (y * jax.nn.silu(z)) @ sp["w_out"]
+    return y, hh, conv
+
+
+def _xlstm_decode(lp, cache_l, x, cfg: ModelConfig):
+    b = x.shape[0]
+    mp, sp = lp["m"], lp["s"]
+    inner = mp["w_down"].shape[0]
+    hh = cfg.n_heads
+    dh = inner // hh
+    # mLSTM sub-block
+    hx = rms_norm(x, mp["ln"], cfg.norm_eps)[:, 0]               # (b, d)
+    up = hx @ mp["w_up"]
+    xm, gate = jnp.split(up, 2, axis=-1)
+    q = (xm @ mp["w_q"]).reshape(b, hh, dh)
+    k = (xm @ mp["w_k"]).reshape(b, hh, dh)
+    v = (xm @ mp["w_v"]).reshape(b, hh, dh)
+    gates = xm @ mp["w_if"] + mp["b_if"]
+    st = rec.MLSTMState(c=cache_l["m_c"], n=cache_l["m_n"])
+    o, st2 = rec.mlstm_decode_step(q, k, v, gates[:, :hh], gates[:, hh:], st)
+    o = o.reshape(b, inner).astype(x.dtype)
+    x = x + ((o * jax.nn.silu(gate)) @ mp["w_down"])[:, None]
+    # sLSTM sub-block
+    hx = rms_norm(x, sp["ln"], cfg.norm_eps)[:, 0]
+    zifo = hx @ sp["w_zifo"] + sp["b_zifo"]
+    z, i, f, og = jnp.split(zifo, 4, axis=-1)
+    sst = rec.SLSTMState(c=cache_l["s_c"], n=cache_l["s_n"])
+    hs, sst2 = rec.slstm_decode_step(z, i, f, og, sst)
+    x = x + (hs.astype(x.dtype) @ sp["w_out"])[:, None]
+    return x, {"m_c": st2.c, "m_n": st2.n, "s_c": sst2.c, "s_n": sst2.n}
+
+
+def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens,
+                unroll: bool = False):
+    """Decode ONE token. tokens (b, 1) int32. Returns (logits, cache)."""
+    x = params["embed"][tokens]
+    pos = cache.pos
+
+    def layer_fn(carry, scanned):
+        lp, cache_l = scanned
+        y, new_cache_l = _layer_decode(lp, cache_l, carry, pos, cfg)
+        return y, new_cache_l
+
+    n_stack = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+    x, new_layers = jax.lax.scan(layer_fn, x, (params["layers"], cache.layers),
+                                 unroll=n_stack if unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, DecodeCache(layers=new_layers, pos=pos + 1)

@@ -1,0 +1,13 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.sgd import sgd_init, sgd_update
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "sgd_init",
+    "sgd_update",
+    "cosine_schedule",
+    "linear_warmup",
+]

@@ -1,0 +1,38 @@
+"""(Projected) SGD with optional momentum — the Appendix-D local solver."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {"step": jnp.zeros((), jnp.int32)}
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"vel": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(params, grads, state, *, lr: float, momentum: float = 0.0,
+               radius: float | None = None):
+    """One SGD step; optional projection onto ||theta|| <= radius
+    (Assumption 2's compact parameter space)."""
+    step = state["step"] + 1
+    if momentum > 0.0:
+        vel = jax.tree_util.tree_map(
+            lambda v, g: momentum * v + g.astype(jnp.float32),
+            state["vel"], grads)
+        upd_tree = vel
+        new_state = {"vel": vel, "step": step}
+    else:
+        upd_tree = grads
+        new_state = {"step": step}
+    new_p = jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) - lr * u.astype(jnp.float32)).astype(p.dtype),
+        params, upd_tree)
+    if radius is not None:
+        norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                            for l in jax.tree_util.tree_leaves(new_p)))
+        scale = jnp.minimum(1.0, radius / jnp.maximum(norm, 1e-30))
+        new_p = jax.tree_util.tree_map(lambda p: (p * scale).astype(p.dtype), new_p)
+    return new_p, new_state

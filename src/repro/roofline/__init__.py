@@ -1,0 +1,19 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    Hardware,
+    RooflineReport,
+    collective_bytes_from_hlo,
+    model_flops,
+    active_param_count,
+    roofline_terms,
+)
+
+__all__ = [
+    "HW_V5E",
+    "Hardware",
+    "RooflineReport",
+    "collective_bytes_from_hlo",
+    "model_flops",
+    "active_param_count",
+    "roofline_terms",
+]

@@ -1,0 +1,127 @@
+"""Roofline measurement orchestration.
+
+XLA's cost model counts ``while`` bodies ONCE (not x trip count), so a
+scan-over-layers program under-reports FLOPs/bytes by ~L.  We therefore
+derive costs by *linear calibration*: lower UNROLLED variants of the
+same architecture at L in {2, 4} (direct attention, single-chunk mLSTM —
+no inner loops anywhere) and extrapolate
+
+    cost(L) = cost(2) + (L - 2)/2 * (cost(4) - cost(2))
+
+which is exact for any cost linear in depth (per-layer compute +
+depth-independent embedding/head/optimizer work).  Memory-fit numbers
+(peak bytes/device) still come from the REAL full-depth deploy compile
+done by ``dryrun.lower_one``.
+
+Known conventions (documented in EXPERIMENTS.md):
+  * calibration uses direct (materialized) attention, so the HBM bytes
+    term is an upper bound vs a flash/chunked deployment;
+  * per-token sLSTM scans remain while-loops even in calibration; their
+    elementwise FLOPs are negligible vs the projections (<1%).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import inputs as inp
+from repro.models import transformer as tr
+from repro.roofline.analysis import (
+    HW_V5E,
+    RooflineReport,
+    collective_bytes_from_hlo,
+    model_flops,
+)
+
+
+def _cal_config(cfg, n_layers: int, *, direct: bool):
+    """Calibration variant: direct=True removes ALL inner loops (exact
+    FLOP accounting); direct=False keeps the deploy chunked attention
+    (whose one-tile-counted inner loop approximates a flash kernel's
+    near-zero HBM score traffic)."""
+    if direct:
+        return dataclasses.replace(
+            cfg, n_layers=n_layers, attn_chunk=0, mlstm_chunk=0, ssm_chunk=0)
+    return dataclasses.replace(cfg, n_layers=n_layers)
+
+
+def _extract(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    coll_total = float(sum(v for k, v in coll.items() if not k.startswith("_")))
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll_total,
+        "coll_detail": coll,
+    }
+
+
+def _lerp(v2: float, v4: float, L: int) -> float:
+    return v2 + (L - 2) / 2.0 * (v4 - v2)
+
+
+def measure_combo(arch: str, shape_name: str, mesh, *, remat: str = "full",
+                  deploy_info: dict | None = None, lower_one=None,
+                  cfg_override=None, layout: str = "tp_fsdp"):
+    """Calibrated roofline for one (arch, shape) on ``mesh``.
+
+    ``deploy_info`` — optional result of the full-depth dryrun (reused
+    for the memory-fit column to avoid recompiling).
+    Returns (RooflineReport, info dict) or (None, skip info).
+    """
+    if lower_one is None:
+        from repro.launch.dryrun import lower_one as _lo
+        lower_one = _lo
+    cfg = cfg_override or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = inp.shape_supported(cfg, shape)
+    if not ok:
+        return None, {"arch": arch, "shape": shape_name, "status": "SKIP",
+                      "reason": reason}
+
+    cals = {}        # direct-attention cal: exact FLOPs
+    dcals = {}       # deploy (chunked) cal: bytes + collectives
+    for L in (2, 4):
+        ccfg = _cal_config(cfg, L, direct=True)
+        compiled, _ = lower_one(arch, shape_name, mesh=mesh,
+                                cfg_override=ccfg, unroll=True, remat=remat,
+                                layout=layout)
+        cals[L] = _extract(compiled)
+        del compiled
+        dcfg = _cal_config(cfg, L, direct=False)
+        if dcfg == ccfg:
+            dcals[L] = cals[L]      # decode paths have no inner loops
+        else:
+            compiled, _ = lower_one(arch, shape_name, mesh=mesh,
+                                    cfg_override=dcfg, unroll=True,
+                                    remat=remat, layout=layout)
+            dcals[L] = _extract(compiled)
+            del compiled
+
+    L = cfg.n_layers
+    flops = _lerp(cals[2]["flops"], cals[4]["flops"], L)
+    nbytes = _lerp(dcals[2]["bytes"], dcals[4]["bytes"], L)
+    coll = _lerp(dcals[2]["coll"], dcals[4]["coll"], L)
+
+    scfg = inp.serve_config(cfg, shape) if shape.kind == "decode" else cfg
+    params_sds = tr.abstract_params(scfg)
+    chips = mesh.devices.size
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    report = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device_hbm=nbytes,
+        coll_bytes_per_device=coll,
+        collective_detail={"cal_L2": cals[2]["coll_detail"]["_counts"],
+                           "cal_L4": cals[4]["coll_detail"]["_counts"]},
+        model_flops_=model_flops(scfg, shape, params_sds),
+        compute_s=flops / HW_V5E.peak_flops,
+        memory_s=nbytes / HW_V5E.hbm_bw,
+        collective_s=coll / HW_V5E.link_bw,
+        peak_bytes_per_device=(deploy_info or {}).get("peak_bytes_per_device"),
+    )
+    info = {"arch": arch, "shape": shape_name, "status": "OK",
+            "mesh": mesh_name, "roofline": report.row(),
+            "cal": {str(k): {kk: vv for kk, vv in v.items() if kk != "coll_detail"}
+                    for k, v in cals.items()}}
+    return report, info

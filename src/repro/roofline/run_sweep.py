@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any other import (jax locks device count on first init).
+
+# Roofline baseline sweep: calibrated three-term roofline for every
+# (arch x shape) on the single-pod mesh (EXPERIMENTS.md section Roofline).
+
+import argparse
+import json
+import sys
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.measure import measure_combo
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default="roofline_baseline.jsonl")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    failed = 0
+    for arch in archs:
+        for shape in shapes:
+            try:
+                report, info = measure_combo(arch, shape, mesh)
+            except Exception as e:  # noqa: BLE001
+                info = {"arch": arch, "shape": shape, "status": "FAIL",
+                        "error": f"{type(e).__name__}: {e}"}
+                failed += 1
+            if info["status"] == "OK":
+                r = info["roofline"]
+                print(f"[OK  ] {arch:22s} {shape:12s} "
+                      f"compute {r['compute_s']*1e3:8.2f}ms  "
+                      f"memory {r['memory_s']*1e3:8.2f}ms  "
+                      f"coll {r['collective_s']*1e3:8.2f}ms  "
+                      f"-> {r['bottleneck']:10s} useful={r['useful_flop_ratio']:.2f}",
+                      flush=True)
+            else:
+                print(f"[{info['status']:4s}] {arch:22s} {shape:12s} "
+                      f"{info.get('reason') or info.get('error')}", flush=True)
+            with open(args.json, "a") as f:
+                f.write(json.dumps(info) + "\n")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+from repro.sharding.specs import (
+    ShardingRules,
+    param_specs,
+    batch_spec,
+    cache_specs,
+    opt_state_specs,
+)
+
+__all__ = [
+    "ShardingRules",
+    "param_specs",
+    "batch_spec",
+    "cache_specs",
+    "opt_state_specs",
+]

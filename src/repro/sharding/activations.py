@@ -1,0 +1,71 @@
+"""Activation sharding constraints (logical-role based).
+
+Model code calls ``constrain(x, role_0, role_1, ...)`` with one logical
+role per axis: 'batch', 'heads', 'model', 'vocab', 'experts' or None.
+Outside an ``activation_sharding`` context this is a no-op (smoke tests,
+single-device runs); inside (dry-run / production launch) it emits
+``with_sharding_constraint`` with the mesh-resolved PartitionSpec —
+skipping any role whose axis size does not divide the mesh axis, so the
+same model code lowers on every mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationCtx:
+    mesh: object
+    data_axes: tuple        # axes carrying batch (and FSDP)
+    model_axis: Optional[str]
+    sizes: dict
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, data_axes: tuple, model_axis: Optional[str]):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = ActivationCtx(mesh=mesh, data_axes=tuple(data_axes),
+                             model_axis=model_axis, sizes=sizes)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def current_ctx() -> Optional[ActivationCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+def constrain(x, *roles):
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    assert len(roles) == x.ndim, (roles, x.shape)
+    entries = []
+    dsize = 1
+    for a in ctx.data_axes:
+        dsize *= ctx.sizes.get(a, 1)
+    msize = ctx.sizes.get(ctx.model_axis, 1) if ctx.model_axis else 1
+    model_used = False
+    for dim, role in enumerate(roles):
+        if role == "batch" and x.shape[dim] % dsize == 0 and dsize > 1:
+            entries.append(ctx.data_axes if len(ctx.data_axes) > 1
+                           else ctx.data_axes[0])
+        elif role in ("heads", "model", "vocab", "experts") and \
+                ctx.model_axis and not model_used and \
+                x.shape[dim] % msize == 0 and msize > 1:
+            entries.append(ctx.model_axis)
+            model_used = True
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*entries)))

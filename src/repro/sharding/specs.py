@@ -1,0 +1,283 @@
+"""PartitionSpec rule tables for every architecture family.
+
+Strategy (single pod, mesh ("data", "model")):
+
+  * tensor parallelism over ``model``: attention heads / FFN hidden /
+    expert (or expert-hidden) dims;
+  * FSDP over ``data`` (+ ``pod`` when present): the *other* large dim of
+    each weight is sharded over the data axes, so Grok-314B's
+    params+optimizer fit per chip; XLA inserts the per-layer
+    all-gathers (FSDP semantics) automatically;
+  * batch over the data axes (and pod).
+
+For the ODCL one-shot mode (``federated.py``) parameters instead carry a
+leading client axis sharded over ``data`` — clients must NOT share
+parameters — and FSDP moves to the remaining axes.
+
+Rules are *name-based*: each parameter path is matched to a (tp_dim,
+fsdp_dim) pair.  This keeps one table for all ten architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Axis names of the mesh roles (None disables that role)."""
+    data_axes: tuple = ("data",)        # batch / FSDP axes ("pod","data") multi-pod
+    model_axis: Optional[str] = "model"
+    fsdp: bool = True                   # shard params over data axes too
+    client_axis: Optional[str] = None   # ODCL mode: leading client dim
+
+    @property
+    def fsdp_axes(self):
+        return self.data_axes if self.fsdp else ()
+
+
+# (tp_dim, fsdp_dim) per parameter leaf, counted from the END of the
+# shape (negative), ignoring any leading layer-stack axis. None = skip.
+_RULES: list[tuple[str, tuple[Optional[int], Optional[int]]]] = [
+    # attention projections: shard head dim over model, d_model over data
+    ("attn/wq", (-1, -2)),
+    ("attn/wk", (-1, -2)),
+    ("attn/wv", (-1, -2)),
+    ("attn/wo", (-2, -1)),
+    ("attn/bq", (-1, None)),
+    ("attn/bk", (-1, None)),
+    ("attn/bv", (-1, None)),
+    # dense MLP: hidden over model
+    ("mlp/w_in", (-1, -2)),
+    ("mlp/w_out", (-2, -1)),
+    # MoE: router replicated-ish; experts sharded (see param_specs)
+    ("moe/router", (-1, None)),
+    ("moe/shared/w_in", (-1, -2)),
+    ("moe/shared/w_out", (-2, -1)),
+    # xLSTM
+    ("m/w_up", (-1, -2)),
+    ("m/w_q", (-1, -2)),
+    ("m/w_k", (-1, -2)),
+    ("m/w_v", (-1, -2)),
+    ("m/w_if", (None, -2)),
+    ("m/w_down", (-2, -1)),
+    ("s/w_zifo", (-1, -2)),
+    ("s/w_out", (-2, -1)),
+    # hybrid SSM branch: inner dim over model
+    ("ssm/w_in", (-1, -2)),
+    ("ssm/w_xdb", (None, -2)),
+    ("ssm/w_dt", (-1, None)),
+    ("ssm/a_log", (-2, None)),
+    ("ssm/d_skip", (-1, None)),
+    ("ssm/w_out", (-2, -1)),
+    ("ssm/conv_w", (-1, None)),
+    # embeddings / head: vocab over model, d_model over data
+    ("embed", (-2, -1)),
+    ("lm_head", (-1, -2)),
+    ("frontend_proj", (-1, -2)),
+    ("patch_proj", (-1, -2)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+    return "/".join(parts)
+
+
+def _divides(n: int, mesh_axis_size: int) -> bool:
+    return mesh_axis_size > 0 and n % mesh_axis_size == 0
+
+
+def _leaf_spec(path_s, leaf, cfg, rules: ShardingRules, mesh_sizes,
+               stacked: bool):
+    ndim = leaf.ndim
+    entries = [None] * ndim
+    lead = 0
+    if rules.client_axis is not None:
+        entries[0] = rules.client_axis
+        lead += 1
+    if stacked:
+        lead += 1  # layer axis unsharded
+
+    tp_dim = fsdp_dim = None
+    matched = False
+    for pat, (tp, fs) in _RULES:
+        if path_s.endswith(pat):
+            tp_dim, fsdp_dim = tp, fs
+            matched = True
+            break
+
+    # MoE expert tensors: special-case expert sharding
+    if "moe/w_in" in path_s or "moe/w_out" in path_s:
+        # shape (..., E, D, F) or (..., E, F, D)
+        e_size = leaf.shape[-3]
+        m_ax = rules.model_axis
+        msize = mesh_sizes.get(m_ax, 1) if m_ax else 1
+        if _divides(e_size, msize):
+            entries[-3] = m_ax                         # expert parallel
+            fsdp_dim = -2 if path_s.endswith("w_in") else -1
+        else:
+            # hidden-dim tensor parallel inside each expert
+            tp_target = -1 if path_s.endswith("w_in") else -2
+            entries[tp_target] = m_ax
+            fsdp_dim = -2 if path_s.endswith("w_in") else -1
+        entries = _apply_fsdp(entries, leaf, fsdp_dim, rules, mesh_sizes)
+        return P(*entries)
+
+    if not matched:
+        return P(*entries)
+
+    m_ax = rules.model_axis
+    if tp_dim is not None and -tp_dim > ndim:
+        tp_dim = None      # pattern matched a lower-rank leaf (e.g. bias)
+    if fsdp_dim is not None and -fsdp_dim > ndim:
+        fsdp_dim = None
+    if tp_dim is not None and m_ax is not None:
+        msize = mesh_sizes.get(m_ax, 1)
+        if _divides(leaf.shape[tp_dim], msize) and entries[tp_dim] is None:
+            entries[tp_dim] = m_ax
+    alt = tp_dim if (tp_dim is not None and entries[tp_dim] is None) else None
+    entries = _apply_fsdp(entries, leaf, fsdp_dim, rules, mesh_sizes,
+                          alt_dim=alt)
+    return P(*entries)
+
+
+def _apply_fsdp(entries, leaf, fsdp_dim, rules: ShardingRules, mesh_sizes,
+                alt_dim=None):
+    """Shard one dim over the FSDP axes; falls back to ``alt_dim`` and to
+    axis subsets when the preferred dim is not divisible (e.g. hymba's
+    d_model=1600 does not divide 256 but its d_ff=5504 divides 16)."""
+    if fsdp_dim is None or not rules.fsdp_axes:
+        return entries
+    full = tuple(rules.fsdp_axes)
+    candidates = []
+    for ax in (full,) + tuple((a,) for a in full if len(full) > 1):
+        size = 1
+        for a in ax:
+            size *= mesh_sizes.get(a, 1)
+        for dim in (fsdp_dim, alt_dim):
+            if dim is None:
+                continue
+            candidates.append((dim, ax, size))
+    for dim, ax, size in candidates:
+        if size <= 1:
+            continue
+        if entries[dim] is None and leaf.shape[dim] % size == 0:
+            entries[dim] = ax if len(ax) > 1 else ax[0]
+            return entries
+    return entries
+
+
+def param_specs(cfg: ModelConfig, params_shape, rules: ShardingRules, mesh):
+    """PartitionSpec pytree mirroring the parameter pytree.
+
+    ``params_shape`` — pytree of ShapeDtypeStruct (from abstract_params)
+    WITHOUT the client axis; if rules.client_axis is set the specs assume
+    a prepended client dim on every leaf.
+    """
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        s = _path_str(path)
+        stacked = s.startswith("layers")
+        return _leaf_spec(s, leaf, cfg, rules, mesh_sizes, stacked)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_spec(cfg: ModelConfig, rules: ShardingRules, mesh=None):
+    """Input batch sharding: leading (client?, batch) over the data axes.
+
+    The batch dim is left unsharded when it does not divide the data
+    axes (e.g. long_500k's global_batch=1).
+    """
+    data = tuple(rules.data_axes)
+    data_entry = (data if len(data) > 1 else data[0]) if data else None
+    dsize = 1
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for a in data:
+            dsize *= sizes.get(a, 1)
+
+    def spec_for(leaf):
+        ndim = getattr(leaf, "ndim", None)
+        shape = getattr(leaf, "shape", None)
+        if ndim is None:  # backwards compat: an int ndim was passed
+            ndim, shape = leaf, None
+        entries = [None] * ndim
+        idx = 0
+        if rules.client_axis is not None:
+            entries[0] = rules.client_axis
+            idx = 1
+        if data_entry is not None and ndim > idx and (
+                shape is None or dsize <= 1 or shape[idx] % dsize == 0):
+            entries[idx] = data_entry
+        return P(*entries)
+
+    return spec_for
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, rules: ShardingRules, mesh):
+    """Decode-cache sharding: batch over data axes, heads/state over model."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data = tuple(rules.data_axes)
+    data_entry = data if len(data) > 1 else data[0]
+    dsize = 1
+    for a in data:
+        dsize *= mesh_sizes.get(a, 1)
+    msize = mesh_sizes.get(rules.model_axis, 1) if rules.model_axis else 1
+
+    def one(path, leaf):
+        s = _path_str(path)
+        if s.endswith("pos"):
+            return P()
+        entries = [None] * leaf.ndim
+        # leading layer-stack axis then batch
+        bdim = 1 if s.startswith("layers") else 0
+        if leaf.ndim > bdim and leaf.shape[bdim] % dsize == 0:
+            entries[bdim] = data_entry
+        if s.endswith("/k") or s.endswith("/v"):
+            # ring buffers (L, b, hkv, cap, dh).
+            if getattr(cfg, "splitk_decode", False):
+                # split-K serving: shard the LENGTH dim (the write is an
+                # elementwise select, so no dynamic-slice shard issues)
+                if leaf.ndim > bdim + 2 and leaf.shape[bdim + 2] % msize == 0 \
+                        and msize > 1:
+                    entries[bdim + 2] = rules.model_axis
+                return P(*entries)
+            # default: only the heads dim may shard — sharding the
+            # capacity dim would put the per-token dynamic-update-slice
+            # at an unknown shard boundary and SPMD falls back to full
+            # rematerialization (replicate+repartition)
+            if leaf.ndim > bdim + 1 and leaf.shape[bdim + 1] % msize == 0 \
+                    and msize > 1:
+                entries[bdim + 1] = rules.model_axis
+            return P(*entries)
+        # recurrent states are replaced wholesale each step: shard the
+        # first big divisible axis over model
+        for dim in range(bdim + 1, leaf.ndim):
+            if msize > 1 and leaf.shape[dim] % msize == 0 and leaf.shape[dim] >= msize:
+                entries[dim] = rules.model_axis
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def opt_state_specs(param_spec_tree):
+    """AdamW moments mirror the parameter specs; step is replicated."""
+    return {
+        "mu": param_spec_tree,
+        "nu": param_spec_tree,
+        "step": P(),
+    }

@@ -1,0 +1,22 @@
+from repro.utils.tree import (
+    tree_to_vector,
+    vector_to_tree,
+    tree_size,
+    tree_axis_mean,
+    tree_select,
+    tree_l2_norm,
+    tree_cast,
+)
+from repro.utils.prng import key_fold, split_like
+
+__all__ = [
+    "tree_to_vector",
+    "vector_to_tree",
+    "tree_size",
+    "tree_axis_mean",
+    "tree_select",
+    "tree_l2_norm",
+    "tree_cast",
+    "key_fold",
+    "split_like",
+]

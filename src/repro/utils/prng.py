@@ -1,0 +1,18 @@
+"""Tiny PRNG helpers (pure JAX, no flax)."""
+from __future__ import annotations
+
+import jax
+
+
+def key_fold(key, *data: int):
+    """Fold a sequence of ints into a PRNG key (stable derivation)."""
+    for d in data:
+        key = jax.random.fold_in(key, d)
+    return key
+
+
+def split_like(key, tree):
+    """Split a key into one key per leaf of ``tree``, returned as a pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))

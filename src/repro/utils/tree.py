@@ -1,0 +1,57 @@
+"""Pytree <-> flat-vector utilities used by the ODCL aggregation path.
+
+The server side of ODCL operates on model *vectors*: each client's
+parameter pytree is flattened to a single 1-D array (or a sketched
+projection of it).  These helpers are shape-preserving inverses of each
+other and jit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_to_vector(tree) -> jnp.ndarray:
+    """Flatten a pytree of arrays into a single 1-D float32 vector."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def vector_to_tree(vec, tree_like):
+    """Inverse of :func:`tree_to_vector` given a structural template."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    out = []
+    offset = 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.ndim else 1
+        out.append(jnp.reshape(vec[offset : offset + n], l.shape).astype(l.dtype))
+        offset += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_axis_mean(tree, axis: int = 0):
+    """Mean over a leading (stacked) axis of every leaf."""
+    return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=axis), tree)
+
+
+def tree_select(tree, idx: int):
+    """Index every leaf along its leading axis."""
+    return jax.tree_util.tree_map(lambda l: l[idx], tree)
+
+
+def tree_l2_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda l: l.astype(dtype) if jnp.issubdtype(l.dtype, jnp.floating) else l, tree
+    )

@@ -1,0 +1,36 @@
+"""The jittable one-shot aggregation step (launch.steps.make_aggregate_step):
+single-device correctness — cluster recovery + exact cluster means."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_aggregate_step
+from repro.models import init_params
+
+
+def test_aggregate_step_recovers_and_averages():
+    cfg = get_config("qwen2_0_5b").reduced(max_d_model=64, max_vocab=64)
+    base = init_params(jax.random.PRNGKey(0), cfg)
+    # 6 clients in 2 synthetic clusters: cluster B offset by a large delta
+    def offset(p, delta):
+        return jax.tree_util.tree_map(lambda l: l + delta, p)
+
+    clients = [offset(base, 0.01 * i) for i in range(3)] + \
+              [offset(base, 5.0 + 0.01 * i) for i in range(3)]
+    stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *clients)
+
+    step = jax.jit(make_aggregate_step(cfg, k=2, sketch_dim=128))
+    new_params, labels = step(stacked, jax.random.PRNGKey(1))
+    labels = np.asarray(labels)
+    assert set(labels[:3]) != set(labels[3:]) or len(set(labels)) == 2
+    assert len(set(labels[:3])) == 1 and len(set(labels[3:])) == 1
+
+    # every client's new params equal its cluster's mean
+    emb = np.asarray(stacked["embed"], np.float32)
+    new_emb = np.asarray(new_params["embed"], np.float32)
+    for c in set(labels):
+        members = np.where(labels == c)[0]
+        want = emb[members].mean(axis=0)
+        for m in members:
+            np.testing.assert_allclose(new_emb[m], want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,136 @@
+"""Clustering-algorithm correctness: recovery on separable data,
+admissibility constants, lambda-interval logic, clusterpath heuristic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (
+    alpha_convex_clustering,
+    alpha_kmeans,
+    clusterpath,
+    convex_clustering,
+    gradient_clustering,
+    is_separable,
+    kmeans,
+    lambda_interval,
+    separability_alpha,
+    spectral_init,
+)
+
+
+def make_blobs(seed, k=3, per=10, d=5, sep=10.0, noise=0.3):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d))
+    centers *= sep / np.maximum(
+        np.linalg.norm(centers[:, None] - centers[None], axis=-1).max(), 1e-9)
+    # re-scale so that min pairwise distance is >= sep
+    dists = np.linalg.norm(centers[:, None] - centers[None], axis=-1)
+    np.fill_diagonal(dists, np.inf)
+    centers *= sep / dists.min()
+    pts = np.concatenate(
+        [c + noise * rng.normal(size=(per, d)) for c in centers])
+    labels = np.repeat(np.arange(k), per)
+    return pts.astype(np.float32), labels
+
+
+def purity(pred, true):
+    from collections import Counter
+
+    total = 0
+    for c in np.unique(pred):
+        total += Counter(true[pred == c]).most_common(1)[0][1]
+    return total / len(true)
+
+
+@pytest.mark.parametrize("init", ["kmeans++", "spectral", "random"])
+def test_kmeans_recovers_blobs(init):
+    pts, true = make_blobs(0)
+    res = kmeans(jax.random.PRNGKey(0), jnp.asarray(pts), 3, init=init)
+    assert purity(np.asarray(res.labels), true) == 1.0
+    assert int(res.n_iter) <= 20
+
+
+def test_kmeans_inertia_decreases_vs_random_centers():
+    pts, _ = make_blobs(1)
+    res = kmeans(jax.random.PRNGKey(0), jnp.asarray(pts), 3)
+    rand_centers = jnp.asarray(pts[:3]) + 50.0
+    from repro.kernels import ops
+
+    d2 = ops.pairwise_sqdist(jnp.asarray(pts), rand_centers)
+    assert float(res.inertia) < float(jnp.sum(jnp.min(d2, axis=1)))
+
+
+def test_convex_clustering_recovers_with_interval_lambda():
+    pts, true = make_blobs(2, k=3, per=8, sep=20.0, noise=0.2)
+    lo, hi = lambda_interval(pts, true)
+    assert lo < hi, "recovery interval must be non-empty for separated blobs"
+    res = convex_clustering(pts, (lo + hi) / 2, iters=500)
+    assert res.n_clusters == 3
+    assert purity(res.labels, true) == 1.0
+
+
+def test_convex_clustering_lambda_extremes():
+    pts, _ = make_blobs(3, k=2, per=6, sep=15.0)
+    tiny = convex_clustering(pts, 1e-6, iters=200)
+    assert tiny.n_clusters == len(pts)          # all singletons
+    huge = convex_clustering(pts, 1e3, iters=500)
+    assert huge.n_clusters == 1                 # single fused cluster
+
+
+def test_clusterpath_finds_true_k():
+    pts, true = make_blobs(4, k=3, per=8, sep=25.0, noise=0.2)
+    best, sweep = clusterpath(pts, n_lambdas=8, iters=300)
+    assert best.n_clusters == 3
+    assert purity(best.labels, true) == 1.0
+    assert len(sweep) == 8
+
+
+def test_gradient_clustering_recovers_blobs():
+    pts, true = make_blobs(5)
+    res = gradient_clustering(jax.random.PRNGKey(1), jnp.asarray(pts), 3,
+                              iters=150)
+    assert purity(np.asarray(res.labels), true) == 1.0
+
+
+def test_separability_alpha_monotone_in_separation():
+    pts1, t1 = make_blobs(6, sep=5.0)
+    pts2, t2 = make_blobs(6, sep=50.0)
+    assert separability_alpha(pts2, t2) > separability_alpha(pts1, t1)
+
+
+def test_admissibility_constants():
+    # Lemma 1 / Lemma 2 formulas
+    assert alpha_convex_clustering(m=100, c_min=10) == pytest.approx(36.0)
+    assert alpha_kmeans(m=100, c_min=10, c=1.0) == pytest.approx(4.0)
+    # CC needs more separation than KM when clusters are small
+    assert alpha_convex_clustering(100, 5) > alpha_kmeans(100, 5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 4),
+       per=st.integers(4, 10))
+def test_kmeans_label_invariants(seed, k, per):
+    pts, _ = make_blobs(seed, k=k, per=per, sep=30.0, noise=0.1)
+    res = kmeans(jax.random.PRNGKey(seed), jnp.asarray(pts), k)
+    labels = np.asarray(res.labels)
+    assert labels.min() >= 0 and labels.max() < k
+    # well-separated blobs with tiny noise: exactly k non-empty clusters
+    assert len(np.unique(labels)) == k
+
+
+def test_separable_condition_matches_definition():
+    pts, true = make_blobs(7, sep=40.0, noise=0.1)
+    alpha = separability_alpha(pts, true)
+    assert is_separable(pts, true, alpha * 0.9)
+    assert not is_separable(pts, true, alpha * 1.1)
+
+
+def test_spectral_init_returns_points_from_distinct_clusters():
+    pts, true = make_blobs(8, k=3, per=10, sep=30.0, noise=0.1)
+    seeds = np.asarray(spectral_init(jnp.asarray(pts), 3))
+    # each seed should be close to a distinct blob center
+    d = np.linalg.norm(seeds[:, None] - seeds[None], axis=-1)
+    np.fill_diagonal(d, np.inf)
+    assert d.min() > 10.0

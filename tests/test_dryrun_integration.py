@@ -1,0 +1,40 @@
+"""Integration: the multi-pod dry-run entry point end-to-end (subprocess,
+because dryrun.py must own the 512-device XLA flag before jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=480)
+
+
+def test_dryrun_single_combo(tmp_path):
+    out = tmp_path / "d.jsonl"
+    r = _run(["--arch", "xlstm_125m", "--shape", "long_500k",
+              "--json", str(out)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["status"] == "OK"
+    assert rec["chips"] == 256
+    assert rec["mesh"] == "16x16"
+    assert rec["peak_bytes_per_device"] < 2 ** 30   # O(1) recurrent state
+    assert "roofline" in rec and rec["roofline"]["bottleneck"] in (
+        "compute", "memory", "collective")
+
+
+def test_dryrun_skip_rule(tmp_path):
+    out = tmp_path / "d.jsonl"
+    r = _run(["--arch", "hubert_xlarge", "--shape", "decode_32k",
+              "--json", str(out)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["status"] == "SKIP"
+    assert "encoder-only" in rec["reason"]

@@ -1,0 +1,99 @@
+"""The multi-pod integration at toy scale: federated ODCL over clustered
+LM clients — local phase learns cluster-specific bigram stats, the
+one-shot aggregate recovers the client clustering and improves loss."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.federated import (
+    evaluate_per_client,
+    init_federation,
+    local_training,
+    one_shot_aggregate,
+)
+from repro.core.odcl import ODCLConfig
+from repro.data import ClusteredTokenStream, make_lm_batch_iterator
+from repro.optim import AdamWConfig
+import jax
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2_0_5b").reduced(n_layers=2, max_d_model=64,
+                                           max_vocab=64)
+    n_clients, k = 8, 2
+    stream = ClusteredTokenStream(n_clients=n_clients, n_clusters=k,
+                                  vocab_size=cfg.vocab_size, seed=0,
+                                  branching=4)
+    batches = make_lm_batch_iterator(
+        stream, clients_per_batch=list(range(n_clients)),
+        per_client_batch=4, seq_len=32)
+
+    def batch_fn():
+        toks, labels = next(batches)
+        return {"tokens": toks, "labels": labels}
+
+    state = init_federation(jax.random.PRNGKey(0), cfg, n_clients)
+
+    def batch_iter():
+        while True:
+            yield batch_fn()
+
+    # enough local steps for the clients' models to separate by cluster
+    # (the deep-net analogue of the paper's sample-size threshold)
+    state, losses = local_training(
+        state, cfg, batch_iter(), steps=120,
+        opt_cfg=AdamWConfig(lr=1e-3, weight_decay=0.0))
+    return cfg, stream, state, losses, batch_fn
+
+
+def test_local_training_reduces_loss(setup):
+    _, _, _, losses, _ = setup
+    assert losses[-1].mean() < losses[0].mean()
+
+
+def test_one_shot_aggregate_recovers_clusters(setup):
+    cfg, stream, state, _, _ = setup
+    new_state, labels, info = one_shot_aggregate(
+        state, cfg, ODCLConfig(algo="kmeans++", k=2), sketch_dim=64)
+    # recovered clusters must match the hidden client clustering exactly
+    from collections import Counter
+
+    for c in np.unique(labels):
+        members = stream.true_labels[labels == c]
+        assert len(Counter(members)) == 1
+    assert info["n_clusters"] == 2
+
+
+def test_aggregation_improves_or_matches_local(setup):
+    cfg, stream, state, _, batch_fn = setup
+    new_state, labels, _ = one_shot_aggregate(
+        state, cfg, ODCLConfig(algo="kmeans++", k=2), sketch_dim=64)
+    eval_batch = batch_fn()
+    local_losses = evaluate_per_client(state, cfg, eval_batch)
+    agg_losses = evaluate_per_client(new_state, cfg, eval_batch)
+    # cluster-averaged models should not be worse on average (they pool
+    # 4x the data of a single client)
+    assert agg_losses.mean() <= local_losses.mean() * 1.05
+
+
+def test_clients_in_same_cluster_share_model(setup):
+    cfg, stream, state, _, _ = setup
+    new_state, labels, _ = one_shot_aggregate(
+        state, cfg, ODCLConfig(algo="kmeans++", k=2), sketch_dim=64)
+    embed = np.asarray(new_state.params["embed"], np.float32)
+    for c in np.unique(labels):
+        members = np.where(labels == c)[0]
+        for m in members[1:]:
+            np.testing.assert_allclose(embed[members[0]], embed[m],
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_different_clusters_differ(setup):
+    cfg, stream, state, _, _ = setup
+    new_state, labels, _ = one_shot_aggregate(
+        state, cfg, ODCLConfig(algo="kmeans++", k=2), sketch_dim=64)
+    embed = np.asarray(new_state.params["embed"], np.float32)
+    a = np.where(labels == 0)[0][0]
+    b = np.where(labels == 1)[0][0]
+    assert np.abs(embed[a] - embed[b]).max() > 1e-6

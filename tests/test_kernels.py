@@ -1,0 +1,111 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+with hypothesis sweeps over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.group_prox import group_ball_proj_pallas
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 40),
+    d=st.integers(1, 300),
+    dtype=st.sampled_from([np.float32, np.float16]),
+)
+def test_pairwise_sqdist_matches_ref(m, k, d, dtype):
+    rng = np.random.default_rng(m * 1000 + k * 10 + d)
+    a = jnp.asarray(rng.normal(size=(m, d)).astype(dtype))
+    b = jnp.asarray(rng.normal(size=(k, d)).astype(dtype))
+    got = pairwise_sqdist_pallas(a, b, interpret=True)
+    want = ref.pairwise_sqdist(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == np.float16 else 1e-4,
+                               atol=1e-2 if dtype == np.float16 else 1e-3)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(2, 150), k=st.integers(1, 16), d=st.integers(2, 100))
+def test_kmeans_assign_matches_ref(m, k, d):
+    rng = np.random.default_rng(m + k + d)
+    pts = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    cts = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    lab_p, sum_p, cnt_p = kmeans_assign_pallas(pts, cts, interpret=True)
+    lab_r, sum_r, cnt_r = ref.kmeans_assign(pts, cts)
+    np.testing.assert_array_equal(np.asarray(lab_p), np.asarray(lab_r))
+    np.testing.assert_allclose(np.asarray(sum_p), np.asarray(sum_r),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cnt_p), np.asarray(cnt_r))
+
+
+@settings(**SETTINGS)
+@given(e=st.integers(1, 300), d=st.integers(1, 128),
+       radius=st.floats(0.01, 10.0))
+def test_group_ball_proj_matches_ref(e, d, radius):
+    rng = np.random.default_rng(e * 7 + d)
+    v = jnp.asarray((rng.normal(size=(e, d)) * 3).astype(np.float32))
+    got = group_ball_proj_pallas(v, radius, interpret=True)
+    want = ref.group_ball_proj(v, radius)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # invariant: projected rows never exceed the radius
+    norms = np.linalg.norm(np.asarray(got), axis=1)
+    assert (norms <= radius * (1 + 1e-5)).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hkv=st.sampled_from([1, 2, 4]),
+    rep=st.sampled_from([1, 2, 7]),
+    sq=st.integers(1, 80),
+    extra_kv=st.integers(0, 60),
+    dh=st.sampled_from([8, 16, 64]),
+    window=st.sampled_from([None, 5, 32]),
+    causal=st.booleans(),
+)
+def test_flash_attention_matches_ref(b, hkv, rep, sq, extra_kv, dh, window,
+                                     causal):
+    h = hkv * rep
+    skv = sq + extra_kv
+    rng = np.random.default_rng(b + h + sq + skv + dh)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, dh)).astype(np.float32))
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_large_block_shapes():
+    """One MXU-aligned large case (block-boundary exactness)."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 384, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 384, 64)).astype(np.float32))
+    got = flash_attention_pallas(q, k, v, causal=True, bq=128, bk=128,
+                                 interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_dispatch_cpu_fallback():
+    from repro.kernels import ops
+
+    a = jnp.ones((4, 8))
+    b = jnp.zeros((3, 8))
+    d = ops.pairwise_sqdist(a, b)
+    assert d.shape == (4, 3)
+    np.testing.assert_allclose(np.asarray(d), 8.0)

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (assignment requirement): reduced
+same-family variant (2 layers, d_model<=512, <=4 experts), one forward +
+one train step on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import make_train_step
+from repro.models import forward, init_params, train_loss
+from repro.optim import adamw_init
+
+
+def make_batch(cfg, b=2, s=32, seed=1):
+    key = jax.random.PRNGKey(seed)
+    if cfg.input_mode == "tokens":
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+    if cfg.input_mode == "embeddings":
+        return {
+            "frames": jax.random.normal(key, (b, s, 512), jnp.float32) * 0.1,
+            "mask": jnp.arange(s)[None].repeat(b, 0) % 5 == 0,
+            "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "patch_embeds": jax.random.normal(key, (b, 4, 1024), jnp.float32) * 0.1,
+        "patch_positions": jnp.arange(4)[None].repeat(b, 0),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_invariants(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    logits, aux = forward(params, cfg, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw_init(params)
+    batch = make_batch(cfg)
+    step = jax.jit(make_train_step(cfg, remat="none"))
+    loss, new_params, new_state = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(loss))
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+    # parameters actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "xlstm_125m", "hymba_1_5b",
+                                  "deepseek_moe_16b"])
+def test_loss_decreases_under_training(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw_init(params)
+    batch = make_batch(cfg)
+    step = jax.jit(make_train_step(cfg, remat="none"))
+    losses = []
+    for _ in range(8):
+        loss, params, opt_state = step(params, opt_state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_remat_matches_no_remat():
+    cfg = get_config("qwen2_0_5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    l1 = train_loss(params, cfg, batch, remat="none")
+    l2 = train_loss(params, cfg, batch, remat="full")
+    g1 = jax.grad(lambda p: train_loss(p, cfg, batch, remat="none"))(params)
+    g2 = jax.grad(lambda p: train_loss(p, cfg, batch, remat="full"))(params)
+    assert float(jnp.abs(l1 - l2)) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_unroll_matches_scan():
+    cfg = get_config("gemma_2b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    l1 = train_loss(params, cfg, batch, unroll=False)
+    l2 = train_loss(params, cfg, batch, unroll=True)
+    assert float(jnp.abs(l1 - l2)) < 1e-5
+
+
+def test_chunked_attention_matches_direct():
+    import dataclasses
+
+    from repro.models.attention import attention
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 4, 4096, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 2, 4096, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 2, 4096, 16)).astype(np.float32))
+    direct = attention(q, k, v, causal=True, chunk=0)
+    chunked = attention(q, k, v, causal=True, chunk=1024)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(direct),
+                               rtol=1e-4, atol=1e-4)
+    windowed_d = attention(q, k, v, causal=True, window=100, chunk=0)
+    windowed_c = attention(q, k, v, causal=True, window=100, chunk=1024)
+    np.testing.assert_allclose(np.asarray(windowed_c), np.asarray(windowed_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_aux_loss_positive_and_bounded():
+    cfg = get_config("deepseek_moe_16b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    _, aux = forward(params, cfg, batch)
+    assert 0.0 <= float(aux) < 1.0

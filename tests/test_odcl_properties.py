@@ -1,0 +1,84 @@
+"""Property-based tests of Algorithm 1's system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ODCLConfig, aggregate, odcl
+from repro.core.clustering import convex_clustering, knn_weights
+
+
+def blobs(seed, k=3, per=6, d=4, sep=25.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d))
+    dists = np.linalg.norm(centers[:, None] - centers[None], axis=-1)
+    np.fill_diagonal(dists, np.inf)
+    centers *= sep / dists.min()
+    pts = np.concatenate([c + 0.2 * rng.normal(size=(per, d)) for c in centers])
+    return pts.astype(np.float32), np.repeat(np.arange(k), per)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_permutation_equivariance(seed):
+    """Shuffling the clients permutes the outputs identically."""
+    pts, _ = blobs(seed)
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(len(pts))
+    cfg = ODCLConfig(algo="kmeans++", k=3, seed=0)
+    r1 = odcl(pts, cfg)
+    r2 = odcl(pts[perm], cfg)
+    np.testing.assert_allclose(r2.user_models, r1.user_models[perm],
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_aggregation_idempotent(seed):
+    """Aggregating the aggregated models changes nothing."""
+    pts, _ = blobs(seed)
+    cfg = ODCLConfig(algo="kmeans++", k=3, seed=0)
+    r1 = odcl(pts, cfg)
+    r2 = odcl(r1.user_models, cfg)
+    np.testing.assert_allclose(r2.user_models, r1.user_models,
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(0.1, 10.0))
+def test_scale_equivariance(seed, scale):
+    """odcl(c*models) == c*odcl(models) for K-means variants."""
+    pts, _ = blobs(seed)
+    cfg = ODCLConfig(algo="kmeans++", k=3, seed=0)
+    r1 = odcl(pts, cfg)
+    r2 = odcl(pts * scale, cfg)
+    np.testing.assert_allclose(r2.user_models, r1.user_models * scale,
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_aggregate_preserves_mean_per_cluster(seed):
+    """Cluster-wise averaging conserves each cluster's mass."""
+    pts, labels = blobs(seed)
+    cluster_avg, user_models = aggregate(pts, labels)
+    for c in np.unique(labels):
+        np.testing.assert_allclose(cluster_avg[c],
+                                   pts[labels == c].mean(axis=0),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(user_models.mean(axis=0), pts.mean(axis=0),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_weighted_convex_clustering_recovers():
+    """Remark 13: kNN-weighted CC also recovers well-separated blobs."""
+    pts, true = blobs(0, k=3, per=8)
+    w = knn_weights(pts, k=5)
+    # weighted edges shrink the penalty mass -> larger lambda range works
+    res = convex_clustering(pts, lam=2.0, iters=400, weights=w)
+    from collections import Counter
+
+    assert res.n_clusters >= 3
+    for c in range(res.n_clusters):
+        members = true[res.labels == c]
+        if len(members):
+            assert len(Counter(members)) == 1

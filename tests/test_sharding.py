@@ -1,0 +1,114 @@
+"""Sharding-rule unit tests (no multi-device requirement): specs mirror
+the parameter tree, respect divisibility, and never shard ring capacity."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import inputs as inp
+from repro.models import transformer as tr
+from repro.sharding import ShardingRules, batch_spec, cache_specs, param_specs
+
+
+class FakeMesh:
+    """Just enough of a Mesh for the spec builders."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+RULES = ShardingRules(data_axes=("data",))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_structure_and_divisibility(arch):
+    cfg = get_config(arch)
+    params = tr.abstract_params(cfg)
+    specs = param_specs(cfg, params, RULES, MESH)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    sizes = {"data": 16, "model": 16}
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= leaf.ndim
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            assert leaf.shape[dim] % total == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "grok_1_314b", "xlstm_125m",
+                                  "hymba_1_5b"])
+def test_cache_specs_never_shard_capacity(arch):
+    cfg = get_config(arch)
+    shape = inp.INPUT_SHAPES["decode_32k"]
+    cache_sds, _ = inp.decode_input_specs(cfg, shape)
+    specs = cache_specs(cfg, cache_sds, RULES, MESH)
+
+    def check(path, spec):
+        name = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                        for p in path)
+        if name.endswith("/k") or name.endswith("/v"):
+            # dims: (L, b, hkv, cap, dh); cap (index 3) must be None
+            assert len(spec) < 4 or spec[3] is None, (name, spec)
+
+    jax.tree_util.tree_map_with_path(check, specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+
+
+def test_batch_spec_skips_indivisible_batch():
+    cfg = get_config("qwen2_0_5b")
+    fn = batch_spec(cfg, RULES, MESH)
+    big = jax.ShapeDtypeStruct((256, 128), np.int32)
+    tiny = jax.ShapeDtypeStruct((1, 1), np.int32)
+    assert fn(big)[0] == "data"
+    assert fn(tiny)[0] is None
+
+
+def test_moe_expert_sharding_strategies():
+    """64 experts -> expert-parallel; 8 experts -> hidden-dim TP."""
+    ds = get_config("deepseek_moe_16b")
+    gk = get_config("grok_1_314b")
+    ds_specs = param_specs(ds, tr.abstract_params(ds), RULES, MESH)
+    gk_specs = param_specs(gk, tr.abstract_params(gk), RULES, MESH)
+    # (L, E, D, F) layout: index 1 is the expert dim
+    assert ds_specs["layers"]["moe"]["w_in"][1] == "model"
+    assert gk_specs["layers"]["moe"]["w_in"][1] is None
+    assert gk_specs["layers"]["moe"]["w_in"][3] == "model"
+
+
+def test_client_axis_prepends():
+    cfg = get_config("qwen2_0_5b")
+    rules = ShardingRules(data_axes=("data",), client_axis="data", fsdp=False)
+    params = tr.abstract_params(cfg)
+    stacked = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((16,) + l.shape, l.dtype), params)
+    specs = param_specs(cfg, stacked, rules, MESH)
+    for spec in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        assert spec[0] == "data"
+
+
+def test_input_specs_cover_all_shapes():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for name, shape in inp.INPUT_SHAPES.items():
+            ok, _ = inp.shape_supported(cfg, shape)
+            if not ok:
+                continue
+            specs = inp.input_specs(cfg, shape)
+            assert isinstance(specs, dict) and specs
+
+
+def test_serve_config_decode32k_keeps_full_cache():
+    cfg = get_config("yi_9b")
+    scfg = inp.serve_config(cfg, inp.INPUT_SHAPES["decode_32k"])
+    assert scfg.serve_window is None
+    lcfg = inp.serve_config(cfg, inp.INPUT_SHAPES["long_500k"])
+    assert lcfg.serve_window == 4096

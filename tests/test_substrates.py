@@ -1,0 +1,174 @@
+"""Substrate tests: data generators (hypothesis), optimizer, checkpoint,
+sketching (JL property), ERM solvers, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.erm import logistic_erm, ridge_erm, sgd_erm
+from repro.core.sketch import sketch_tree, sketch_vector
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import (
+    ClusteredTokenStream,
+    make_linear_regression_federation,
+    make_logistic_federation,
+    make_mnist_like_federation,
+)
+from repro.optim import adamw_init, adamw_update, AdamWConfig, cosine_schedule, sgd_init, sgd_update
+
+
+# ------------------------------------------------------------------ data
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(5, 50))
+def test_linear_federation_properties(seed, n):
+    fed = make_linear_regression_federation(seed=seed, m=20, K=10, n=n)
+    assert fed.xs.shape == (20, n, 20)
+    assert fed.D > 0
+    counts = np.bincount(fed.true_labels)
+    assert (counts == 2).all()                     # balanced
+    # per-row sparsity: exactly 5 nonzero covariate components
+    nnz = (fed.xs != 0).sum(axis=-1)
+    assert (nnz <= 5).all()
+
+
+def test_logistic_federation_labels_pm1():
+    fed = make_logistic_federation(seed=0, m=8, K=4, n=50)
+    assert set(np.unique(fed.ys)) <= {-1.0, 1.0}
+
+
+def test_mnist_like_flips_labels_across_clusters():
+    fed = make_mnist_like_federation(seed=0, m=10, n=4)
+    # same covariate distribution, opposite labels: check test sets of a
+    # pair of users from different clusters have opposite label means
+    y0 = fed.ys_test[fed.true_labels == 0].mean()
+    y1 = fed.ys_test[fed.true_labels == 1].mean()
+    assert abs(y0 + y1) < 0.2
+
+
+def test_token_stream_cluster_specific_statistics():
+    stream = ClusteredTokenStream(n_clients=4, n_clusters=2, vocab_size=32,
+                                  seed=0)
+    a = stream.sample(0, batch=8, seq_len=64, step=0)   # cluster 0
+    b = stream.sample(1, batch=8, seq_len=64, step=0)   # cluster 0
+    c = stream.sample(2, batch=8, seq_len=64, step=0)   # cluster 1
+    assert a.shape == (8, 65)
+
+    def bigram(t):
+        h = np.zeros((32, 32))
+        for row in t:
+            for x, y in zip(row[:-1], row[1:]):
+                h[x, y] += 1
+        return h / h.sum()
+
+    d_ab = np.abs(bigram(a) - bigram(b)).sum()
+    d_ac = np.abs(bigram(a) - bigram(c)).sum()
+    assert d_ac > d_ab, "cross-cluster bigram stats must differ more"
+
+
+# ------------------------------------------------------------------ erm
+
+def test_ridge_erm_solves_normal_equations():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(200, 5)).astype(np.float32)
+    w = rng.normal(size=5).astype(np.float32)
+    y = x @ w
+    w_hat = np.asarray(ridge_erm(jnp.asarray(x), jnp.asarray(y), 1e-8))
+    np.testing.assert_allclose(w_hat, w, rtol=1e-3, atol=1e-4)
+
+
+def test_logistic_erm_newton_recovers_direction():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(2000, 2)).astype(np.float32)
+    w = np.array([2.0, -1.0], np.float32)
+    p = 1 / (1 + np.exp(-(x @ w)))
+    y = (2 * (rng.uniform(size=2000) < p) - 1).astype(np.float32)
+    theta = np.asarray(logistic_erm(jnp.asarray(x), jnp.asarray(y), 1e-4))
+    w_hat = theta[:2]
+    cos = w_hat @ w / (np.linalg.norm(w_hat) * np.linalg.norm(w))
+    assert cos > 0.98
+
+
+def test_sgd_erm_appendix_d_approaches_exact():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(500, 4)).astype(np.float32)
+    w = rng.normal(size=4).astype(np.float32)
+    y = (x @ w + 0.01 * rng.normal(size=500)).astype(np.float32)
+    exact = np.asarray(ridge_erm(jnp.asarray(x), jnp.asarray(y), 1e-6))
+
+    def loss(theta, batch):
+        xx, yy = batch
+        r = xx @ theta - yy
+        return 0.5 * jnp.mean(r * r)
+
+    approx = sgd_erm(jax.random.PRNGKey(0), jnp.zeros(4),
+                     (jnp.asarray(x), jnp.asarray(y)), loss,
+                     steps=2000, batch=32, mu=1.0, radius=100.0)
+    assert np.linalg.norm(np.asarray(approx) - exact) < 0.3
+
+
+# ---------------------------------------------------------------- optim
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.ones((8,)) * 5.0}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.3, weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": params["w"]}
+        params, state = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_sgd_projection_keeps_radius():
+    params = {"w": jnp.ones((4,)) * 10.0}
+    state = sgd_init(params)
+    params, state = sgd_update(params, {"w": jnp.zeros(4)}, state, lr=0.1,
+                               radius=1.0)
+    assert float(jnp.linalg.norm(params["w"])) <= 1.0 + 1e-5
+
+
+def test_cosine_schedule_endpoints():
+    assert float(cosine_schedule(0, 100, warmup_steps=10)) < 0.2
+    assert float(cosine_schedule(50, 100, 10)) > float(cosine_schedule(99, 100, 10))
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    back = restore_checkpoint(str(tmp_path), 7, tree)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert back["b"]["c"].dtype == np.dtype(jnp.bfloat16)
+
+
+# ----------------------------------------------------------------- sketch
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_sketch_preserves_relative_distances(seed):
+    """JL property: sketched distances within ~40% of true (s=512)."""
+    rng = np.random.default_rng(seed)
+    vs = [jnp.asarray(rng.normal(size=4000).astype(np.float32))
+          for _ in range(4)]
+    key = jax.random.PRNGKey(0)
+    sk = [np.asarray(sketch_vector(key, v, 512)) for v in vs]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            true_d = float(jnp.linalg.norm(vs[i] - vs[j]))
+            sk_d = float(np.linalg.norm(sk[i] - sk[j]))
+            assert abs(sk_d - true_d) / true_d < 0.4
+
+
+def test_sketch_tree_filter_excludes_leaves():
+    tree = {"moe": {"w_in": jnp.ones((4, 8)), "router": jnp.ones((8,))},
+            "dense": jnp.ones((16,))}
+    key = jax.random.PRNGKey(0)
+    full = sketch_tree(key, tree, 32)
+    filt = sketch_tree(key, tree, 32,
+                       leaf_filter=lambda p, l: "w_in" not in
+                       "/".join(str(getattr(q, 'key', q)) for q in p))
+    assert not np.allclose(np.asarray(full), np.asarray(filt))

@@ -1,0 +1,95 @@
+"""Theory quantities (Table 1 / Theorem 1) and the IFCA baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IFCAConfig, ifca, ifca_init_annulus, theory
+from repro.core.erm import batched_ridge_erm
+from repro.core.odcl import ODCLConfig, odcl
+from repro.data import make_linear_regression_federation
+
+
+def test_constant_M_positive_and_monotone_in_d():
+    c1 = theory.ProblemConstants(L=1, mu_F=0.5, R=10, d=5, G_F=1.0)
+    c2 = theory.ProblemConstants(L=1, mu_F=0.5, R=10, d=50, G_F=1.0)
+    assert 0 < theory.constant_M(c1) < theory.constant_M(c2)
+
+
+def test_sample_threshold_solves_inequality():
+    n = theory.sample_threshold(M=10.0, alpha=4.0, D=2.0, gamma=0.5)
+    assert n / np.log(n) > 4 * 10 * 16 / 1.0
+    # slightly smaller n must violate
+    m = n * 0.9
+    assert m / np.log(m) <= 4 * 10 * 16 / 1.0 * 1.001
+
+
+def test_cc_threshold_above_km_threshold_small_clusters():
+    # |C_(K)| <= sqrt(m): CC pays ~m-factor more samples (Section 4.2)
+    km = theory.threshold_odcl_km(M=1.0, m=100, c_min=5, D=4.0, gamma=0.5)
+    cc = theory.threshold_odcl_cc(M=1.0, m=100, c_min=5, D=4.0, gamma=0.5)
+    assert cc > km
+
+
+def test_ifca_comm_rounds_formula():
+    t = theory.ifca_comm_rounds(kappa=10, p=0.1, D=1.0, eps=0.01)
+    assert t == pytest.approx(800 * np.log(200))
+    # ODCL uses exactly 1 round: saving factor = t
+    assert t > 1000
+
+
+def test_merge_condition_appendix_f():
+    # equal sample sizes: eps < 1/(2n)
+    assert theory.merge_condition(100, 100) == pytest.approx(1 / 200)
+    assert theory.merge_condition(50, 200) < theory.merge_condition(100, 100)
+
+
+def test_ifca_converges_with_good_init():
+    fed = make_linear_regression_federation(seed=3, m=40, K=4, n=100)
+
+    def loss_fn(t, x, y):
+        r = x @ t - y
+        return jnp.mean(r * r)
+
+    grad_fn = jax.grad(loss_fn)
+    key = jax.random.PRNGKey(0)
+    theta0 = ifca_init_annulus(key, jnp.asarray(fed.optima), fed.D)
+    cfg = IFCAConfig(k=4, rounds=120, step_size=0.1)
+    thetaT, labels, hist = ifca(theta0, jnp.asarray(fed.xs),
+                                jnp.asarray(fed.ys), loss_fn, grad_fn, cfg)
+    err = float(jnp.mean(jnp.sum(
+        (thetaT - jnp.asarray(fed.optima)) ** 2, -1)))
+    err0 = float(jnp.mean(jnp.sum(
+        (theta0 - jnp.asarray(fed.optima)) ** 2, -1)))
+    assert err < 0.1 * err0
+    # users assigned to the matching model
+    from collections import Counter
+
+    labels = np.asarray(labels)
+    for c in np.unique(labels):
+        assert len(Counter(fed.true_labels[labels == c])) == 1
+
+
+def test_ifca_needs_many_rounds_where_odcl_needs_one():
+    """Fig. 4 behaviour: at n in the order-optimal regime, one-shot ODCL
+    reaches oracle MSE that IFCA needs tens of rounds to approach."""
+    fed = make_linear_regression_federation(seed=4, m=40, K=4, n=200)
+    local = np.asarray(batched_ridge_erm(
+        jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
+    res = odcl(local, ODCLConfig(algo="kmeans++", k=4))
+    opt = fed.optima[fed.true_labels]
+    odcl_err = float(np.mean(np.sum((res.user_models - opt) ** 2, 1)))
+
+    def loss_fn(t, x, y):
+        r = x @ t - y
+        return jnp.mean(r * r)
+
+    grad_fn = jax.grad(loss_fn)
+    theta0 = ifca_init_annulus(jax.random.PRNGKey(1),
+                               jnp.asarray(fed.optima), fed.D)
+    cfg = IFCAConfig(k=4, rounds=5, step_size=0.1)
+    thetaT, labels, _ = ifca(theta0, jnp.asarray(fed.xs), jnp.asarray(fed.ys),
+                             loss_fn, grad_fn, cfg)
+    ifca5 = float(jnp.mean(jnp.sum(
+        (thetaT[np.asarray(labels)] - jnp.asarray(opt)) ** 2, -1)))
+    assert odcl_err < ifca5, (odcl_err, ifca5)
