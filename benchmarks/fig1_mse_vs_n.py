@@ -1,13 +1,22 @@
 """Figure 1: normalized MSE vs samples-per-user, synthetic linear
 regression (K=10, d=20, m=100). ODCL-KM++ / ODCL-CC vs Oracle Averaging,
-Cluster Oracle, Local ERMs, Naive Averaging."""
+Cluster Oracle, Local ERMs, Naive Averaging — every method driven
+through the unified ``Method.fit`` interface."""
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
-from repro.core import ODCLConfig, batched_ridge_erm, odcl, oracles
+from benchmarks.common import emit, memoized_solver, timed
+from repro.core import (
+    ClusterOracle,
+    GlobalERM,
+    LocalOnly,
+    ODCL,
+    OracleAveraging,
+    batched_ridge_erm,
+)
 from repro.core.erm import ridge_erm
 from repro.data import make_linear_regression_federation
 
@@ -15,39 +24,44 @@ N_GRID = (25, 50, 100, 200, 400)
 RUNS = 3
 
 
-def nmse(models, fed):
-    opt = fed.optima[fed.true_labels]
-    return float(np.mean(np.sum((models - opt) ** 2, 1) / np.sum(opt ** 2, 1)))
+def ridge_solver(xs, ys):
+    return batched_ridge_erm(jnp.asarray(xs), jnp.asarray(ys), 1e-8)
+
+
+def methods_for(fed):
+    """The figure's cast, rebuilt per federation (oracles need labels)."""
+    def pooled(x, y):
+        return ridge_erm(jnp.asarray(x), jnp.asarray(y), 1e-8)
+
+    return {
+        "odcl_km++": ODCL(algorithm="kmeans++", k=10),
+        "odcl_cc": ODCL(algorithm="clusterpath",
+                        options=dict(n_lambdas=6, iters=200)),
+        "oracle_avg": OracleAveraging(true_labels=fed.true_labels),
+        "cluster_oracle": ClusterOracle(solve_fn=pooled,
+                                        true_labels=fed.true_labels),
+        "local_erm": LocalOnly(),
+        "naive_avg": GlobalERM(),
+    }
 
 
 def run():
     curves: dict[str, list] = {}
     us_odcl = 0.0
+    key = jax.random.PRNGKey(0)
     for n in N_GRID:
         accum: dict[str, list] = {}
         for seed in range(RUNS):
             fed = make_linear_regression_federation(seed=seed, n=n)
-            local = np.asarray(batched_ridge_erm(
-                jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
-            res_km, us = timed(odcl, local, ODCLConfig(algo="kmeans++", k=10),
-                               iters=1)
-            us_odcl = us
-            res_cc = odcl(local, ODCLConfig(algo="clusterpath", n_lambdas=6,
-                                            cc_iters=200))
-            rows = {
-                "odcl_km++": nmse(res_km.user_models, fed),
-                "odcl_cc": nmse(res_cc.user_models, fed),
-                "oracle_avg": nmse(oracles.oracle_averaging(
-                    local, fed.true_labels), fed),
-                "cluster_oracle": nmse(oracles.cluster_oracle(
-                    lambda x, y: ridge_erm(jnp.asarray(x), jnp.asarray(y),
-                                           1e-8),
-                    fed.xs, fed.ys, fed.true_labels), fed),
-                "local_erm": nmse(oracles.local_erm(local), fed),
-                "naive_avg": nmse(oracles.naive_averaging(local), fed),
-            }
-            for k, v in rows.items():
-                accum.setdefault(k, []).append(v)
+            solver = memoized_solver(ridge_solver)   # one ERM pass per fed
+            for name, method in methods_for(fed).items():
+                if name == "odcl_km++":
+                    res, us_odcl = timed(method.fit, key, fed.xs, fed.ys,
+                                         solver, iters=1)
+                else:
+                    res = method.fit(key, fed.xs, fed.ys, solver)
+                accum.setdefault(name, []).append(
+                    res.nmse(fed.optima, fed.true_labels))
         for k, v in accum.items():
             curves.setdefault(k, []).append(float(np.mean(v)))
 

@@ -1,13 +1,14 @@
 """Figure 2 (Appendix E.2): logistic regression, K=4, d=2 — ODCL-CC MSE
 vs n (left panel) and the number of clusters convex clustering produces
-(right panel)."""
+(right panel), via the unified ``Method.fit`` interface."""
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
-from repro.core import ODCLConfig, batched_logistic_erm, odcl, oracles
+from benchmarks.common import emit, memoized_solver, timed
+from repro.core import ODCL, OracleAveraging, batched_logistic_erm
 from repro.core.clustering import lambda_interval
 from repro.data import make_logistic_federation
 
@@ -15,30 +16,31 @@ N_GRID = (400, 1600, 4800)
 RUNS = 2
 
 
-def nmse(models, fed):
-    opt = fed.optima[fed.true_labels]
-    return float(np.mean(
-        np.sum((models - opt) ** 2, 1) / np.maximum(np.sum(opt ** 2, 1), 1e-9)))
+def logistic_solver(xs, ys):
+    return batched_logistic_erm(jnp.asarray(xs), jnp.asarray(ys), 1e-5, 25)
 
 
 def run():
     errs, kcounts, oracle_errs = [], [], []
     us = 0.0
+    key = jax.random.PRNGKey(0)
     for n in N_GRID:
         e, kk, oe = [], [], []
         for seed in range(RUNS):
             fed = make_logistic_federation(seed=seed, m=40, K=4, n=n)
-            local = np.asarray(batched_logistic_erm(
-                jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-5, 25))
+            solver = memoized_solver(logistic_solver)  # one ERM pass per fed
+            local = np.asarray(solver(fed.xs, fed.ys))
             lo, hi = lambda_interval(local, fed.true_labels)
             lam = 0.5 * (lo + hi) if lo < hi else lo
-            res, us = timed(odcl, local,
-                            ODCLConfig(algo="convex", lam=lam,
-                                       cc_iters=250), iters=1)
-            e.append(nmse(res.user_models, fed))
+            method = ODCL(algorithm="convex",
+                          options=dict(lam=lam, iters=250))
+            res, us = timed(method.fit, key, fed.xs, fed.ys,
+                            solver, iters=1)
+            e.append(res.nmse(fed.optima, fed.true_labels, eps=1e-9))
             kk.append(res.n_clusters)
-            oe.append(nmse(oracles.oracle_averaging(local, fed.true_labels),
-                           fed))
+            oracle = OracleAveraging(true_labels=fed.true_labels).fit(
+                key, fed.xs, fed.ys, solver)
+            oe.append(oracle.nmse(fed.optima, fed.true_labels, eps=1e-9))
         errs.append(float(np.mean(e)))
         kcounts.append(float(np.mean(kk)))
         oracle_errs.append(float(np.mean(oe)))

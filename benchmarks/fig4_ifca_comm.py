@@ -1,24 +1,21 @@
 """Figure 4 (Appendix E.4): MSE vs communication rounds — ODCL (one
 round, flat line) vs IFCA with annulus initialization, at n=400 (phase
-transition) and n=600 (order-optimal regime)."""
+transition) and n=600 (order-optimal regime). Both methods run through
+the unified ``Method.fit`` interface."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.core import IFCAConfig, ODCLConfig, batched_ridge_erm, ifca, \
-    ifca_init_annulus, odcl
+from benchmarks.common import emit, memoized_solver, timed
+from repro.core import IFCA, ODCL, batched_ridge_erm, ifca_init_annulus
 from repro.data import make_linear_regression_federation
 
 ROUND_GRID = (1, 5, 20, 80, 200)
 
 
-def nmse_models(user_models, fed):
-    opt = fed.optima[fed.true_labels]
-    return float(np.mean(np.sum((user_models - opt) ** 2, 1)
-                         / np.sum(opt ** 2, 1)))
+def ridge_solver(xs, ys):
+    return batched_ridge_erm(jnp.asarray(xs), jnp.asarray(ys), 1e-8)
 
 
 def _loss(t, x, y):
@@ -27,24 +24,26 @@ def _loss(t, x, y):
 
 
 def run():
+    key = jax.random.PRNGKey(0)
     for n in (400, 600):
         fed = make_linear_regression_federation(seed=0, m=40, K=4, n=n)
-        local = np.asarray(batched_ridge_erm(
-            jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
-        res, us = timed(odcl, local, ODCLConfig(algo="kmeans++", k=4), iters=1)
-        odcl_err = nmse_models(res.user_models, fed)
-        emit(f"fig4/odcl@n{n}", us, f"rounds=1:{odcl_err:.2e}")
+        solver = memoized_solver(ridge_solver)       # one ERM pass per fed
+        method = ODCL(algorithm="kmeans++", k=4)
+        res, us = timed(method.fit, key, fed.xs, fed.ys, solver,
+                        iters=1)
+        odcl_err = res.nmse(fed.optima, fed.true_labels)
+        emit(f"fig4/odcl@n{n}", us,
+             f"rounds={int(res.comm_rounds)}:{odcl_err:.2e}")
 
         grad_fn = jax.grad(_loss)
         theta0 = ifca_init_annulus(jax.random.PRNGKey(0),
                                    jnp.asarray(fed.optima), fed.D)
         pts = []
         for rounds in ROUND_GRID:
-            cfg = IFCAConfig(k=4, rounds=rounds, step_size=0.05)
-            thetaT, labels, _ = ifca(theta0, jnp.asarray(fed.xs),
-                                     jnp.asarray(fed.ys), _loss, grad_fn, cfg)
-            um = np.asarray(thetaT)[np.asarray(labels)]
-            pts.append((rounds, nmse_models(um, fed)))
+            ifca_method = IFCA(k=4, loss_fn=_loss, grad_fn=grad_fn,
+                               init=theta0, rounds=rounds, step_size=0.05)
+            r = ifca_method.fit(key, fed.xs, fed.ys)
+            pts.append((rounds, r.nmse(fed.optima, fed.true_labels)))
         emit(f"fig4/ifca@n{n}", us,
              ";".join(f"rounds={r}:{v:.2e}" for r, v in pts))
 

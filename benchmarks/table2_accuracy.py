@@ -3,21 +3,22 @@ flipped labels across the two clusters; m=100, n=4/user).
 
 Offline container => MNIST replaced by a matched synthetic two-class
 problem (DESIGN.md §7).  Methods: ODCL-KM++, Local ERM, Cluster Oracle,
-IFCA-1 / IFCA-2 (oracle-init + noise), IFCA-R (random init)."""
+IFCA-1 / IFCA-2 (oracle-init + noise), IFCA-R (random init) — all run
+through the unified ``Method.fit`` interface."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, memoized_solver, timed
 from repro.core import (
-    IFCAConfig,
-    ODCLConfig,
+    IFCA,
+    LocalOnly,
+    ODCL,
+    ClusterOracle,
     batched_logistic_erm,
-    ifca,
     ifca_init_near_optima,
-    odcl,
 )
 from repro.core.erm import logistic_erm
 from repro.data import make_mnist_like_federation
@@ -41,29 +42,35 @@ def _loss(theta, x, y):
     return jnp.mean(jnp.logaddexp(0.0, -y * z)) + 5e-6 * jnp.sum(w * w)
 
 
+def logistic_solver(xs, ys):
+    return batched_logistic_erm(jnp.asarray(xs), jnp.asarray(ys), 1e-4, 25)
+
+
 def run():
     rows: dict[str, list] = {}
     us = 0.0
+    grad_fn = jax.grad(_loss)
     for seed in range(RUNS):
         fed = make_mnist_like_federation(seed=seed, m=100, n=4)
-        local = np.asarray(batched_logistic_erm(
-            jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-4, 25))
-        res, us = timed(odcl, local, ODCLConfig(algo="kmeans++", k=2), iters=1)
-        rows.setdefault("odcl_km++", []).append(accuracy(res.user_models, fed))
-        rows.setdefault("local_erm", []).append(accuracy(local, fed))
-        # cluster oracle: pool each true cluster's data
-        pooled = []
-        for k in range(2):
-            sel = fed.true_labels == k
-            x = fed.xs[sel].reshape(-1, fed.xs.shape[-1])
-            y = fed.ys[sel].reshape(-1)
-            pooled.append(np.asarray(logistic_erm(
-                jnp.asarray(x), jnp.asarray(y), 1e-4, 25)))
-        oracle_models = np.stack([pooled[k] for k in fed.true_labels])
-        rows.setdefault("cluster_oracle", []).append(
-            accuracy(oracle_models, fed))
+        key = jax.random.PRNGKey(0)
 
-        grad_fn = jax.grad(_loss)
+        def pooled(x, y):
+            return logistic_erm(jnp.asarray(x), jnp.asarray(y), 1e-4, 25)
+
+        solver = memoized_solver(logistic_solver)   # one ERM pass per fed
+        odcl_method = ODCL(algorithm="kmeans++", k=2)
+        res, us = timed(odcl_method.fit, key, fed.xs, fed.ys,
+                        solver, iters=1)
+        rows.setdefault("odcl_km++", []).append(accuracy(res.user_models, fed))
+        local = LocalOnly().fit(key, fed.xs, fed.ys, solver)
+        rows.setdefault("local_erm", []).append(
+            accuracy(local.user_models, fed))
+        oracle = ClusterOracle(solve_fn=pooled,
+                               true_labels=fed.true_labels).fit(
+            key, fed.xs, fed.ys)
+        rows.setdefault("cluster_oracle", []).append(
+            accuracy(oracle.user_models, fed))
+
         opt = jnp.asarray(fed.optima.astype(np.float32))
         for name, init in (
             ("ifca_1", ifca_init_near_optima(jax.random.PRNGKey(seed), opt, 1.0)),
@@ -71,11 +78,10 @@ def run():
             ("ifca_r", jax.random.normal(jax.random.PRNGKey(seed + 7),
                                          opt.shape)),
         ):
-            cfg = IFCAConfig(k=2, rounds=200, step_size=0.1)
-            thetaT, labels, _ = ifca(init, jnp.asarray(fed.xs),
-                                     jnp.asarray(fed.ys), _loss, grad_fn, cfg)
-            user_models = np.asarray(thetaT)[np.asarray(labels)]
-            rows.setdefault(name, []).append(accuracy(user_models, fed))
+            method = IFCA(k=2, loss_fn=_loss, grad_fn=grad_fn, init=init,
+                          rounds=200, step_size=0.1)
+            r = method.fit(key, fed.xs, fed.ys)
+            rows.setdefault(name, []).append(accuracy(r.user_models, fed))
 
     for method, vals in rows.items():
         emit(f"table2/{method}", us, f"acc={np.mean(vals):.4f}")

@@ -1,18 +1,26 @@
 """Quickstart: the complete ODCL-C pipeline on the paper's synthetic
-linear-regression federation (Section 5) in a few seconds on CPU.
+linear-regression federation (Section 5) in a few seconds on CPU,
+driven through the unified federated-method API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import ODCLConfig, batched_ridge_erm, odcl, oracles
+from repro.core import (
+    GlobalERM,
+    LocalOnly,
+    ODCL,
+    OracleAveraging,
+    batched_ridge_erm,
+    list_algorithms,
+)
 from repro.data import make_linear_regression_federation
 
 
-def nmse(models, fed):
-    opt = fed.optima[fed.true_labels]
-    return float(np.mean(np.sum((models - opt) ** 2, 1) / np.sum(opt ** 2, 1)))
+def ridge_solver(xs, ys):
+    """Step 1 (users): every user solves its local ERM in one batched call."""
+    return batched_ridge_erm(jnp.asarray(xs), jnp.asarray(ys), 1e-8)
 
 
 def main():
@@ -20,24 +28,29 @@ def main():
     fed = make_linear_regression_federation(seed=0, n=200)
     print(f"federation: m={fed.m} users, K={fed.K} hidden clusters, "
           f"n={fed.n} samples/user, separation D={fed.D:.2f}")
+    print(f"admissible clustering registry: {', '.join(list_algorithms())}")
 
-    # ---- step 1 (users): solve local ERMs, send models up (ONE round) --
-    local = np.asarray(batched_ridge_erm(
-        jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
+    key = jax.random.PRNGKey(0)
 
-    # ---- steps 2-4 (server): cluster, average, send back ---------------
-    for algo, kwargs in (("kmeans++", {"k": 10}),
-                         ("clusterpath", {"n_lambdas": 8, "cc_iters": 200})):
-        res = odcl(local, ODCLConfig(algo=algo, **kwargs))
-        print(f"ODCL-{algo:11s} K'={res.n_clusters:3d} "
-              f"nmse={nmse(res.user_models, fed):.2e}")
+    # ---- ODCL over two registered algorithms (ONE round each) ----------
+    for method in (ODCL(algorithm="kmeans++", k=10),
+                   ODCL(algorithm="clusterpath",
+                        options=dict(n_lambdas=8, iters=200))):
+        res = method.fit(key, fed.xs, fed.ys, ridge_solver)
+        print(f"{method.name:17s} K'={res.n_clusters:3d} "
+              f"rounds={int(res.comm_rounds)} "
+              f"nmse={res.nmse(fed.optima, fed.true_labels):.2e}")
 
-    # ---- reference points ----------------------------------------------
-    print(f"oracle averaging  nmse={nmse(oracles.oracle_averaging(local, fed.true_labels), fed):.2e}"
-          "   (knows the true clusters)")
-    print(f"local ERMs        nmse={nmse(oracles.local_erm(local), fed):.2e}")
-    print(f"naive averaging   nmse={nmse(oracles.naive_averaging(local), fed):.2e}"
-          "   (ignores heterogeneity)")
+    # ---- reference methods through the same interface ------------------
+    for method, note in (
+        (OracleAveraging(true_labels=fed.true_labels),
+         "(knows the true clusters)"),
+        (LocalOnly(), ""),
+        (GlobalERM(), "(ignores heterogeneity)"),
+    ):
+        res = method.fit(key, fed.xs, fed.ys, ridge_solver)
+        print(f"{method.name:17s} rounds={int(res.comm_rounds)}      "
+              f"nmse={res.nmse(fed.optima, fed.true_labels):.2e}   {note}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 smoke: the repo's own test suite + an import-level check of the
+# benchmark driver (catches dispatch/API breakage without the multi-minute
+# full benchmark run).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Deselected: failures already present at the seed commit (c788f4d) —
+# kept visible here so a future fix can re-enable them.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    --deselect tests/test_dryrun_integration.py::test_dryrun_single_combo \
+    --deselect tests/test_federated.py::test_one_shot_aggregate_recovers_clusters \
+    --deselect tests/test_federated.py::test_aggregation_improves_or_matches_local \
+    --deselect tests/test_theory_and_baselines.py::test_ifca_needs_many_rounds_where_odcl_needs_one
+
+PYTHONPATH=src python - <<'PY'
+import benchmarks.run  # imports every benchmark module
+from repro.core import ODCL, get_algorithm, list_algorithms, list_methods
+
+assert len(list_algorithms()) >= 6, list_algorithms()
+assert "odcl" in list_methods()
+get_algorithm("kmeans++")
+print("benchmark driver imports OK;",
+      f"{len(list_algorithms())} clustering algorithms,",
+      f"{len(list_methods())} federated methods registered")
+PY

@@ -8,11 +8,33 @@ from __future__ import annotations
 
 import os
 import re
+import zlib
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:                              # optional: fall back to stdlib zlib
+    import zstandard
+except ImportError:               # pragma: no cover - env-dependent
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(payload)
+    return zlib.compress(payload, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "'zstandard' module is unavailable")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten(tree):
@@ -29,7 +51,7 @@ def _flatten(tree):
 def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     payload = msgpack.packb(_flatten(tree), use_bin_type=True)
-    compressed = zstandard.ZstdCompressor(level=3).compress(payload)
+    compressed = _compress(payload)
     path = os.path.join(ckpt_dir, f"step_{step}.ckpt")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -41,7 +63,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
 def restore_checkpoint(ckpt_dir: str, step: int, tree_template):
     path = os.path.join(ckpt_dir, f"step_{step}.ckpt")
     with open(path, "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        payload = _decompress(f.read())
     stored = msgpack.unpackb(payload, raw=False)
 
     flat = jax.tree_util.tree_flatten_with_path(tree_template)

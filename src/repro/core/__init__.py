@@ -1,19 +1,48 @@
 """The paper's primary contribution: the ODCL-C one-shot framework.
 
-  odcl.py       — Algorithm 1 (local ERM -> server clustering -> averaging)
-  clustering/   — admissible clustering algorithms (KM/KM++/spectral, CC,
-                  clusterpath, gradient clustering) + admissibility theory
+Two plugin layers sit at the center of the package:
+
+  clustering/api.py — the admissible set C as a *registry*: a
+                  ``ClusteringAlgorithm`` protocol (unified
+                  ``ClusteringResult``, per-algorithm Lemma-1/Lemma-2
+                  ``admissibility_alpha``) with kmeans / kmeans++ /
+                  spectral / gradient / convex / clusterpath
+                  pre-registered; ``register_algorithm`` makes a new
+                  algorithm usable everywhere by name.
+  methods.py    — the unified federated-method API: ``Method.fit(key,
+                  xs, ys, erm) -> MethodResult`` with ``ODCL`` (over
+                  any registered algorithm), ``IFCA``, ``GlobalERM``,
+                  ``LocalOnly``, ``OracleAveraging``, ``ClusterOracle``
+                  — every benchmark, example, and test drives methods
+                  through this one interface.
+
+Around them:
+
+  odcl.py       — Algorithm 1 primitives (registry-backed step 2 via
+                  ``run_clustering``/``cluster_models``, cluster-wise
+                  ``aggregate``) + the legacy ``ODCLConfig`` shim
+  clustering/   — the admissible algorithm implementations +
+                  admissibility theory (Lemmas 1-2, condition (4))
   erm.py        — local ERM solvers (closed-form ridge, Newton logistic,
                   Appendix-D inexact SGD)
-  ifca.py       — IFCA baseline [7]
-  oracles.py    — Oracle Averaging / Cluster Oracle / Local / Naive baselines
+  ifca.py       — IFCA iteration kernel [7] (wrapped by methods.IFCA)
+  oracles.py    — oracle/naive reference computations (wrapped by the
+                  oracle methods)
   theory.py     — Table 1 & Theorem 1 sample thresholds and bounds
   sketch.py     — JL sketching of parameter pytrees for at-scale clustering
   federated.py  — multi-pod integration: client axis on the mesh,
                   local-SGD train step (no cross-client collectives) and
-                  the one-shot clustered aggregation step
+                  the one-shot clustered aggregation step (clusters
+                  sketches through the same registry)
 """
-from repro.core.odcl import ODCLConfig, ODCLResult, odcl, cluster_models, aggregate
+from repro.core.odcl import (
+    ODCLConfig,
+    ODCLResult,
+    odcl,
+    cluster_models,
+    aggregate,
+    run_clustering,
+)
 from repro.core.erm import (
     ridge_erm,
     batched_ridge_erm,
@@ -24,6 +53,27 @@ from repro.core.erm import (
 from repro.core.ifca import IFCAConfig, ifca, ifca_init_near_optima, ifca_init_annulus
 from repro.core import oracles, theory
 from repro.core.sketch import sketch_vector, sketch_tree
+from repro.core.clustering.api import (
+    ClusteringAlgorithm,
+    ClusteringResult,
+    get_algorithm,
+    list_algorithms,
+    register_algorithm,
+    unregister_algorithm,
+)
+from repro.core.methods import (
+    Method,
+    MethodResult,
+    ODCL,
+    IFCA,
+    GlobalERM,
+    LocalOnly,
+    OracleAveraging,
+    ClusterOracle,
+    get_method,
+    list_methods,
+    register_method,
+)
 
 __all__ = [
     "ODCLConfig",
@@ -31,6 +81,7 @@ __all__ = [
     "odcl",
     "cluster_models",
     "aggregate",
+    "run_clustering",
     "ridge_erm",
     "batched_ridge_erm",
     "logistic_erm",
@@ -44,4 +95,21 @@ __all__ = [
     "theory",
     "sketch_vector",
     "sketch_tree",
+    "ClusteringAlgorithm",
+    "ClusteringResult",
+    "get_algorithm",
+    "list_algorithms",
+    "register_algorithm",
+    "unregister_algorithm",
+    "Method",
+    "MethodResult",
+    "ODCL",
+    "IFCA",
+    "GlobalERM",
+    "LocalOnly",
+    "OracleAveraging",
+    "ClusterOracle",
+    "get_method",
+    "list_methods",
+    "register_method",
 ]

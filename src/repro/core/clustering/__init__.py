@@ -18,6 +18,15 @@ from repro.core.clustering.admissible import (
     alpha_convex_clustering,
     alpha_kmeans,
 )
+from repro.core.clustering.api import (
+    ClusteringAlgorithm,
+    ClusteringResult,
+    get_algorithm,
+    list_algorithms,
+    register_algorithm,
+    separability_of,
+    unregister_algorithm,
+)
 
 __all__ = [
     "kmeans",
@@ -34,4 +43,11 @@ __all__ = [
     "is_separable",
     "alpha_convex_clustering",
     "alpha_kmeans",
+    "ClusteringAlgorithm",
+    "ClusteringResult",
+    "get_algorithm",
+    "list_algorithms",
+    "register_algorithm",
+    "separability_of",
+    "unregister_algorithm",
 ]

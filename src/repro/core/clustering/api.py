@@ -1,0 +1,225 @@
+"""Pluggable admissible-clustering registry — the set C of ODCL-C.
+
+The paper defines ODCL-C as a *family* of one-shot methods parametrized
+by the admissible clustering algorithms C (Definition 2).  This module
+makes that set first-class:
+
+  * ``ClusteringAlgorithm`` — the protocol every member of C satisfies:
+    a ``name``, a ``__call__(key, points, k=..., **options)`` returning
+    a unified ``ClusteringResult``, a ``requires_k`` flag, and the
+    Lemma-1/Lemma-2 admissibility margin ``admissibility_alpha(m,
+    c_min)`` so the server can report (or assert) separability per
+    Definition 1.
+  * ``ClusteringResult`` — one result type (labels, centers,
+    n_clusters, meta) replacing the ad-hoc per-algorithm tuples.
+  * ``register_algorithm`` / ``get_algorithm`` / ``list_algorithms`` —
+    the registry.  A newly registered algorithm is immediately usable
+    by ``methods.ODCL``, the legacy ``ODCLConfig`` shim, the LM-scale
+    ``federated.one_shot_aggregate`` path, and every benchmark.
+
+The six paper algorithms (kmeans, kmeans++, spectral, gradient, convex,
+clusterpath) are registered at import time below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering.admissible import (
+    alpha_convex_clustering,
+    alpha_kmeans,
+    separability_alpha,
+)
+from repro.core.clustering.convex import (
+    clusterpath,
+    convex_clustering,
+    lambda_interval,
+)
+from repro.core.clustering.gradient import gradient_clustering
+from repro.core.clustering.kmeans import kmeans
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusteringResult:
+    """Unified output of every admissible clustering algorithm."""
+    labels: np.ndarray        # (m,) int cluster id per point (host)
+    centers: np.ndarray       # (K, d) cluster representatives (host)
+    n_clusters: int           # number of distinct recovered clusters
+    meta: dict                # algorithm-specific diagnostics
+
+
+def separability_of(points, result: "ClusteringResult") -> float:
+    """Achieved margin of condition (4) for ``result`` on ``points``."""
+    return separability_alpha(np.asarray(points), result.labels)
+
+
+@runtime_checkable
+class ClusteringAlgorithm(Protocol):
+    """Protocol of the admissible set C (server step 2 of Algorithm 1)."""
+    name: str
+    requires_k: bool
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 **options: Any) -> ClusteringResult: ...
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float: ...
+
+
+# --------------------------------------------------------------- adapters
+
+def _as_result(labels, centers, meta) -> ClusteringResult:
+    # compact label ids: Lloyd's can leave empty clusters, whose skipped
+    # ids would otherwise inflate n_clusters and NaN downstream averages
+    uniq, labels = np.unique(np.asarray(labels), return_inverse=True)
+    centers = np.asarray(centers)
+    if centers.shape[0] > len(uniq):
+        centers = centers[uniq]
+    return ClusteringResult(
+        labels=labels.astype(np.int32),
+        centers=centers,
+        n_clusters=len(uniq),
+        meta=dict(meta),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LloydFamily:
+    """kmeans / kmeans++ / spectral — Lloyd's algorithm, varying init.
+
+    Admissible per Lemma 2 (ODCL-KM): alpha = 2 + 2 c sqrt(m) / |C_(K)|.
+    """
+    name: str
+    init: str
+    requires_k: bool = True
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 iters: int = 100, **_: Any) -> ClusteringResult:
+        if k is None:
+            raise ValueError(f"{self.name!r} requires k")
+        res = kmeans(key, jnp.asarray(points, jnp.float32), k,
+                     iters=iters, init=self.init)
+        return _as_result(res.labels, res.centers,
+                          {"inertia": float(res.inertia),
+                           "n_iter": int(res.n_iter)})
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float:
+        return alpha_kmeans(m, c_min)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientClustering:
+    """Gradient clustering [21] — K-means-type, so Lemma 2 applies."""
+    name: str = "gradient"
+    requires_k: bool = True
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 iters: int = 100, alpha: float = 0.5,
+                 **_: Any) -> ClusteringResult:
+        if k is None:
+            raise ValueError("gradient clustering requires k")
+        res = gradient_clustering(key, jnp.asarray(points, jnp.float32), k,
+                                  alpha=alpha, iters=iters)
+        return _as_result(res.labels, res.centers,
+                          {"inertia": float(res.inertia)})
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float:
+        return alpha_kmeans(m, c_min)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvexClustering:
+    """Sum-of-norms clustering at a fixed lambda (ODCL-CC, Lemma 1)."""
+    name: str = "convex"
+    requires_k: bool = False
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 lam: Optional[float] = None, iters: int = 400,
+                 weights=None, **_: Any) -> ClusteringResult:
+        pts = jnp.asarray(points, jnp.float32)
+        if lam is None:
+            # paper E.1 heuristic: take the upper recovery bound of the
+            # all-singletons clustering as a starting penalty
+            lo, hi = lambda_interval(np.asarray(pts),
+                                     np.arange(pts.shape[0]))
+            lam = hi if np.isfinite(hi) else lo + 1e-3
+        res = convex_clustering(pts, float(lam), iters=iters,
+                                weights=weights)
+        return _as_result(res.labels, res.centers,
+                          {"lam": res.lam, "n_clusters": res.n_clusters})
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float:
+        return alpha_convex_clustering(m, c_min)
+
+
+@dataclasses.dataclass(frozen=True)
+class Clusterpath:
+    """Lambda-sweep convex clustering (Appendix B.3/E.3) — no k needed."""
+    name: str = "clusterpath"
+    requires_k: bool = False
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 n_lambdas: int = 10, iters: int = 400,
+                 **_: Any) -> ClusteringResult:
+        best, _ = clusterpath(jnp.asarray(points, jnp.float32),
+                              n_lambdas=n_lambdas, iters=iters)
+        return _as_result(best.labels, best.centers,
+                          {"lam": best.lam, "n_clusters": best.n_clusters})
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float:
+        return alpha_convex_clustering(m, c_min)
+
+
+# --------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, ClusteringAlgorithm] = {}
+
+
+def register_algorithm(algo: ClusteringAlgorithm, *,
+                       name: Optional[str] = None,
+                       overwrite: bool = False) -> ClusteringAlgorithm:
+    """Add an algorithm to the admissible set C. Returns it (decorator-safe)."""
+    key = name if name is not None else algo.name
+    if not key:
+        raise ValueError("clustering algorithm needs a non-empty name")
+    if key in _REGISTRY and not overwrite:
+        raise ValueError(f"clustering algorithm {key!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[key] = algo
+    return algo
+
+
+def unregister_algorithm(name: str) -> None:
+    """Remove a registered algorithm (used by tests/plugins)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_algorithm(name) -> ClusteringAlgorithm:
+    """Resolve a name (or pass through an instance) to an algorithm."""
+    if not isinstance(name, str):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown clustering algorithm {name!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def list_algorithms() -> tuple[str, ...]:
+    """Names of every registered admissible clustering algorithm."""
+    return tuple(sorted(_REGISTRY))
+
+
+for _algo in (
+    LloydFamily(name="kmeans", init="random"),
+    LloydFamily(name="kmeans++", init="kmeans++"),
+    LloydFamily(name="spectral", init="spectral"),
+    GradientClustering(),
+    ConvexClustering(),
+    Clusterpath(),
+):
+    register_algorithm(_algo)
+del _algo

@@ -36,7 +36,7 @@ def ridge_erm(x, y, reg: float = 1e-6):
     return jnp.linalg.solve(gram, rhs)
 
 
-batched_ridge_erm = jax.jit(jax.vmap(ridge_erm, in_axes=(0, 0, None)), static_argnums=())
+batched_ridge_erm = jax.jit(jax.vmap(ridge_erm, in_axes=(0, 0, None)))
 
 
 # ------------------------------------------------------------- logistic

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.odcl import ODCLConfig, cluster_models
+from repro.core.odcl import ODCLConfig, run_clustering
 from repro.core.sketch import sketch_tree
 from repro.launch.steps import make_local_train_step
 from repro.models import init_params
@@ -91,10 +91,17 @@ def _router_invariant_filter(path, leaf) -> bool:
 
 
 def one_shot_aggregate(state: FederatedState, cfg: ModelConfig,
-                       odcl_cfg: ODCLConfig, *, sketch_dim: int = 256,
-                       seed: int = 0):
+                       odcl_cfg: Optional[ODCLConfig] = None, *,
+                       algorithm=None, k: Optional[int] = None,
+                       algo_options: Optional[dict] = None,
+                       assert_separable: bool = False,
+                       sketch_dim: int = 256, seed: int = 0):
     """The single communication round of Algorithm 1 at LM scale.
 
+    Step 2 goes through the admissible-clustering registry: pass either
+    a legacy ``odcl_cfg`` (its ``algo`` name is resolved by the
+    registry) or ``algorithm=`` (a registered name or a
+    ``ClusteringAlgorithm`` instance) with ``k``/``algo_options``.
     Returns (new_state, labels, info).
     """
     key = jax.random.PRNGKey(seed)
@@ -105,7 +112,17 @@ def one_shot_aggregate(state: FederatedState, cfg: ModelConfig,
                            leaf_filter=leaf_filter)
 
     sketches = jax.vmap(sketch_one)(state.params)          # (C, sketch_dim)
-    labels, meta = cluster_models(np.asarray(sketches), odcl_cfg)
+    if algorithm is None:
+        if odcl_cfg is None:
+            raise ValueError("pass odcl_cfg or algorithm=")
+        algorithm, k = odcl_cfg.algo, odcl_cfg.k
+        algo_options = odcl_cfg.algorithm_options()
+        assert_separable = odcl_cfg.assert_separable
+        key = jax.random.PRNGKey(odcl_cfg.seed)
+    result = run_clustering(key, np.asarray(sketches), algorithm, k=k,
+                            assert_separable=assert_separable,
+                            **(algo_options or {}))
+    labels, meta = result.labels, result.meta
 
     # cluster-wise mean of the full parameters: one masked mean per
     # cluster over the client axis (a psum over 'data' under a mesh)

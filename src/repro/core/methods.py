@@ -1,0 +1,269 @@
+"""Unified server-side API for every federated method in the paper.
+
+One protocol — ``Method.fit(key, xs, ys, erm) -> MethodResult`` — covers
+the paper's whole Section-5 cast, so benchmarks, examples, and tests
+drive every method through a single interface (the jax-native analogue
+of FedLab's ``ParameterServerHandler``/topology split):
+
+  * ``ODCL``            — Algorithm 1 over ANY registered admissible
+                          clustering algorithm (the tentpole family).
+  * ``IFCA``            — the iterative baseline [Ghosh et al., 2020].
+  * ``GlobalERM``       — naive all-users averaging (heterogeneity-blind).
+  * ``LocalOnly``       — every user keeps its local ERM (0 rounds).
+  * ``OracleAveraging`` — averaging within the TRUE clusters.
+  * ``ClusterOracle``   — centralized training on pooled true clusters.
+
+``erm`` is the batched local solver ``erm(xs, ys) -> (m, d)`` — e.g.
+``batched_ridge_erm`` partially applied; methods that do not use local
+ERMs (IFCA) ignore it.  ``MethodResult`` carries per-user models,
+labels, comm-round counts, and MSE-vs-oracle accessors.
+
+A small name registry (``register_method``/``get_method``/
+``list_methods``) mirrors the clustering registry so new federated
+methods are drop-in plugins as well.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import oracles
+from repro.core.clustering.api import ClusteringAlgorithm, get_algorithm
+from repro.core.ifca import IFCAConfig, ifca
+from repro.core.odcl import aggregate, run_clustering
+
+
+@dataclasses.dataclass
+class MethodResult:
+    """What every federated method hands back to the driver."""
+    user_models: np.ndarray            # (m, d) model each user ends with
+    labels: np.ndarray                 # (m,) cluster id per user
+    cluster_models: Optional[np.ndarray]  # (K', d) shared models, if any
+    n_clusters: int
+    comm_rounds: float                 # uplink+downlink rounds consumed
+    meta: dict
+
+    def mse(self, optima, true_labels) -> float:
+        """Mean squared parameter error vs the true per-user optimum."""
+        opt = np.asarray(optima)[np.asarray(true_labels)]
+        return float(np.mean(np.sum((self.user_models - opt) ** 2, axis=1)))
+
+    def nmse(self, optima, true_labels, eps: float = 0.0) -> float:
+        """Per-user normalized MSE (the paper's Figure-1/2 metric)."""
+        opt = np.asarray(optima)[np.asarray(true_labels)]
+        num = np.sum((self.user_models - opt) ** 2, axis=1)
+        den = np.sum(opt ** 2, axis=1)
+        if eps:
+            den = np.maximum(den, eps)
+        return float(np.mean(num / den))
+
+
+ERMSolver = Callable[[Any, Any], Any]   # erm(xs, ys) -> (m, d) models
+
+
+@runtime_checkable
+class Method(Protocol):
+    """A federated method the server can run end-to-end."""
+    name: str
+
+    def fit(self, key, xs, ys, erm: Optional[ERMSolver] = None
+            ) -> MethodResult: ...
+
+
+def _local_models(erm: Optional[ERMSolver], xs, ys) -> np.ndarray:
+    if erm is None:
+        raise ValueError("this method needs a batched local ERM solver "
+                         "erm(xs, ys) -> (m, d)")
+    return np.asarray(erm(xs, ys), np.float32)
+
+
+def _cluster_means(user_models: np.ndarray, labels: np.ndarray):
+    """(K', d) distinct shared models + K' for label-constant user models."""
+    ks = np.unique(labels)
+    return np.stack([user_models[labels == k][0] for k in ks]), len(ks)
+
+
+# ------------------------------------------------------------------ ODCL
+
+@dataclasses.dataclass
+class ODCL:
+    """Algorithm 1 over any registered admissible clustering algorithm.
+
+    ``ODCL(algorithm="kmeans++", k=10)`` reproduces ODCL-KM++;
+    ``ODCL(algorithm="clusterpath")`` the k-free ODCL-CC variant; any
+    algorithm registered via ``register_algorithm`` works by name.
+    ``options`` are forwarded to the algorithm's ``__call__``.
+    """
+    algorithm: Union[str, ClusteringAlgorithm] = "kmeans++"
+    k: Optional[int] = None
+    options: dict = dataclasses.field(default_factory=dict)
+    assert_separable: bool = False
+
+    COMM_ROUNDS = 1   # one uplink of local ERMs + one downlink, always
+
+    @property
+    def name(self) -> str:
+        return f"odcl-{get_algorithm(self.algorithm).name}"
+
+    def fit(self, key, xs, ys, erm: Optional[ERMSolver] = None) -> MethodResult:
+        local = _local_models(erm, xs, ys)
+        res = run_clustering(key, local, self.algorithm, k=self.k,
+                             assert_separable=self.assert_separable,
+                             **self.options)
+        cluster_avg, user_models = aggregate(local, res.labels)
+        return MethodResult(user_models=user_models, labels=res.labels,
+                            cluster_models=cluster_avg,
+                            n_clusters=cluster_avg.shape[0],
+                            comm_rounds=self.COMM_ROUNDS,
+                            meta=dict(res.meta))
+
+
+# ------------------------------------------------------------------ IFCA
+
+@dataclasses.dataclass
+class IFCA:
+    """The iterative baseline: alternating assignment + cluster updates.
+
+    ``init`` is either a (k, d) initial-model array or a callable
+    ``init(key, xs, ys) -> (k, d)``; ``loss_fn(theta, x, y)`` and
+    ``grad_fn(theta, x, y)`` are the per-user objective pieces.
+    """
+    k: int
+    loss_fn: Callable
+    grad_fn: Callable
+    init: Any = None
+    rounds: int = 200
+    step_size: float = 0.1
+    mode: str = "gradient"
+    local_steps: int = 5
+    name: str = "ifca"
+
+    def _theta0(self, key, xs, ys):
+        if self.init is None:
+            d = int(np.asarray(xs).shape[-1])
+            return jax.random.normal(key, (self.k, d))
+        if callable(self.init):
+            return self.init(key, xs, ys)
+        return jnp.asarray(self.init)
+
+    def fit(self, key, xs, ys, erm: Optional[ERMSolver] = None) -> MethodResult:
+        cfg = IFCAConfig(k=self.k, rounds=self.rounds,
+                         step_size=self.step_size, mode=self.mode,
+                         local_steps=self.local_steps)
+        theta0 = self._theta0(key, xs, ys)
+        theta, labels, hist = ifca(theta0, jnp.asarray(xs), jnp.asarray(ys),
+                                   self.loss_fn, self.grad_fn, cfg)
+        theta = np.asarray(theta)
+        labels = np.asarray(labels)
+        return MethodResult(user_models=theta[labels], labels=labels,
+                            cluster_models=theta, n_clusters=self.k,
+                            comm_rounds=float(self.rounds),
+                            meta={"history": np.asarray(hist)})
+
+
+# -------------------------------------------------------------- baselines
+
+@dataclasses.dataclass
+class GlobalERM:
+    """Naive averaging of every local ERM — oblivious to heterogeneity."""
+    name: str = "global-erm"
+
+    def fit(self, key, xs, ys, erm: Optional[ERMSolver] = None) -> MethodResult:
+        local = _local_models(erm, xs, ys)
+        user_models = oracles.naive_averaging(local)
+        return MethodResult(user_models=user_models,
+                            labels=np.zeros(local.shape[0], np.int32),
+                            cluster_models=user_models[:1], n_clusters=1,
+                            comm_rounds=1, meta={})
+
+
+@dataclasses.dataclass
+class LocalOnly:
+    """Every user keeps its own local ERM — zero communication."""
+    name: str = "local-only"
+
+    def fit(self, key, xs, ys, erm: Optional[ERMSolver] = None) -> MethodResult:
+        local = _local_models(erm, xs, ys)
+        m = local.shape[0]
+        return MethodResult(user_models=oracles.local_erm(local),
+                            labels=np.arange(m, dtype=np.int32),
+                            cluster_models=None, n_clusters=m,
+                            comm_rounds=0, meta={})
+
+
+@dataclasses.dataclass
+class OracleAveraging:
+    """Average local ERMs within the TRUE clusters (knows the labels)."""
+    true_labels: np.ndarray = None
+    name: str = "oracle-averaging"
+
+    def fit(self, key, xs, ys, erm: Optional[ERMSolver] = None) -> MethodResult:
+        local = _local_models(erm, xs, ys)
+        labels = np.asarray(self.true_labels)
+        user_models = oracles.oracle_averaging(local, labels)
+        cluster_models, n_clusters = _cluster_means(user_models, labels)
+        return MethodResult(user_models=user_models, labels=labels,
+                            cluster_models=cluster_models,
+                            n_clusters=n_clusters, comm_rounds=1, meta={})
+
+
+@dataclasses.dataclass
+class ClusterOracle:
+    """Centralized training on each true cluster's pooled data.
+
+    ``solve_fn(x, y) -> theta`` is the centralized solver; this is the
+    order-optimal target every clustered method is measured against.
+    """
+    solve_fn: Callable = None
+    true_labels: np.ndarray = None
+    name: str = "cluster-oracle"
+
+    def fit(self, key, xs, ys, erm: Optional[ERMSolver] = None) -> MethodResult:
+        labels = np.asarray(self.true_labels)
+        user_models = oracles.cluster_oracle(self.solve_fn, xs, ys, labels)
+        cluster_models, n_clusters = _cluster_means(user_models, labels)
+        return MethodResult(user_models=user_models, labels=labels,
+                            cluster_models=cluster_models,
+                            n_clusters=n_clusters, comm_rounds=1, meta={})
+
+
+# ------------------------------------------------------------------ registry
+
+_METHODS: dict[str, type] = {}
+
+
+def register_method(cls: type, *, name: Optional[str] = None,
+                    overwrite: bool = False) -> type:
+    """Register a Method class under a name. Returns it (decorator-safe)."""
+    key = name if name is not None else getattr(cls, "name", None)
+    if not isinstance(key, str) or not key:
+        key = cls.__name__.lower()
+    if key in _METHODS and not overwrite:
+        raise ValueError(f"federated method {key!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _METHODS[key] = cls
+    return cls
+
+
+def get_method(name: str) -> type:
+    try:
+        return _METHODS[name]
+    except KeyError:
+        raise KeyError(f"unknown federated method {name!r}; "
+                       f"registered: {sorted(_METHODS)}") from None
+
+
+def list_methods() -> tuple[str, ...]:
+    return tuple(sorted(_METHODS))
+
+
+for _cls, _name in ((ODCL, "odcl"), (IFCA, "ifca"),
+                    (GlobalERM, "global-erm"), (LocalOnly, "local-only"),
+                    (OracleAveraging, "oracle-averaging"),
+                    (ClusterOracle, "cluster-oracle")):
+    register_method(_cls, name=_name)
+del _cls, _name

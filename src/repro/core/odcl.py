@@ -7,38 +7,58 @@
 
 ``odcl`` operates on an (m, d) stack of model vectors — the exact
 paper algorithm (used by the paper-scale experiments and benchmarks).
-The multi-pod deep-learning integration lives in ``federated.py`` and
-reuses this module's server step on sketched parameters.
+Step 2 dispatches through the admissible-clustering registry
+(``clustering.api``): any registered ``ClusteringAlgorithm`` is usable
+here by name, and ``ODCLConfig`` remains as the thin legacy shim over
+that registry.  The object-style server API (``methods.ODCL``) wraps
+this module; the multi-pod deep-learning integration lives in
+``federated.py`` and reuses the same server step on sketched
+parameters.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.clustering import (
-    kmeans,
-    gradient_clustering,
-    convex_clustering,
-    clusterpath,
-    lambda_interval,
+from repro.core.clustering.admissible import separability_alpha
+from repro.core.clustering.api import (
+    ClusteringAlgorithm,
+    ClusteringResult,
+    get_algorithm,
 )
 
 
 @dataclasses.dataclass(frozen=True)
 class ODCLConfig:
-    """Server-side configuration of Algorithm 1's step 2."""
-    algo: Literal["kmeans", "kmeans++", "spectral", "convex", "clusterpath",
-                  "gradient"] = "kmeans++"
+    """Server-side configuration of Algorithm 1's step 2.
+
+    Legacy shim: ``algo`` is resolved through the clustering registry,
+    so any name accepted by ``get_algorithm`` works — including
+    algorithms registered after import.  New code should prefer
+    ``methods.ODCL(algorithm=...)``.
+    """
+    algo: str = "kmeans++"
     k: Optional[int] = None          # required by kmeans/gradient variants
     lam: Optional[float] = None      # required by 'convex'; None -> interval mid
     kmeans_iters: int = 100
     cc_iters: int = 400
     n_lambdas: int = 10              # clusterpath sweep size
     seed: int = 0
+    assert_separable: bool = False   # raise if condition (4) fails vs Lemma alpha
+
+    def algorithm_options(self) -> dict:
+        """Map the legacy flat fields onto registry-call options."""
+        if self.algo in ("kmeans", "kmeans++", "spectral", "gradient"):
+            return {"iters": self.kmeans_iters}
+        if self.algo == "convex":
+            return {"lam": self.lam, "iters": self.cc_iters}
+        if self.algo == "clusterpath":
+            return {"n_lambdas": self.n_lambdas, "iters": self.cc_iters}
+        return {}                    # externally registered algorithms
 
 
 @dataclasses.dataclass
@@ -50,33 +70,44 @@ class ODCLResult:
     meta: dict
 
 
+def run_clustering(key, points,
+                   algorithm: Union[str, ClusteringAlgorithm],
+                   *, k: Optional[int] = None,
+                   assert_separable: bool = False,
+                   **options) -> ClusteringResult:
+    """Step 2 through the registry, with Definition-1 reporting.
+
+    Resolves ``algorithm`` by name, runs it, and attaches the achieved
+    separability margin (condition (4)) and the algorithm's Lemma-1/2
+    admissibility margin to ``result.meta``.  With
+    ``assert_separable=True`` a clustering whose achieved margin falls
+    at or below the admissible alpha raises ``ValueError``.
+    """
+    algo = get_algorithm(algorithm)
+    pts = jnp.asarray(points, jnp.float32)
+    result = algo(key, pts, k=k, **options)
+    m = int(pts.shape[0])
+    counts = np.bincount(result.labels, minlength=result.n_clusters)
+    c_min = int(counts[counts > 0].min()) if m else 0
+    achieved = separability_alpha(np.asarray(pts), result.labels)
+    admissible = float(algo.admissibility_alpha(m, max(c_min, 1)))
+    meta = dict(result.meta)
+    meta["separability_alpha"] = float(achieved)
+    meta["admissible_alpha"] = admissible
+    if assert_separable and not achieved > admissible:
+        raise ValueError(
+            f"clustering by {algo.name!r} is not separable per Definition 1: "
+            f"achieved alpha {achieved:.3g} <= admissible {admissible:.3g}")
+    return dataclasses.replace(result, meta=meta)
+
+
 def cluster_models(local_models, cfg: ODCLConfig):
-    """Step 2 — run the chosen admissible clustering algorithm."""
-    pts = jnp.asarray(local_models, jnp.float32)
+    """Step 2 — legacy entrypoint; dispatches through the registry."""
     key = jax.random.PRNGKey(cfg.seed)
-    if cfg.algo in ("kmeans", "kmeans++", "spectral"):
-        assert cfg.k is not None, f"{cfg.algo} requires k"
-        init = {"kmeans": "random", "kmeans++": "kmeans++", "spectral": "spectral"}[cfg.algo]
-        res = kmeans(key, pts, cfg.k, iters=cfg.kmeans_iters, init=init)
-        return np.asarray(res.labels), {"inertia": float(res.inertia),
-                                        "n_iter": int(res.n_iter)}
-    if cfg.algo == "gradient":
-        assert cfg.k is not None, "gradient clustering requires k"
-        res = gradient_clustering(key, pts, cfg.k, iters=cfg.kmeans_iters)
-        return np.asarray(res.labels), {"inertia": float(res.inertia)}
-    if cfg.algo == "convex":
-        lam = cfg.lam
-        if lam is None:
-            # paper E.1 heuristic: take the upper recovery bound of the
-            # all-singletons clustering as a starting penalty
-            lo, hi = lambda_interval(np.asarray(pts), np.arange(pts.shape[0]))
-            lam = hi if np.isfinite(hi) else lo + 1e-3
-        res = convex_clustering(pts, float(lam), iters=cfg.cc_iters)
-        return res.labels, {"lam": res.lam, "n_clusters": res.n_clusters}
-    if cfg.algo == "clusterpath":
-        best, _ = clusterpath(pts, n_lambdas=cfg.n_lambdas, iters=cfg.cc_iters)
-        return best.labels, {"lam": best.lam, "n_clusters": best.n_clusters}
-    raise ValueError(f"unknown clustering algo {cfg.algo!r}")
+    result = run_clustering(key, local_models, cfg.algo, k=cfg.k,
+                            assert_separable=cfg.assert_separable,
+                            **cfg.algorithm_options())
+    return result.labels, result.meta
 
 
 def aggregate(local_models, labels):

@@ -66,6 +66,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--client", type=int, default=0,
+                    help="which client's personalized model to serve from a "
+                         "stacked federated checkpoint")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -79,10 +82,24 @@ def main(argv=None):
     params = init_params(key, cfg)
     if args.ckpt_dir:
         step = latest_step(args.ckpt_dir)
-        stacked = restore_checkpoint(args.ckpt_dir, step,
-                                     jax.tree_util.tree_map(
-                                         lambda l: np.zeros((0,)), params))
-        print(f"[ckpt] restored step {step}")
+        if step is None:
+            raise SystemExit(f"no checkpoints found in {args.ckpt_dir}")
+        stacked = restore_checkpoint(args.ckpt_dir, step, params)
+
+        def select(restored, ref):
+            # federated checkpoints stack params along a leading client
+            # axis; single-model checkpoints restore as-is
+            if restored.shape == ref.shape:
+                return jnp.asarray(restored, ref.dtype)
+            if restored.shape[1:] != ref.shape or \
+                    not 0 <= args.client < restored.shape[0]:
+                raise SystemExit(
+                    f"checkpoint leaf {restored.shape} does not match model "
+                    f"{ref.shape} (client index {args.client})")
+            return jnp.asarray(restored[args.client], ref.dtype)
+
+        params = jax.tree_util.tree_map(select, stacked, params)
+        print(f"[ckpt] restored step {step} (client {args.client})")
 
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab_size)

@@ -27,6 +27,7 @@ from repro.core.federated import (
     local_training,
     one_shot_aggregate,
 )
+from repro.core.clustering import list_algorithms
 from repro.core.odcl import ODCLConfig
 from repro.data import ClusteredTokenStream, make_lm_batch_iterator
 from repro.optim import AdamWConfig
@@ -46,8 +47,7 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--algo", default="kmeans++",
-                    choices=["kmeans++", "spectral", "convex", "clusterpath",
-                             "gradient"])
+                    choices=list(list_algorithms()))
     ap.add_argument("--sketch-dim", type=int, default=128)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)

@@ -1,6 +1,8 @@
 """Property-based tests of Algorithm 1's system invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ODCLConfig, aggregate, odcl

@@ -1,0 +1,192 @@
+"""The pluggable-clustering registry and the unified Method API:
+round-trip registration, ClusteringResult invariants for every seed
+algorithm, legacy-shim parity, and drop-in use of a new algorithm."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    GlobalERM,
+    LocalOnly,
+    ODCL,
+    ODCLConfig,
+    OracleAveraging,
+    batched_ridge_erm,
+    get_algorithm,
+    get_method,
+    list_algorithms,
+    list_methods,
+    odcl,
+    oracles,
+    register_algorithm,
+    unregister_algorithm,
+)
+from repro.core.clustering import ClusteringResult, separability_of
+from repro.data import make_linear_regression_federation
+
+SEED_ALGORITHMS = ("kmeans", "kmeans++", "spectral", "gradient", "convex",
+                   "clusterpath")
+
+
+def blobs(seed=0, k=3, per=8, d=5, sep=40.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d))
+    dists = np.linalg.norm(centers[:, None] - centers[None], axis=-1)
+    np.fill_diagonal(dists, np.inf)
+    centers *= sep / dists.min()
+    pts = np.concatenate([c + 0.1 * rng.normal(size=(per, d))
+                          for c in centers])
+    return pts.astype(np.float32), np.repeat(np.arange(k), per)
+
+
+def purity(pred, true):
+    from collections import Counter
+
+    total = 0
+    for c in np.unique(pred):
+        total += Counter(true[pred == c]).most_common(1)[0][1]
+    return total / len(true)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrueKSplit:
+    """Toy plugin: splits points by sign of their first coordinate."""
+    name: str = "first-coord-sign"
+    requires_k: bool = False
+
+    def __call__(self, key, points, *, k=None, **options):
+        labels = (np.asarray(points)[:, 0] > 0).astype(np.int32)
+        labels = labels - labels.min()        # contiguous ids from 0
+        centers = np.stack([np.asarray(points)[labels == c].mean(axis=0)
+                            for c in range(int(labels.max()) + 1)])
+        return ClusteringResult(labels=labels, centers=centers,
+                                n_clusters=int(labels.max()) + 1, meta={})
+
+    def admissibility_alpha(self, m, c_min):
+        return 1.0
+
+
+# ------------------------------------------------------------- registry
+
+def test_all_seed_algorithms_registered():
+    assert set(SEED_ALGORITHMS) <= set(list_algorithms())
+
+
+def test_get_unknown_algorithm_raises_with_known_names():
+    with pytest.raises(KeyError, match="kmeans"):
+        get_algorithm("definitely-not-registered")
+
+
+def test_register_round_trip_and_duplicate_guard():
+    algo = TrueKSplit(name="round-trip-probe")
+    try:
+        register_algorithm(algo)
+        assert get_algorithm("round-trip-probe") is algo
+        assert "round-trip-probe" in list_algorithms()
+        with pytest.raises(ValueError, match="already registered"):
+            register_algorithm(TrueKSplit(name="round-trip-probe"))
+        replacement = TrueKSplit(name="round-trip-probe")
+        register_algorithm(replacement, overwrite=True)
+        assert get_algorithm("round-trip-probe") is replacement
+    finally:
+        unregister_algorithm("round-trip-probe")
+    assert "round-trip-probe" not in list_algorithms()
+
+
+@pytest.mark.parametrize("name", SEED_ALGORITHMS)
+def test_clustering_result_invariants(name):
+    pts, true = blobs()
+    algo = get_algorithm(name)
+    res = algo(jax.random.PRNGKey(0), jnp.asarray(pts),
+               k=3 if algo.requires_k else None)
+    assert isinstance(res, ClusteringResult)
+    assert res.labels.shape == (len(pts),)
+    assert res.labels.dtype.kind in "iu"
+    assert res.labels.min() >= 0
+    assert res.n_clusters == int(res.labels.max()) + 1
+    assert res.centers.ndim == 2 and res.centers.shape[1] == pts.shape[1]
+    assert res.centers.shape[0] >= res.n_clusters
+    assert np.all(np.isfinite(res.centers[np.unique(res.labels)]))
+    assert isinstance(res.meta, dict)
+    assert float(algo.admissibility_alpha(len(pts), 8)) > 0
+    if name != "kmeans":   # random init may hit a bad local optimum
+        assert purity(res.labels, true) == 1.0
+        assert separability_of(pts, res) > 1.0
+
+
+# ------------------------------------------------------------- methods
+
+@pytest.fixture(scope="module")
+def fed():
+    return make_linear_regression_federation(seed=0, n=200)
+
+
+def ridge_solver(xs, ys):
+    return batched_ridge_erm(jnp.asarray(xs), jnp.asarray(ys), 1e-8)
+
+
+def test_method_registry_lists_core_methods():
+    assert {"odcl", "ifca", "local-only", "global-erm"} <= set(list_methods())
+    assert get_method("odcl") is ODCL
+    with pytest.raises(KeyError):
+        get_method("nope")
+
+
+def test_odcl_method_matches_legacy_config_bit_for_bit(fed):
+    local = np.asarray(ridge_solver(fed.xs, fed.ys))
+    legacy = odcl(local, ODCLConfig(algo="kmeans++", k=10, seed=0))
+    res = ODCL(algorithm="kmeans++", k=10).fit(
+        jax.random.PRNGKey(0), fed.xs, fed.ys, ridge_solver)
+    assert np.array_equal(res.labels, legacy.labels)
+    assert np.array_equal(res.user_models, legacy.user_models)
+    assert np.array_equal(res.cluster_models, legacy.cluster_models)
+    assert res.n_clusters == legacy.n_clusters
+    assert res.comm_rounds == 1
+
+
+def test_baseline_methods_match_oracle_functions(fed):
+    key = jax.random.PRNGKey(0)
+    local = np.asarray(ridge_solver(fed.xs, fed.ys))
+    oa = OracleAveraging(true_labels=fed.true_labels).fit(
+        key, fed.xs, fed.ys, ridge_solver)
+    np.testing.assert_array_equal(
+        oa.user_models, oracles.oracle_averaging(local, fed.true_labels))
+    lo = LocalOnly().fit(key, fed.xs, fed.ys, ridge_solver)
+    np.testing.assert_array_equal(lo.user_models, local)
+    assert lo.comm_rounds == 0
+    ge = GlobalERM().fit(key, fed.xs, fed.ys, ridge_solver)
+    np.testing.assert_array_equal(ge.user_models,
+                                  oracles.naive_averaging(local))
+    assert ge.n_clusters == 1
+    # accessor sanity: ODCL should sit at the oracle, far below naive
+    assert oa.nmse(fed.optima, fed.true_labels) < \
+        ge.nmse(fed.optima, fed.true_labels)
+
+
+def test_new_algorithm_usable_via_method_and_legacy_shim():
+    pts, _ = blobs(seed=1, k=2, per=10, d=4, sep=30.0)
+    # center the first coordinate so the sign split is the 2-cluster truth
+    pts[:, 0] -= pts[:, 0].mean()
+    try:
+        register_algorithm(TrueKSplit())
+        via_method = ODCL(algorithm="first-coord-sign").fit(
+            jax.random.PRNGKey(0), None, None, erm=lambda xs, ys: pts)
+        via_shim = odcl(pts, ODCLConfig(algo="first-coord-sign"))
+        assert via_method.n_clusters == via_shim.n_clusters == 2
+        np.testing.assert_array_equal(via_method.labels, via_shim.labels)
+        np.testing.assert_array_equal(via_method.user_models,
+                                      via_shim.user_models)
+        assert "separability_alpha" in via_shim.meta
+    finally:
+        unregister_algorithm("first-coord-sign")
+
+
+def test_assert_separable_flags_bad_clustering():
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(20, 4)).astype(np.float32)   # no cluster structure
+    with pytest.raises(ValueError, match="not separable"):
+        ODCL(algorithm="kmeans++", k=4, assert_separable=True).fit(
+            jax.random.PRNGKey(0), None, None, erm=lambda xs, ys: pts)

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.erm import logistic_erm, ridge_erm, sgd_erm
