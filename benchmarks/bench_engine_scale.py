@@ -1,0 +1,61 @@
+"""Aggregation-engine scaling: C-sweep of the device one-shot round.
+
+For each federation size C the full pipeline of ``launch/simulate.py``
+runs (wave-batched local ERMs -> sketch -> kmeans-device -> cluster
+mean, all on device) and the per-phase wall clock plus peak memory are
+recorded to ``BENCH_engine.json`` — the perf trajectory the next
+optimization PRs measure against.
+"""
+from __future__ import annotations
+
+import json
+import resource
+
+import jax
+
+from benchmarks.common import emit
+from repro.launch.simulate import simulate
+
+C_GRID = (256, 1024, 4096, 16384)
+CLUSTERS = 8
+OUT = "BENCH_engine.json"
+
+
+def _peak_bytes() -> dict:
+    """Device allocator peak when the backend reports it (TPU/GPU), else
+    None; host peak RSS always (the CPU backend allocates from RSS)."""
+    stats = {}
+    try:
+        stats = jax.local_devices()[0].memory_stats() or {}
+    except Exception:  # noqa: BLE001 - CPU backends may not implement it
+        pass
+    return {
+        "device_peak_bytes": stats.get("peak_bytes_in_use"),
+        "peak_rss_bytes": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024,
+    }
+
+
+def run(c_grid=C_GRID, out: str = OUT):
+    rows = []
+    for c in c_grid:
+        summary = simulate(clients=c, clusters=CLUSTERS, wave=4096)
+        row = {**summary, **_peak_bytes()}
+        rows.append(row)
+        ph = summary["phases"]
+        emit(f"bench_engine/C{c}", ph["aggregate_s"] * 1e6,
+             f"erm_s={ph['local_erm_s']:.2f};purity={summary['purity']:.3f};"
+             f"rss={row['peak_rss_bytes']}")
+    report = {"bench": "engine_scale", "backend": jax.default_backend(),
+              "clusters": CLUSTERS, "rows": rows}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("bench_engine/report", 0.0, out)
+    return report
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,12 @@ import traceback
 from benchmarks import (
     appendix_d_inexact,
     appendix_f_merging,
+    bench_engine_scale,
     fig1_mse_vs_n,
     fig2_logistic,
     fig3_clusterpath,
     fig4_ifca_comm,
+    fig_separability,
     kernels_bench,
     roofline_report,
     table1_comparison,
@@ -26,6 +28,8 @@ BENCHES = [
     ("fig4", fig4_ifca_comm.run),
     ("appendix_f", appendix_f_merging.run),
     ("appendix_d", appendix_d_inexact.run),
+    ("fig_sep", fig_separability.run),
+    ("bench_engine", bench_engine_scale.run),
     ("kernels", kernels_bench.run),
     ("roofline", roofline_report.run),
 ]

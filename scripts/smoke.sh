@@ -16,11 +16,19 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
 PYTHONPATH=src python - <<'PY'
 import benchmarks.run  # imports every benchmark module
 from repro.core import ODCL, get_algorithm, list_algorithms, list_methods
+from repro.core.clustering import is_device_algorithm
 
 assert len(list_algorithms()) >= 6, list_algorithms()
 assert "odcl" in list_methods()
 get_algorithm("kmeans++")
+assert is_device_algorithm(get_algorithm("kmeans-device"))
 print("benchmark driver imports OK;",
       f"{len(list_algorithms())} clustering algorithms,",
       f"{len(list_methods())} federated methods registered")
 PY
+
+# reduced large-C simulation: the device aggregation engine end-to-end
+# (wave-batched client gen + local ERMs -> sketch -> kmeans-device ->
+# cluster mean, one jitted program)
+PYTHONPATH=src python -m repro.launch.simulate \
+    --clients 512 --clusters 8 --wave 256 --samples 32 --init spectral

@@ -56,7 +56,10 @@ from repro.core.sketch import sketch_vector, sketch_tree
 from repro.core.clustering.api import (
     ClusteringAlgorithm,
     ClusteringResult,
+    DeviceClusteringAlgorithm,
+    DeviceClusteringResult,
     get_algorithm,
+    is_device_algorithm,
     list_algorithms,
     register_algorithm,
     unregister_algorithm,
@@ -97,7 +100,10 @@ __all__ = [
     "sketch_tree",
     "ClusteringAlgorithm",
     "ClusteringResult",
+    "DeviceClusteringAlgorithm",
+    "DeviceClusteringResult",
     "get_algorithm",
+    "is_device_algorithm",
     "list_algorithms",
     "register_algorithm",
     "unregister_algorithm",

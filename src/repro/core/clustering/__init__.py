@@ -21,7 +21,10 @@ from repro.core.clustering.admissible import (
 from repro.core.clustering.api import (
     ClusteringAlgorithm,
     ClusteringResult,
+    DeviceClusteringAlgorithm,
+    DeviceClusteringResult,
     get_algorithm,
+    is_device_algorithm,
     list_algorithms,
     register_algorithm,
     separability_of,
@@ -45,7 +48,10 @@ __all__ = [
     "alpha_kmeans",
     "ClusteringAlgorithm",
     "ClusteringResult",
+    "DeviceClusteringAlgorithm",
+    "DeviceClusteringResult",
     "get_algorithm",
+    "is_device_algorithm",
     "list_algorithms",
     "register_algorithm",
     "separability_of",

@@ -23,10 +23,12 @@ clusterpath) are registered at import time below.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Protocol, runtime_checkable
+from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.engine.device_kmeans import device_kmeans
 
 from repro.core.clustering.admissible import (
     alpha_convex_clustering,
@@ -68,6 +70,36 @@ class ClusteringAlgorithm(Protocol):
     def admissibility_alpha(self, m: int, c_min: int) -> float: ...
 
 
+class DeviceClusteringResult(NamedTuple):
+    """Device-resident clustering output: every field stays a jnp array
+    (meta maps names to jnp scalars) so the whole result is a pytree that
+    can flow out of a jitted aggregation round without a host copy."""
+    labels: jnp.ndarray       # (m,) int32 cluster id per point
+    centers: jnp.ndarray      # (k, d) cluster representatives
+    meta: dict                # str -> jnp scalar diagnostics
+
+
+@runtime_checkable
+class DeviceClusteringAlgorithm(ClusteringAlgorithm, Protocol):
+    """Device-capable variant of the protocol (the aggregation engine).
+
+    ``device_call`` accepts a traced (m, d) jnp array and returns a
+    ``DeviceClusteringResult`` — no NumPy boundary, so the engine can
+    inline it into the jitted one-shot round
+    (``engine.one_shot_aggregate_device``).  Implementations still
+    provide the host ``__call__`` so they remain usable by every
+    host-path consumer of the registry.
+    """
+
+    def device_call(self, key, points, *, k: Optional[int] = None,
+                    **options: Any) -> DeviceClusteringResult: ...
+
+
+def is_device_algorithm(algo) -> bool:
+    """True when ``algo`` can run inside the device aggregation engine."""
+    return callable(getattr(algo, "device_call", None))
+
+
 # --------------------------------------------------------------- adapters
 
 def _as_result(labels, centers, meta) -> ClusteringResult:
@@ -104,6 +136,41 @@ class LloydFamily:
         return _as_result(res.labels, res.centers,
                           {"inertia": float(res.inertia),
                            "n_iter": int(res.n_iter)})
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float:
+        return alpha_kmeans(m, c_min)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceLloydFamily:
+    """Device-resident Lloyd loop (``engine.device_kmeans``) — the
+    aggregation engine's member of the admissible set.
+
+    Same admissibility as the host Lloyd family (Lemma 2: K-means-type
+    objective, init-agnostic bound); the init is an option rather than a
+    separate registry entry (``init='kmeans++' | 'spectral' | 'random'``).
+    """
+    name: str = "kmeans-device"
+    requires_k: bool = True
+
+    def device_call(self, key, points, *, k: Optional[int] = None,
+                    iters: int = 100, init: str = "kmeans++",
+                    **_: Any) -> DeviceClusteringResult:
+        if k is None:
+            raise ValueError(f"{self.name!r} requires k")
+        res = device_kmeans(key, points, k, iters=iters, init=init)
+        return DeviceClusteringResult(
+            labels=res.labels, centers=res.centers,
+            meta={"inertia": res.inertia, "n_iter": res.n_iter})
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 iters: int = 100, init: str = "kmeans++",
+                 **_: Any) -> ClusteringResult:
+        res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
+                               iters=iters, init=init)
+        return _as_result(res.labels, res.centers,
+                          {"inertia": float(res.meta["inertia"]),
+                           "n_iter": int(res.meta["n_iter"])})
 
     def admissibility_alpha(self, m: int, c_min: int) -> float:
         return alpha_kmeans(m, c_min)
@@ -217,6 +284,7 @@ for _algo in (
     LloydFamily(name="kmeans", init="random"),
     LloydFamily(name="kmeans++", init="kmeans++"),
     LloydFamily(name="spectral", init="spectral"),
+    DeviceLloydFamily(),
     GradientClustering(),
     ConvexClustering(),
     Clusterpath(),

@@ -1,0 +1,48 @@
+"""Device-resident aggregation engine — Algorithm 1 with no host round-trip.
+
+The paper's one-shot protocol, step by step, and where each step runs
+in this subsystem:
+
+  step 1  (every user solves its local ERM and uploads theta_hat_i)
+          — upstream of the engine: ``federated.local_training`` at LM
+          scale, or the batched vmap-wave ERMs of ``launch/simulate.py``
+          for C = 10k-100k shallow clients.  "Upload" is the JL sketch:
+          ``engine/aggregate.py`` vmaps ``core.sketch.sketch_tree`` over
+          the client axis, producing the device-resident (C, sketch_dim)
+          matrix (communication: sketch_dim floats per client).
+  step 2  (the server clusters {theta_hat_i} with an admissible
+          algorithm) — ``engine/device_kmeans.py``: a Lloyd loop whose
+          assign+accumulate is the fused Pallas kernel
+          ``kernels/kmeans_assign.py`` (jnp oracle / interpret mode
+          off-TPU), exposed to the registry as ``"kmeans-device"`` via
+          the ``DeviceClusteringAlgorithm`` protocol variant
+          (``clustering/api.py``) that takes and returns jnp arrays.
+  step 3  (the server averages models within each recovered cluster)
+          — the masked one-hot mean inside ``one_shot_aggregate_device``,
+          fused into the same jitted program as steps 1-2.
+  step 4  (each user receives its cluster's model) — the gather-back
+          ``onehot @ means``; under a mesh both 3 and 4 lower to psums
+          over the ``data``-sharded client axis.
+
+The host-side path (``core/clustering/kmeans.py`` +
+``federated.one_shot_aggregate(engine="host")``) is kept as the parity
+oracle; ``federated.one_shot_aggregate`` auto-dispatches here whenever
+the chosen algorithm is device-capable.
+"""
+from repro.core.engine.device_kmeans import DeviceKMeansResult, device_kmeans
+
+__all__ = [
+    "DeviceKMeansResult",
+    "device_kmeans",
+    "one_shot_aggregate_device",
+]
+
+
+def __getattr__(name):
+    # lazy: aggregate.py imports federated.py (models, launch.steps);
+    # loading that eagerly from clustering/api.py's registration import
+    # would both slow light imports and close an import cycle
+    if name == "one_shot_aggregate_device":
+        from repro.core.engine.aggregate import one_shot_aggregate_device
+        return one_shot_aggregate_device
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,131 @@
+"""The one-shot round as a single jitted device program (Algorithm 1).
+
+``one_shot_aggregate_device`` fuses the whole server side —
+
+    sketch every client's parameters (JL projection, step 1 upload)
+    -> cluster the (C, sketch_dim) sketch matrix on device (step 2)
+    -> per-cluster masked parameter mean (steps 3-4)
+
+— into one ``jax.jit`` program.  Sketches, centers and the averaged
+parameters never cross the host boundary; the only host outputs are the
+(C,) label vector and a handful of scalar diagnostics.  Pass
+``return_sketches=True`` to additionally pull the sketch matrix to host
+(small-C debugging only — large-C runs must not pay that transfer).
+
+Under a mesh the client axis shards over ``data`` (the same stacked
+layout as ``federated.py``): the label/center reductions inside the
+device clustering loop and the one-hot contraction of the cluster mean
+both lower to psums over the client shards, so the round runs without
+any host-driven collective.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.clustering.api import get_algorithm, is_device_algorithm
+from repro.core.federated import (
+    FederatedState,
+    _router_invariant_filter,
+    cluster_average_tree,
+)
+from repro.core.sketch import sketch_tree
+from repro.optim import adamw_init
+
+
+@functools.lru_cache(maxsize=16)
+def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis):
+    """Build the jitted end-to-end round for one static configuration.
+
+    Cached on the static pieces so repeated rounds (sweeps, parity
+    tests, multi-round drivers) reuse the compiled program instead of
+    retracing a fresh closure every call.
+    """
+    options = dict(opts)
+
+    def constrain(x):
+        if mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(client_axis)))
+
+    @jax.jit
+    def round_fn(sketch_key, cluster_key, params):
+        sketches = jax.vmap(
+            lambda p: sketch_tree(sketch_key, p, sketch_dim,
+                                  leaf_filter=leaf_filter)
+        )(params)                                        # (C, sketch_dim)
+        sketches = constrain(sketches)
+        res = algo.device_call(cluster_key, sketches, k=k, **options)
+        kk = res.centers.shape[0]
+        onehot = jax.nn.one_hot(res.labels, kk, dtype=jnp.float32)  # (C, K)
+        counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)          # (K,)
+        new_params = jax.tree_util.tree_map(
+            constrain, cluster_average_tree(params, onehot, counts))
+        return new_params, res, sketches
+
+    return round_fn
+
+
+def one_shot_aggregate_device(state: FederatedState, cfg=None, *,
+                              algorithm="kmeans-device",
+                              k: Optional[int] = None,
+                              algo_options: Optional[dict] = None,
+                              sketch_dim: int = 256, seed: int = 0,
+                              cluster_seed: Optional[int] = None,
+                              mesh=None, client_axis: str = "data",
+                              return_sketches: bool = False):
+    """Device-resident one-shot aggregation. Returns (state, labels, info).
+
+    ``algorithm`` must be device-capable (a ``DeviceClusteringAlgorithm``,
+    e.g. the registered ``"kmeans-device"``).  ``cfg`` is optional and
+    only consulted for the MoE router-invariant sketch filter — pass
+    ``None`` for shallow per-client models (``launch/simulate.py``).
+    ``seed`` drives the JL sketch; ``cluster_seed`` (default: ``seed``)
+    drives the clustering init, mirroring the host path's legacy
+    ``odcl_cfg.seed`` split.  With ``mesh`` given, the client axis of
+    sketches and parameters is constrained to ``client_axis`` and XLA
+    shards the round over it.
+    """
+    algo = get_algorithm(algorithm)
+    if not is_device_algorithm(algo):
+        raise ValueError(
+            f"algorithm {getattr(algo, 'name', algo)!r} is host-only; the "
+            "device engine needs a DeviceClusteringAlgorithm "
+            "(e.g. 'kmeans-device'), or use engine='host'")
+    leaf_filter = (_router_invariant_filter
+                   if cfg is not None and getattr(cfg, "is_moe", False)
+                   else None)
+    opts = tuple(sorted((algo_options or {}).items()))
+    try:
+        round_fn = _round_program(algo, k, opts, sketch_dim, leaf_filter,
+                                  mesh, client_axis)
+    except TypeError:  # unhashable algorithm/options/mesh: build uncached
+        round_fn = _round_program.__wrapped__(algo, k, opts, sketch_dim,
+                                              leaf_filter, mesh, client_axis)
+
+    sketch_key = jax.random.PRNGKey(seed)
+    cluster_key = jax.random.PRNGKey(
+        seed if cluster_seed is None else cluster_seed)
+    new_params, res, sketches = round_fn(sketch_key, cluster_key,
+                                         state.params)
+
+    # labels + scalar meta are the ONLY host materializations
+    raw_labels = np.asarray(res.labels)
+    uniq, labels = np.unique(raw_labels, return_inverse=True)
+    labels = labels.astype(np.int32)
+    meta = {name: float(np.asarray(v)) for name, v in res.meta.items()}
+
+    new_state = FederatedState(
+        params=new_params,
+        opt_state=jax.vmap(adamw_init)(new_params),
+        n_clients=state.n_clients, step=state.step)
+    info = {"n_clusters": int(len(uniq)), "meta": meta, "engine": "device"}
+    if return_sketches:
+        info["sketches"] = np.asarray(sketches)
+    return new_state, labels, info

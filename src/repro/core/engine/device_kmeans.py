@@ -1,0 +1,88 @@
+"""Device-resident Lloyd loop — the clustering half of the aggregation
+engine.
+
+Unlike ``core/clustering/kmeans.py`` (the host parity oracle, which
+materializes an (m, k) one-hot in HBM at every update), the
+assign+accumulate step here is the fused kernel behind
+``kernels.ops.kmeans_assign``: the compiled Pallas kernel
+``kernels/kmeans_assign.py`` on TPU, its interpret-mode build under
+``REPRO_FORCE_PALLAS=1``, and the pure-jnp oracle elsewhere.  Per Lloyd
+iteration the only materialized state is the (k, d) sums / (k,) counts
+accumulator, so the loop scales to C >> 1k sketch rows and stays fully
+traceable inside the jitted one-shot round (``engine/aggregate.py``).
+
+Everything returned is device-resident (no NumPy boundary); the
+registry adapter that exposes this loop as the ``kmeans-device``
+algorithm lives in ``core/clustering/api.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class DeviceKMeansResult(NamedTuple):
+    """Device-resident result (every field is a jnp array)."""
+    labels: jnp.ndarray     # (m,) int32 cluster assignment
+    centers: jnp.ndarray    # (k, d) float32 cluster centers
+    inertia: jnp.ndarray    # () sum of squared distances to assigned center
+    n_iter: jnp.ndarray     # () Lloyd iterations actually run
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "init"))
+def device_kmeans(key, points, k: int, iters: int = 50,
+                  init: str = "kmeans++", tol: float = 1e-8) -> DeviceKMeansResult:
+    """Lloyd's algorithm with the fused assign+accumulate kernel.
+
+    Mirrors ``clustering.kmeans.kmeans`` exactly (same inits, same
+    early-freeze update rule) so that identical (key, points, k, init)
+    produce identical center trajectories — the parity tests rely on
+    this.  The difference is purely mechanical: the per-iteration
+    reduction never builds the (m, k) one-hot, and the result stays on
+    device.
+    """
+    # local import: clustering.api registers the adapter for this loop,
+    # so a module-level import here would be circular
+    from repro.core.clustering.kmeans import kmeans_plus_plus_init, spectral_init
+
+    points = points.astype(jnp.float32)
+    m, d = points.shape
+    if init == "kmeans++":
+        centers = kmeans_plus_plus_init(key, points, k)
+    elif init == "spectral":
+        centers = spectral_init(points, k)
+    elif init == "random":
+        sel = jax.random.choice(key, m, (k,), replace=False)
+        centers = points[sel]
+    else:  # pragma: no cover - guarded by static arg
+        raise ValueError(f"unknown init {init!r}")
+
+    def body(carry, _):
+        centers, done, it = carry
+        _, sums, counts = kops.kmeans_assign(points, centers)
+        means = sums / jnp.maximum(counts, 1.0)[:, None]
+        new_centers = jnp.where(counts[:, None] > 0, means, centers)
+        moved = jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1))
+        new_done = done | (moved < tol)
+        centers = jnp.where(done, centers, new_centers)
+        return (centers, new_done, it + jnp.where(done, 0, 1)), None
+
+    (centers, _, n_iter), _ = jax.lax.scan(
+        body, (centers, jnp.array(False), jnp.array(0, jnp.int32)), None,
+        length=iters)
+
+    labels, sums, counts = kops.kmeans_assign(points, centers)
+    # inertia from the accumulator instead of an (m, k) distance matrix:
+    # sum_i ||x_i - c_{l(i)}||^2
+    #   = sum ||x||^2 - 2 sum_k <sums_k, c_k> + sum_k counts_k ||c_k||^2
+    inertia = (jnp.sum(points * points)
+               - 2.0 * jnp.sum(sums * centers)
+               + jnp.sum(counts * jnp.sum(centers * centers, axis=1)))
+    return DeviceKMeansResult(labels=labels, centers=centers,
+                              inertia=jnp.maximum(inertia, 0.0),
+                              n_iter=n_iter)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.clustering.api import get_algorithm, is_device_algorithm
 from repro.core.odcl import ODCLConfig, run_clustering
 from repro.core.sketch import sketch_tree
 from repro.launch.steps import make_local_train_step
@@ -90,59 +91,101 @@ def _router_invariant_filter(path, leaf) -> bool:
     return not (("moe" in s) and ("w_in" in s or "w_out" in s))
 
 
-def one_shot_aggregate(state: FederatedState, cfg: ModelConfig,
+def cluster_average_tree(params, onehot, counts):
+    """Steps 3-4 on a stacked parameter pytree: per-cluster masked mean
+    of every leaf over the leading client axis, gathered back per client.
+    ``onehot`` is (C, K'), ``counts`` (K') clamped >= 1; the contraction
+    is a psum over 'data' when the client axis is mesh-sharded.  Shared
+    by the host path below and the device engine (``engine/aggregate``)
+    so the two stay parity-exact."""
+    def cluster_avg(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        means = (onehot.T @ flat) / counts[:, None]                   # (K', n)
+        back = onehot @ means                                         # (C, n)
+        return back.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(cluster_avg, params)
+
+
+def one_shot_aggregate(state: FederatedState, cfg: Optional[ModelConfig],
                        odcl_cfg: Optional[ODCLConfig] = None, *,
                        algorithm=None, k: Optional[int] = None,
                        algo_options: Optional[dict] = None,
                        assert_separable: bool = False,
-                       sketch_dim: int = 256, seed: int = 0):
+                       sketch_dim: int = 256, seed: int = 0,
+                       engine: str = "auto", mesh=None,
+                       return_sketches: bool = False):
     """The single communication round of Algorithm 1 at LM scale.
 
     Step 2 goes through the admissible-clustering registry: pass either
     a legacy ``odcl_cfg`` (its ``algo`` name is resolved by the
     registry) or ``algorithm=`` (a registered name or a
     ``ClusteringAlgorithm`` instance) with ``k``/``algo_options``.
-    Returns (new_state, labels, info).
+
+    ``engine`` selects the execution path: ``"auto"`` (default) runs the
+    whole round on device via ``engine.one_shot_aggregate_device``
+    whenever the resolved algorithm is device-capable, and falls back to
+    the host path otherwise; ``"host"``/``"device"`` force one path.
+    ``info["sketches"]`` (the full (C, sketch_dim) host copy) is only
+    populated with ``return_sketches=True`` so large-C runs don't pay
+    the transfer.  Returns (new_state, labels, info).
     """
-    key = jax.random.PRNGKey(seed)
-    leaf_filter = _router_invariant_filter if cfg.is_moe else None
-
-    def sketch_one(client_params):
-        return sketch_tree(key, client_params, sketch_dim,
-                           leaf_filter=leaf_filter)
-
-    sketches = jax.vmap(sketch_one)(state.params)          # (C, sketch_dim)
+    if engine not in ("auto", "host", "device"):
+        raise ValueError(f"engine must be auto|host|device, got {engine!r}")
+    cluster_seed = seed
     if algorithm is None:
         if odcl_cfg is None:
             raise ValueError("pass odcl_cfg or algorithm=")
         algorithm, k = odcl_cfg.algo, odcl_cfg.k
         algo_options = odcl_cfg.algorithm_options()
         assert_separable = odcl_cfg.assert_separable
-        key = jax.random.PRNGKey(odcl_cfg.seed)
-    result = run_clustering(key, np.asarray(sketches), algorithm, k=k,
+        cluster_seed = odcl_cfg.seed
+    algo = get_algorithm(algorithm)
+    if engine == "device" and not is_device_algorithm(algo):
+        raise ValueError(
+            f"engine='device' needs a device-capable algorithm, but "
+            f"{algo.name!r} is host-only (try 'kmeans-device')")
+    use_device = engine != "host" and is_device_algorithm(algo)
+    if use_device and assert_separable:
+        if engine == "device":
+            raise ValueError("assert_separable requires engine='host' (the "
+                             "Definition-1 margin is computed host-side)")
+        use_device = False          # auto: the host oracle can satisfy it
+    if use_device:
+        from repro.core.engine.aggregate import one_shot_aggregate_device
+
+        return one_shot_aggregate_device(
+            state, cfg, algorithm=algo, k=k, algo_options=algo_options,
+            sketch_dim=sketch_dim, seed=seed, cluster_seed=cluster_seed,
+            mesh=mesh, return_sketches=return_sketches)
+
+    key = jax.random.PRNGKey(seed)
+    leaf_filter = (_router_invariant_filter
+                   if cfg is not None and cfg.is_moe else None)
+
+    def sketch_one(client_params):
+        return sketch_tree(key, client_params, sketch_dim,
+                           leaf_filter=leaf_filter)
+
+    sketches = jax.vmap(sketch_one)(state.params)          # (C, sketch_dim)
+    result = run_clustering(jax.random.PRNGKey(cluster_seed),
+                            np.asarray(sketches), algo, k=k,
                             assert_separable=assert_separable,
                             **(algo_options or {}))
     labels, meta = result.labels, result.meta
 
-    # cluster-wise mean of the full parameters: one masked mean per
-    # cluster over the client axis (a psum over 'data' under a mesh)
+    # cluster-wise mean of the full parameters
     labels_j = jnp.asarray(labels)
     n_clusters = int(labels.max()) + 1
     onehot = jax.nn.one_hot(labels_j, n_clusters, dtype=jnp.float32)  # (C,K')
     counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)                # (K',)
-
-    def cluster_avg(leaf):
-        flat = leaf.reshape(state.n_clients, -1).astype(jnp.float32)
-        means = (onehot.T @ flat) / counts[:, None]                   # (K', n)
-        back = onehot @ means                                         # (C, n)
-        return back.reshape(leaf.shape).astype(leaf.dtype)
-
-    new_params = jax.tree_util.tree_map(cluster_avg, state.params)
+    new_params = cluster_average_tree(state.params, onehot, counts)
     new_state = FederatedState(params=new_params,
                                opt_state=jax.vmap(adamw_init)(new_params),
                                n_clients=state.n_clients, step=state.step)
-    info = {"n_clusters": n_clusters, "meta": meta,
-            "sketches": np.asarray(sketches)}
+    info = {"n_clusters": n_clusters, "meta": meta, "engine": "host"}
+    if return_sketches:
+        info["sketches"] = np.asarray(sketches)
     return new_state, labels, info
 
 

@@ -52,7 +52,8 @@ class ODCLConfig:
 
     def algorithm_options(self) -> dict:
         """Map the legacy flat fields onto registry-call options."""
-        if self.algo in ("kmeans", "kmeans++", "spectral", "gradient"):
+        if self.algo in ("kmeans", "kmeans++", "spectral", "gradient",
+                         "kmeans-device"):
             return {"iters": self.kmeans_iters}
         if self.algo == "convex":
             return {"lam": self.lam, "iters": self.cc_iters}

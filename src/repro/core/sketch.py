@@ -36,6 +36,10 @@ def sketch_vector(key, vec, sketch_dim: int = 256, block: int = 1 << 16):
     Equivalent to vec @ S with S ~ N(0, 1/s), S generated blockwise.
     """
     n = vec.shape[0]
+    # never pad a short vector out to the full block: the engine vmaps
+    # this over C clients, and a (C, 1, block) batch of mostly-padding
+    # dominated peak memory for shallow models (C=16k, d=16 clients)
+    block = max(256, min(block, ((n + 255) // 256) * 256))
     nb = (n + block - 1) // block
     pad = nb * block - n
     v = jnp.pad(vec, (0, pad)).reshape(nb, block)

@@ -27,7 +27,11 @@ from repro.core.federated import (
     local_training,
     one_shot_aggregate,
 )
-from repro.core.clustering import list_algorithms
+from repro.core.clustering import (
+    get_algorithm,
+    is_device_algorithm,
+    list_algorithms,
+)
 from repro.core.odcl import ODCLConfig
 from repro.data import ClusteredTokenStream, make_lm_batch_iterator
 from repro.optim import AdamWConfig
@@ -48,6 +52,9 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--algo", default="kmeans++",
                     choices=list(list_algorithms()))
+    ap.add_argument("--engine", choices=("host", "device"), default="host",
+                    help="device = run the whole one-shot round jitted "
+                         "on-device (engine.one_shot_aggregate_device)")
     ap.add_argument("--sketch-dim", type=int, default=128)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -82,12 +89,34 @@ def main(argv=None):
           f"loss {np.mean(losses[0]):.4f} -> {np.mean(losses[-1]):.4f}")
 
     # ---- phase 2: the ONE-SHOT round (Algorithm 1) ----
-    odcl_cfg = ODCLConfig(algo=args.algo,
-                          k=args.clusters if args.algo != "clusterpath" else None)
-    state2, labels, info = one_shot_aggregate(
-        state, cfg, odcl_cfg, sketch_dim=args.sketch_dim, seed=args.seed)
+    if args.engine == "device":
+        if is_device_algorithm(get_algorithm(args.algo)):
+            # any registered DeviceClusteringAlgorithm passes straight
+            # through (the extension point — see ROADMAP)
+            algorithm, algo_options = args.algo, None
+        else:
+            # convenience: map the host Lloyd-family names onto the
+            # engine's init option
+            init_of = {"kmeans": "random", "kmeans++": "kmeans++",
+                       "spectral": "spectral"}
+            if args.algo not in init_of:
+                raise SystemExit(
+                    f"--engine device needs a device-capable algorithm "
+                    f"(e.g. kmeans-device) or a Lloyd-family name, "
+                    f"not {args.algo!r}")
+            algorithm = "kmeans-device"
+            algo_options = {"init": init_of[args.algo]}
+        state2, labels, info = one_shot_aggregate(
+            state, cfg, algorithm=algorithm, k=args.clusters,
+            algo_options=algo_options, engine="device",
+            sketch_dim=args.sketch_dim, seed=args.seed)
+    else:
+        odcl_cfg = ODCLConfig(algo=args.algo,
+                              k=args.clusters if args.algo != "clusterpath" else None)
+        state2, labels, info = one_shot_aggregate(
+            state, cfg, odcl_cfg, sketch_dim=args.sketch_dim, seed=args.seed)
     agreement = _cluster_agreement(labels, stream.true_labels)
-    print(f"[one-shot] recovered K'={info['n_clusters']} "
+    print(f"[one-shot] engine={args.engine} recovered K'={info['n_clusters']} "
           f"cluster purity={agreement:.3f} labels={labels.tolist()}")
 
     eval_batch = {"tokens": None}

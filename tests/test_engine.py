@@ -1,0 +1,231 @@
+"""Aggregation-engine validation: device kmeans vs host parity oracle,
+fused-kernel block-boundary sweeps, the zero-host-transfer contract of
+the jitted one-shot round, and the large-C simulation driver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustering import (
+    ClusteringResult,
+    get_algorithm,
+    is_device_algorithm,
+    kmeans,
+    list_algorithms,
+)
+from repro.core.engine import device_kmeans
+from repro.core.federated import FederatedState, one_shot_aggregate
+from repro.kernels import ref
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.launch.simulate import simulate
+from repro.optim import adamw_init
+
+
+def make_blobs(seed, k=3, per=12, d=8, sep=12.0, noise=0.3):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d))
+    dists = np.linalg.norm(centers[:, None] - centers[None], axis=-1)
+    np.fill_diagonal(dists, np.inf)
+    centers *= sep / dists.min()
+    pts = np.concatenate(
+        [c + noise * rng.normal(size=(per, d)) for c in centers])
+    labels = np.repeat(np.arange(k), per)
+    return pts.astype(np.float32), labels
+
+
+def same_partition(a, b) -> bool:
+    """Label vectors agree up to renaming of cluster ids."""
+    a, b = np.asarray(a), np.asarray(b)
+    fwd, bwd = {}, {}
+    for x, y in zip(a, b):
+        if fwd.setdefault(x, y) != y or bwd.setdefault(y, x) != x:
+            return False
+    return True
+
+
+def blob_state(seed=0, k=3, per=16, d=8):
+    pts, true = make_blobs(seed, k=k, per=per, d=d)
+    params = {"theta": jnp.asarray(pts)}
+    return FederatedState(params=params,
+                          opt_state=jax.vmap(adamw_init)(params),
+                          n_clients=len(pts)), true
+
+
+# ------------------------------------------------------ registry plumbing
+
+def test_kmeans_device_registered_and_device_capable():
+    assert "kmeans-device" in list_algorithms()
+    algo = get_algorithm("kmeans-device")
+    assert is_device_algorithm(algo)
+    assert not is_device_algorithm(get_algorithm("kmeans++"))
+    assert not is_device_algorithm(get_algorithm("convex"))
+
+
+def test_kmeans_device_host_call_returns_clustering_result():
+    pts, true = make_blobs(0)
+    res = get_algorithm("kmeans-device")(jax.random.PRNGKey(0), pts, k=3)
+    assert isinstance(res, ClusteringResult)
+    assert res.n_clusters == 3
+    assert same_partition(res.labels, true)
+    assert res.meta["n_iter"] >= 1
+
+
+# ------------------------------------------------- device vs host parity
+
+@pytest.mark.parametrize("init", ["kmeans++", "spectral", "random"])
+def test_device_kmeans_matches_host_kmeans(init):
+    pts, _ = make_blobs(1, k=4, per=10, d=6)
+    key = jax.random.PRNGKey(7)
+    host = kmeans(key, jnp.asarray(pts), 4, init=init)
+    dev = device_kmeans(key, jnp.asarray(pts), 4, init=init)
+    assert same_partition(np.asarray(host.labels), np.asarray(dev.labels))
+    np.testing.assert_allclose(float(dev.inertia), float(host.inertia),
+                               rtol=1e-3, atol=1e-3)
+    assert int(dev.n_iter) == int(host.n_iter)
+
+
+# -------------------------------------- fused kernel at block boundaries
+
+@pytest.mark.parametrize("m,k,d,bm", [
+    (13, 3, 5, 8),      # non-multiple of bm: one padded tail block
+    (300, 7, 33, 128),  # multi-block grid + padded tail
+    (256, 4, 16, 256),  # exact single block
+    (5, 2, 4, 256),     # m smaller than bm
+])
+def test_kmeans_assign_pallas_block_boundaries(m, k, d, bm):
+    rng = np.random.default_rng(m * 31 + k)
+    pts = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    cts = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    lab_p, sum_p, cnt_p = kmeans_assign_pallas(pts, cts, bm=bm,
+                                               interpret=True)
+    lab_r, sum_r, cnt_r = ref.kmeans_assign(pts, cts)
+    np.testing.assert_array_equal(np.asarray(lab_p), np.asarray(lab_r))
+    np.testing.assert_allclose(np.asarray(sum_p), np.asarray(sum_r),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cnt_p), np.asarray(cnt_r))
+
+
+# ------------------------------------------- one-shot round on the engine
+
+def test_device_engine_matches_host_engine_labels():
+    state, true = blob_state()
+    kwargs = dict(algorithm="kmeans-device", k=3, sketch_dim=32, seed=3)
+    _, lab_host, info_host = one_shot_aggregate(state, None, engine="host",
+                                                **kwargs)
+    _, lab_dev, info_dev = one_shot_aggregate(state, None, engine="device",
+                                              **kwargs)
+    assert info_host["engine"] == "host"
+    assert info_dev["engine"] == "device"
+    assert same_partition(lab_host, lab_dev)
+    assert same_partition(lab_dev, true)
+    assert info_dev["n_clusters"] == info_host["n_clusters"] == 3
+
+
+def test_device_engine_shares_models_within_cluster():
+    state, _ = blob_state()
+    new_state, labels, _ = one_shot_aggregate(
+        state, None, algorithm="kmeans-device", k=3, sketch_dim=32)
+    theta = np.asarray(new_state.params["theta"])
+    for c in np.unique(labels):
+        members = np.where(labels == c)[0]
+        np.testing.assert_allclose(
+            theta[members], np.broadcast_to(theta[members[0]],
+                                            theta[members].shape),
+            rtol=1e-6, atol=1e-6)
+
+
+def _arrays_of_shape(obj, shape):
+    """All ndarray leaves of a nested dict matching ``shape``."""
+    found = []
+    if isinstance(obj, dict):
+        for v in obj.values():
+            found += _arrays_of_shape(v, shape)
+    elif isinstance(obj, (np.ndarray, jnp.ndarray)) and obj.shape == shape:
+        found.append(obj)
+    return found
+
+
+def test_device_engine_no_host_sketch_transfer():
+    state, _ = blob_state()
+    sketch_dim = 32
+    full = (state.n_clients, sketch_dim)
+    _, _, info = one_shot_aggregate(state, None, algorithm="kmeans-device",
+                                    k=3, sketch_dim=sketch_dim)
+    assert not _arrays_of_shape(info, full), \
+        "one-shot info must not materialize the (C, sketch_dim) sketches"
+    _, _, info = one_shot_aggregate(state, None, algorithm="kmeans-device",
+                                    k=3, sketch_dim=sketch_dim,
+                                    return_sketches=True)
+    assert len(_arrays_of_shape(info, full)) == 1  # opt-in still works
+
+
+def test_host_engine_sketches_are_opt_in_too():
+    state, _ = blob_state()
+    _, _, info = one_shot_aggregate(state, None, algorithm="kmeans++", k=3,
+                                    sketch_dim=32)
+    assert "sketches" not in info
+    _, _, info = one_shot_aggregate(state, None, algorithm="kmeans++", k=3,
+                                    sketch_dim=32, return_sketches=True)
+    assert info["sketches"].shape == (state.n_clients, 32)
+
+
+def test_odcl_cfg_seed_reaches_device_engine():
+    from repro.core.odcl import ODCLConfig
+
+    state, true = blob_state()
+    cfg = ODCLConfig(algo="kmeans-device", k=3, seed=11)
+    _, lab_dev, info_dev = one_shot_aggregate(state, None, cfg, sketch_dim=32)
+    _, lab_host, _ = one_shot_aggregate(state, None, cfg, sketch_dim=32,
+                                        engine="host")
+    assert info_dev["engine"] == "device"
+    assert same_partition(lab_dev, lab_host)
+    assert same_partition(lab_dev, true)
+
+
+def test_auto_engine_assert_separable_falls_back_to_host():
+    from repro.core.odcl import ODCLConfig
+
+    state, true = blob_state()
+    cfg = ODCLConfig(algo="kmeans-device", k=3, assert_separable=True)
+    _, labels, info = one_shot_aggregate(state, None, cfg, sketch_dim=32)
+    assert info["engine"] == "host"          # auto fell back, no raise
+    assert "separability_alpha" in info["meta"]
+    assert same_partition(labels, true)
+    with pytest.raises(ValueError, match="assert_separable"):
+        one_shot_aggregate(state, None, cfg, sketch_dim=32, engine="device")
+
+
+def test_device_engine_rejects_host_only_algorithm():
+    state, _ = blob_state()
+    with pytest.raises(ValueError, match="device"):
+        one_shot_aggregate(state, None, algorithm="kmeans++", k=3,
+                           engine="device")
+
+
+# ----------------------------------------------------- simulation driver
+
+def test_simulate_small_federation_recovers_clusters():
+    # spectral init: deterministic seeding (kmeans++ D^2 sampling can hit
+    # a merge/split local optimum at this small K/d combination)
+    summary = simulate(clients=128, clusters=4, dim=8, samples=64, wave=64,
+                       sketch_dim=32, seed=0, init="spectral")
+    assert summary["purity"] == 1.0
+    assert summary["n_clusters_recovered"] == 4
+    assert summary["phases"]["local_erm_s"] > 0
+    assert summary["phases"]["aggregate_s"] > 0
+
+
+def test_simulate_logistic_task():
+    summary = simulate(clients=64, clusters=2, dim=4, samples=128, wave=32,
+                       task="logistic", sketch_dim=16, seed=1)
+    assert summary["purity"] >= 0.9
+    assert summary["n_clusters_recovered"] == 2
+
+
+@pytest.mark.slow
+def test_simulate_large_c():
+    """C >= 4k wave-batched simulation (the engine's target regime)."""
+    summary = simulate(clients=4096, clusters=8, dim=16, samples=64,
+                       wave=2048, sketch_dim=64, seed=0)
+    assert summary["purity"] >= 0.99
+    assert summary["n_clusters_recovered"] == 8
