@@ -26,6 +26,7 @@ BENCHES = [
     ("fig2", fig2_logistic.run),
     ("fig3", fig3_clusterpath.run),
     ("fig4", fig4_ifca_comm.run),
+    ("fig4_lm", fig4_ifca_comm.run_lm),
     ("appendix_f", appendix_f_merging.run),
     ("appendix_d", appendix_d_inexact.run),
     ("fig_sep", fig_separability.run),

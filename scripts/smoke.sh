@@ -5,9 +5,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Fast gate first: the full suite minus the @slow large-C engine runs.
 # Deselected: failures already present at the seed commit (c788f4d) —
 # kept visible here so a future fix can re-enable them.
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" \
     --deselect tests/test_dryrun_integration.py::test_dryrun_single_combo \
     --deselect tests/test_federated.py::test_one_shot_aggregate_recovers_clusters \
     --deselect tests/test_federated.py::test_aggregation_improves_or_matches_local \
@@ -17,14 +18,17 @@ PYTHONPATH=src python - <<'PY'
 import benchmarks.run  # imports every benchmark module
 from repro.core import ODCL, get_algorithm, list_algorithms, list_methods
 from repro.core.clustering import is_device_algorithm
+from repro.core.federated_methods import list_federated_methods
 
 assert len(list_algorithms()) >= 6, list_algorithms()
 assert "odcl" in list_methods()
 get_algorithm("kmeans++")
 assert is_device_algorithm(get_algorithm("kmeans-device"))
+assert {"odcl", "ifca", "fedavg", "local-only"} <= set(list_federated_methods())
 print("benchmark driver imports OK;",
       f"{len(list_algorithms())} clustering algorithms,",
-      f"{len(list_methods())} federated methods registered")
+      f"{len(list_methods())} federated methods,",
+      f"{len(list_federated_methods())} LM-scale federated methods registered")
 PY
 
 # reduced large-C simulation: the device aggregation engine end-to-end
@@ -32,3 +36,17 @@ PY
 # cluster mean, one jitted program)
 PYTHONPATH=src python -m repro.launch.simulate \
     --clients 512 --clusters 8 --wave 256 --samples 32 --init spectral
+
+# same federation through the iterative baseline (sketch-assign rounds)
+PYTHONPATH=src python -m repro.launch.simulate \
+    --clients 256 --clusters 4 --wave 128 --samples 32 --init spectral \
+    --method ifca --rounds 3
+
+# reduced deep-model drivers through the FederatedMethod registry:
+# the one-shot round on the device engine, and IFCA's round loop
+PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
+    --clusters 2 --local-steps 4 --post-steps 0 --batch 2 --seq-len 16 \
+    --method odcl --engine device --sketch-dim 32
+PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
+    --clusters 2 --local-steps 3 --batch 2 --seq-len 16 \
+    --method ifca --rounds 2 --warmup-steps 3 --sketch-dim 32

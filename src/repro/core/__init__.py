@@ -34,6 +34,15 @@ Around them:
                   local-SGD train step (no cross-client collectives) and
                   the one-shot clustered aggregation step (clusters
                   sketches through the same registry)
+  federated_methods.py — the LM-scale analogue of methods.py: a
+                  ``FederatedMethod.run(key, state, cfg, batches)``
+                  protocol over ``FederatedState`` pytrees with its own
+                  registry (``register_federated_method``), pre-populated
+                  with ``ODCLFederated`` / ``IFCAFederated`` /
+                  ``FedAvgGlobal`` / ``LocalOnlyFederated`` — what
+                  ``launch/train.py --method`` and ``launch/simulate.py``
+                  dispatch through (exported lazily: it pulls in the
+                  model/launch stack)
 """
 from repro.core.odcl import (
     ODCLConfig,
@@ -119,3 +128,30 @@ __all__ = [
     "list_methods",
     "register_method",
 ]
+
+# LM-scale federated methods — lazy for the same reason engine/ is:
+# federated_methods.py imports federated.py (models, launch.steps), which
+# light consumers of repro.core (theory, clustering, erm) must not pay for.
+_FEDERATED_METHOD_EXPORTS = (
+    "FederatedMethod",
+    "FederatedMethodResult",
+    "ODCLFederated",
+    "IFCAFederated",
+    "FedAvgGlobal",
+    "LocalOnlyFederated",
+    "register_federated_method",
+    "unregister_federated_method",
+    "get_federated_method",
+    "list_federated_methods",
+    "build_federated_method",
+    "cluster_agreement",
+    "params_bytes_per_client",
+)
+__all__ += list(_FEDERATED_METHOD_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _FEDERATED_METHOD_EXPORTS:
+        from repro.core import federated_methods
+        return getattr(federated_methods, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -91,6 +91,26 @@ def _router_invariant_filter(path, leaf) -> bool:
     return not (("moe" in s) and ("w_in" in s or "w_out" in s))
 
 
+def _flat_cluster_means(leaf, onehot, counts):
+    """(K', n) float32 per-cluster mean of one stacked leaf."""
+    flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+    return (onehot.T @ flat) / counts[:, None]
+
+
+def cluster_mean_tree(params, onehot, counts):
+    """Step 3 alone: the (K', ...) per-cluster means of a stacked pytree.
+
+    The server-side representation IFCA-style iterative methods carry
+    between rounds (``core.federated_methods.IFCAFederated``); the
+    one-shot path composes it with the gather-back below."""
+    def mean(leaf):
+        means = _flat_cluster_means(leaf, onehot, counts)
+        return means.reshape((onehot.shape[1],) + leaf.shape[1:]).astype(
+            leaf.dtype)
+
+    return jax.tree_util.tree_map(mean, params)
+
+
 def cluster_average_tree(params, onehot, counts):
     """Steps 3-4 on a stacked parameter pytree: per-cluster masked mean
     of every leaf over the leading client axis, gathered back per client.
@@ -99,8 +119,7 @@ def cluster_average_tree(params, onehot, counts):
     by the host path below and the device engine (``engine/aggregate``)
     so the two stay parity-exact."""
     def cluster_avg(leaf):
-        flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
-        means = (onehot.T @ flat) / counts[:, None]                   # (K', n)
+        means = _flat_cluster_means(leaf, onehot, counts)             # (K', n)
         back = onehot @ means                                         # (C, n)
         return back.reshape(leaf.shape).astype(leaf.dtype)
 

@@ -1,0 +1,476 @@
+"""Unified federated-method API at deep-model scale.
+
+``core/methods.py`` gives the paper's Section-5 cast one interface over
+flat ``(xs, ys)`` federations; this module is the same idea one level
+up, over ``FederatedState`` parameter pytrees — the representation the
+LM-scale drivers (``launch/train.py``, ``launch/simulate.py``) and the
+device aggregation engine operate on:
+
+  ``FederatedMethod.run(key, state, cfg, batches, *, mesh=None)
+      -> FederatedMethodResult``
+
+``state`` carries stacked per-client parameters (leading axis C);
+``cfg`` is the ``ModelConfig`` driving local training (``None`` for
+shallow per-client models, e.g. the wave-batched ridge clients of
+``launch/simulate.py``); ``batches`` yields pytrees whose leaves have
+leading axis C (``None`` when the method runs zero local steps).
+
+Pre-registered methods:
+
+  * ``ODCLFederated``  — Algorithm 1: local ERM phase, then the ONE
+    clustered aggregation round (host or device engine), then optional
+    continued personalized training.  Subsumes the previously hardcoded
+    ``launch/train.py`` flow bit-exactly.
+  * ``IFCAFederated``  — the iterative baseline [Ghosh et al., 2020]
+    lifted from ``core/ifca.py`` onto model pytrees: R rounds of
+    broadcast -> per-client cluster estimate -> local steps -> cluster
+    averaging (``cluster_mean_tree``).  Assignment is either the
+    classic lowest-local-loss rule or nearest-center in JL sketch
+    space (``core.sketch``), which costs sketch_dim floats instead of
+    k forward passes per client per round.
+  * ``FedAvgGlobal``   — R rounds of heterogeneity-blind global
+    averaging (the K'=1 degenerate clustering).
+  * ``LocalOnlyFederated`` — pure local training, zero communication.
+
+``register_federated_method`` / ``get_federated_method`` /
+``list_federated_methods`` mirror the clustering and flat-method
+registries, so new LM-scale methods are drop-in plugins — drivers
+dispatch by name and never grow if/elif ladders.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering.api import get_algorithm
+from repro.core.federated import (
+    FederatedState,
+    _router_invariant_filter,
+    cluster_mean_tree,
+    local_training,
+    one_shot_aggregate,
+)
+from repro.core.sketch import sketch_tree
+from repro.optim import AdamWConfig, adamw_init
+
+
+@dataclasses.dataclass
+class FederatedMethodResult:
+    """What every LM-scale federated method hands back to the driver."""
+    state: FederatedState              # final per-client params/opt state
+    labels: np.ndarray                 # (C,) cluster id per client
+    n_clusters: int
+    comm_rounds: float                 # server<->client round trips consumed
+    comm_bytes: float                  # protocol bytes moved (up + down)
+    round_metrics: list                # one dict per round (losses, churn, ...)
+    meta: dict
+
+
+@runtime_checkable
+class FederatedMethod(Protocol):
+    """A federated method runnable over a ``FederatedState``."""
+    name: str
+
+    def run(self, key, state: FederatedState, cfg, batches: Optional[Iterator],
+            *, mesh=None) -> FederatedMethodResult: ...
+
+
+def params_bytes_per_client(state: FederatedState) -> int:
+    """Bytes of ONE client's model (the unit of comm accounting)."""
+    leaves = jax.tree_util.tree_leaves(state.params)
+    c = max(1, state.n_clients)
+    return sum(l.size // c * l.dtype.itemsize for l in leaves)
+
+
+def cluster_agreement(pred, true) -> float:
+    """Purity of ``pred`` against the hidden clustering ``true`` — the
+    label-agreement metric shared by train.py, simulate.py, and the
+    benchmarks (each predicted cluster votes for its majority truth)."""
+    from collections import Counter
+
+    pred, true = np.asarray(pred), np.asarray(true)
+    total = 0
+    for c in np.unique(pred):
+        total += Counter(true[pred == c]).most_common(1)[0][1]
+    return total / len(true)
+
+
+def _leaf_filter_for(cfg):
+    return (_router_invariant_filter
+            if cfg is not None and getattr(cfg, "is_moe", False) else None)
+
+
+def _require_training_inputs(name: str, cfg, batches, steps: int):
+    if steps > 0 and (cfg is None or batches is None):
+        raise ValueError(
+            f"{name} with local steps > 0 needs a ModelConfig and a batch "
+            "iterator; pass local_steps=0 for shallow aggregate-only runs")
+
+
+# ---------------------------------------------------------------- ODCL
+
+@dataclasses.dataclass
+class ODCLFederated:
+    """Algorithm 1 end-to-end at LM scale (the one-shot tentpole).
+
+    Phase 1: ``local_steps`` per-client optimizer steps (no cross-client
+    collectives).  Phase 2: ``one_shot_aggregate`` — sketch, cluster
+    through the admissible registry (``algorithm``/``k``), per-cluster
+    parameter mean.  Phase 3: ``post_steps`` continued personalized
+    steps.  ``engine='device'`` maps the host Lloyd-family names onto
+    ``kmeans-device`` init options exactly as the legacy train.py flow
+    did; any registered ``DeviceClusteringAlgorithm`` passes through.
+    """
+    algorithm: str = "kmeans++"
+    k: Optional[int] = None
+    algo_options: Optional[dict] = None
+    engine: str = "host"               # host | device | auto
+    sketch_dim: int = 128
+    local_steps: int = 0
+    post_steps: int = 0
+    opt: Optional[AdamWConfig] = None
+    seed: int = 0
+    name: str = "odcl"
+
+    _DEVICE_INIT_OF = {"kmeans": "random", "kmeans++": "kmeans++",
+                       "spectral": "spectral"}
+
+    def _resolve(self):
+        """(algorithm, options) after the legacy device-name mapping."""
+        algorithm, options = self.algorithm, self.algo_options
+        if self.engine == "device" and not callable(
+                getattr(get_algorithm(algorithm), "device_call", None)):
+            if algorithm not in self._DEVICE_INIT_OF:
+                raise ValueError(
+                    f"engine='device' needs a device-capable algorithm "
+                    f"(e.g. kmeans-device) or a Lloyd-family name, "
+                    f"not {algorithm!r}")
+            algorithm = "kmeans-device"
+            options = {"init": self._DEVICE_INIT_OF[self.algorithm],
+                       **(self.algo_options or {})}
+        return algorithm, options
+
+    def run(self, key, state: FederatedState, cfg, batches=None, *,
+            mesh=None) -> FederatedMethodResult:
+        _require_training_inputs(self.name, cfg, batches,
+                                 self.local_steps + self.post_steps)
+        rounds = []
+        if self.local_steps:
+            state, losses = local_training(state, cfg, batches,
+                                           self.local_steps, self.opt)
+            rounds.append({"phase": "local", "steps": self.local_steps,
+                           "loss_first": float(np.mean(losses[0])),
+                           "loss_last": float(np.mean(losses[-1]))})
+
+        algorithm, options = self._resolve()
+        k = self.k if get_algorithm(algorithm).requires_k else None
+        state, labels, info = one_shot_aggregate(
+            state, cfg, algorithm=algorithm, k=k, algo_options=options,
+            engine=self.engine, sketch_dim=self.sketch_dim, seed=self.seed,
+            mesh=mesh)
+        rounds.append({"phase": "aggregate", "engine": info["engine"],
+                       "n_clusters": info["n_clusters"]})
+
+        if self.post_steps:
+            state, losses = local_training(state, cfg, batches,
+                                           self.post_steps, self.opt)
+            rounds.append({"phase": "post", "steps": self.post_steps,
+                           "loss_last": float(np.mean(losses[-1]))})
+
+        bytes_per = params_bytes_per_client(state)
+        # uplink: the sketch plus the full model (steps 3-4 average full
+        # parameters server-side); downlink: the cluster model — same
+        # both-directions accounting as the IFCA rule below
+        comm = state.n_clients * (self.sketch_dim * 4 + 2 * bytes_per)
+        return FederatedMethodResult(
+            state=state, labels=np.asarray(labels),
+            n_clusters=info["n_clusters"], comm_rounds=1.0,
+            comm_bytes=float(comm), round_metrics=rounds,
+            meta={"engine": info["engine"], **info["meta"]})
+
+
+# ---------------------------------------------------------------- IFCA
+
+@dataclasses.dataclass
+class IFCAFederated:
+    """IFCA [Ghosh et al., 2020] on model pytrees — the multi-round
+    baseline the one-shot framework is measured against (Figure 4).
+
+    Per round: the server broadcasts k cluster models; every client
+    estimates its cluster (``assign='loss'``: lowest local loss of the
+    k candidates, the paper's rule; ``assign='sketch'``: nearest
+    cluster model to the client's current parameters in JL sketch
+    space); clients run ``local_steps`` optimizer steps from their
+    cluster's model; the server re-averages within assigned clusters
+    (``cluster_mean_tree``; empty clusters keep their model, as in
+    ``core.ifca``).  ``warmup_steps`` of pure local training before the
+    loop plus ``init='clients'`` reproduces the paper's good-init
+    regime; ``init='perturb'`` starts from the perturbed client mean.
+    """
+    k: int = 2
+    rounds: int = 5
+    local_steps: int = 5
+    warmup_steps: int = 0
+    assign: str = "loss"               # 'loss' | 'sketch'
+    init: str = "perturb"              # 'perturb' | 'clients'
+    init_scale: float = 1e-2
+    sketch_dim: int = 128
+    opt: Optional[AdamWConfig] = None
+    seed: int = 0
+    name: str = "ifca"
+
+    def _theta0(self, key, state: FederatedState):
+        if self.init == "clients":
+            # k clients spread across the stack (distinct under any
+            # contiguous true labeling) seed the k cluster models
+            idx = jnp.asarray(np.linspace(0, state.n_clients - 1, self.k)
+                              .round().astype(np.int32))
+            return jax.tree_util.tree_map(lambda l: l[idx], state.params)
+        if self.init == "perturb":
+            leaves, treedef = jax.tree_util.tree_flatten(state.params)
+            subkeys = jax.random.split(key, len(leaves))
+            out = []
+            for sub, leaf in zip(subkeys, leaves):
+                mean = jnp.mean(leaf, axis=0)
+                noise = self.init_scale * jax.random.normal(
+                    sub, (self.k,) + mean.shape, mean.dtype)
+                out.append(mean[None] + noise)
+            return jax.tree_util.tree_unflatten(treedef, out)
+        raise ValueError(f"unknown init {self.init!r}")
+
+    def _make_assign(self, cfg, leaf_filter):
+        if self.assign == "loss":
+            from repro.models import transformer as tr
+
+            @jax.jit
+            def assign_fn(theta, params_c, batch):
+                def per_client(batch_c):
+                    return jax.vmap(
+                        lambda t: tr.train_loss(t, cfg, batch_c))(theta)
+                losses = jax.vmap(per_client)(batch)             # (C, k)
+                return jnp.argmin(losses, axis=1).astype(jnp.int32)
+            return assign_fn
+        if self.assign == "sketch":
+            skey = jax.random.PRNGKey(self.seed)
+
+            @jax.jit
+            def assign_fn(theta, params_c, batch):
+                sk = jax.vmap(lambda p: sketch_tree(
+                    skey, p, self.sketch_dim, leaf_filter=leaf_filter))
+                s_c, s_k = sk(params_c), sk(theta)               # (C,s),(k,s)
+                d2 = jnp.sum((s_c[:, None] - s_k[None]) ** 2, axis=-1)
+                return jnp.argmin(d2, axis=1).astype(jnp.int32)
+            return assign_fn
+        raise ValueError(f"unknown assign rule {self.assign!r}")
+
+    def run(self, key, state: FederatedState, cfg, batches=None, *,
+            mesh=None) -> FederatedMethodResult:
+        if self.rounds < 1:
+            raise ValueError("IFCA needs rounds >= 1 (there is no "
+                             "assignment without a round)")
+        if self.assign == "loss" and (cfg is None or batches is None):
+            raise ValueError("assign='loss' needs a ModelConfig and batches; "
+                             "use assign='sketch' for shallow states")
+        _require_training_inputs(self.name, cfg, batches,
+                                 self.warmup_steps + self.local_steps)
+        if self.warmup_steps:
+            state, _ = local_training(state, cfg, batches, self.warmup_steps,
+                                      self.opt)
+
+        theta = self._theta0(key, state)
+        assign_fn = self._make_assign(cfg, _leaf_filter_for(cfg))
+        local_step = None
+        if self.local_steps:
+            from repro.launch.steps import make_local_train_step
+            # remat="none" matches local_training (the warmup/ODCL path)
+            local_step = jax.jit(make_local_train_step(cfg, self.opt,
+                                                       remat="none"))
+
+        params, labels, rounds = state.params, None, []
+        for r in range(self.rounds):
+            batch = None
+            if self.assign == "loss":
+                batch = jax.tree_util.tree_map(jnp.asarray, next(batches))
+            new_labels = assign_fn(theta, params, batch)
+            churn = (float(np.mean(np.asarray(new_labels) != labels))
+                     if labels is not None else 1.0)
+            labels = np.asarray(new_labels)
+
+            losses = []
+            if self.local_steps:
+                # clients adopt their estimated cluster's model and
+                # refine it locally before uploading
+                params = jax.tree_util.tree_map(lambda t: t[new_labels],
+                                                theta)
+                opt_state = jax.vmap(adamw_init)(params)
+                for _ in range(self.local_steps):
+                    b = jax.tree_util.tree_map(jnp.asarray, next(batches))
+                    loss, params, opt_state = local_step(params, opt_state, b)
+                    losses.append(float(np.mean(loss)))
+            # local_steps == 0: clients upload their standing models
+            # (e.g. the wave-batched local ERMs of launch/simulate.py)
+            # so the rounds are genuine Lloyd steps in model space —
+            # averaging the broadcast copies back would be a no-op
+
+            onehot = jax.nn.one_hot(new_labels, self.k, dtype=jnp.float32)
+            counts = jnp.sum(onehot, axis=0)                       # (k,)
+            means = cluster_mean_tree(params, onehot,
+                                      jnp.maximum(counts, 1.0))
+            hit = counts > 0
+
+            def keep(mean, prev):
+                mask = hit.reshape((self.k,) + (1,) * (mean.ndim - 1))
+                return jnp.where(mask, mean, prev)
+
+            theta = jax.tree_util.tree_map(keep, means, theta)
+            rounds.append({"round": r, "assign_churn": churn,
+                           "cluster_sizes": np.asarray(counts).tolist(),
+                           "loss_last": losses[-1] if losses else None})
+
+        if not self.local_steps:
+            # each client receives its final cluster's averaged model
+            # (the step-4 downlink; with local refinement the clients'
+            # personalized models already ARE the deliverable)
+            idx = jnp.asarray(labels)
+            params = jax.tree_util.tree_map(lambda t: t[idx], theta)
+        new_state = FederatedState(
+            params=params, opt_state=jax.vmap(adamw_init)(params),
+            n_clients=state.n_clients,
+            step=state.step + self.rounds * self.local_steps)
+        bytes_per = params_bytes_per_client(new_state)
+        if self.assign == "loss":
+            # down: k models per client; up: one trained model per client
+            per_round = state.n_clients * (self.k + 1) * bytes_per
+        else:
+            # up: sketch + trained model; down: the assigned model
+            per_round = state.n_clients * (self.sketch_dim * 4 + 2 * bytes_per)
+        return FederatedMethodResult(
+            state=new_state, labels=labels,
+            n_clusters=int(len(np.unique(labels))),
+            comm_rounds=float(self.rounds),
+            comm_bytes=float(self.rounds * per_round), round_metrics=rounds,
+            meta={"assign": self.assign, "k": self.k,
+                  "warmup_steps": self.warmup_steps})
+
+
+# ------------------------------------------------------------- baselines
+
+@dataclasses.dataclass
+class FedAvgGlobal:
+    """R rounds of global FedAvg — the heterogeneity-blind baseline
+    (every round averages ALL clients into one model, K'=1)."""
+    rounds: int = 5
+    local_steps: int = 5
+    opt: Optional[AdamWConfig] = None
+    name: str = "fedavg"
+
+    def run(self, key, state: FederatedState, cfg, batches=None, *,
+            mesh=None) -> FederatedMethodResult:
+        _require_training_inputs(self.name, cfg, batches, self.local_steps)
+        c = state.n_clients
+        onehot = jnp.ones((c, 1), jnp.float32)
+        counts = jnp.full((1,), float(c))
+        rounds = []
+        for r in range(self.rounds):
+            if self.local_steps:
+                state, losses = local_training(state, cfg, batches,
+                                               self.local_steps, self.opt)
+                rounds.append({"round": r,
+                               "loss_last": float(np.mean(losses[-1]))})
+            mean = cluster_mean_tree(state.params, onehot, counts)
+            params = jax.tree_util.tree_map(
+                lambda m: jnp.broadcast_to(m[0], (c,) + m.shape[1:]), mean)
+            state = FederatedState(params=params,
+                                   opt_state=jax.vmap(adamw_init)(params),
+                                   n_clients=c, step=state.step)
+        bytes_per = params_bytes_per_client(state)
+        return FederatedMethodResult(
+            state=state, labels=np.zeros(c, np.int32), n_clusters=1,
+            comm_rounds=float(self.rounds),
+            comm_bytes=float(self.rounds * c * 2 * bytes_per),
+            round_metrics=rounds, meta={})
+
+
+@dataclasses.dataclass
+class LocalOnlyFederated:
+    """Pure local training — every client keeps its own model (0 rounds)."""
+    local_steps: int = 0
+    opt: Optional[AdamWConfig] = None
+    name: str = "local-only"
+
+    def run(self, key, state: FederatedState, cfg, batches=None, *,
+            mesh=None) -> FederatedMethodResult:
+        rounds = []
+        if self.local_steps:
+            _require_training_inputs(self.name, cfg, batches, self.local_steps)
+            state, losses = local_training(state, cfg, batches,
+                                           self.local_steps, self.opt)
+            rounds.append({"phase": "local",
+                           "loss_last": float(np.mean(losses[-1]))})
+        return FederatedMethodResult(
+            state=state,
+            labels=np.arange(state.n_clients, dtype=np.int32),
+            n_clusters=state.n_clients, comm_rounds=0.0, comm_bytes=0.0,
+            round_metrics=rounds, meta={})
+
+
+# ------------------------------------------------------------- registry
+
+_FEDERATED_METHODS: dict[str, type] = {}
+
+
+def register_federated_method(cls: type, *, name: Optional[str] = None,
+                              overwrite: bool = False) -> type:
+    """Register an LM-scale method under a name. Returns it (decorator-safe)."""
+    key = name if name is not None else getattr(cls, "name", None)
+    if not isinstance(key, str) or not key:
+        key = cls.__name__.lower()
+    if key in _FEDERATED_METHODS and not overwrite:
+        raise ValueError(f"federated method {key!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _FEDERATED_METHODS[key] = cls
+    return cls
+
+
+def unregister_federated_method(name: str) -> None:
+    """Remove a registered method (used by tests/plugins)."""
+    _FEDERATED_METHODS.pop(name, None)
+
+
+def get_federated_method(name: str) -> type:
+    try:
+        return _FEDERATED_METHODS[name]
+    except KeyError:
+        raise KeyError(f"unknown federated method {name!r}; "
+                       f"registered: {sorted(_FEDERATED_METHODS)}") from None
+
+
+def list_federated_methods() -> tuple[str, ...]:
+    return tuple(sorted(_FEDERATED_METHODS))
+
+
+def build_federated_method(name: str, **kwargs: Any):
+    """Construct a registered method from a superset of driver kwargs.
+
+    Drivers (train.py, simulate.py, benchmarks) collect one flat kwargs
+    dict from their flags; this filters it down to the fields the named
+    method actually declares — the registry stays ladder-free and new
+    plugin methods pick up whichever driver flags they name.
+    """
+    cls = get_federated_method(name)
+    if dataclasses.is_dataclass(cls):
+        fields = {f.name for f in dataclasses.fields(cls) if f.init}
+        kwargs = {k: v for k, v in kwargs.items()
+                  if k in fields and v is not None}
+    return cls(**kwargs)
+
+
+for _cls, _name in ((ODCLFederated, "odcl"), (IFCAFederated, "ifca"),
+                    (FedAvgGlobal, "fedavg"),
+                    (LocalOnlyFederated, "local-only")):
+    register_federated_method(_cls, name=_name)
+del _cls, _name

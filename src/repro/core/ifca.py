@@ -48,6 +48,17 @@ def ifca_init_annulus(key, optima, d_min: float, lo_frac: float = 0.2,
     return optima + dirs * radii
 
 
+def per_user_model_losses(theta, xs, ys, loss_fn: Callable):
+    """(m, K) local loss of every broadcast model at every user.
+
+    The cluster-estimate rule of step 2 — argmin over the K columns is
+    the IFCA assignment.  Shared by the flat loop below and mirrored on
+    model pytrees by ``core.federated_methods.IFCAFederated``.
+    """
+    return jax.vmap(lambda x, y: jax.vmap(
+        lambda t: loss_fn(t, x, y))(theta))(xs, ys)
+
+
 @functools.partial(jax.jit, static_argnames=("loss_fn", "grad_fn", "cfg"))
 def ifca(theta0, xs, ys, loss_fn: Callable, grad_fn: Callable, cfg: IFCAConfig):
     """Run IFCA.
@@ -59,10 +70,7 @@ def ifca(theta0, xs, ys, loss_fn: Callable, grad_fn: Callable, cfg: IFCAConfig):
     m = xs.shape[0]
 
     def losses_for(theta):
-        # (m, K) local losses of every model at every user
-        per_user = jax.vmap(lambda x, y: jax.vmap(
-            lambda t: loss_fn(t, x, y))(theta))(xs, ys)
-        return per_user
+        return per_user_model_losses(theta, xs, ys, loss_fn)
 
     def round_fn(theta, _):
         per_user = losses_for(theta)                        # (m, K)

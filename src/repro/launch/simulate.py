@@ -31,6 +31,11 @@ import numpy as np
 
 from repro.core.erm import batched_ridge_erm, logistic_erm
 from repro.core.federated import FederatedState
+from repro.core.federated_methods import (
+    build_federated_method,
+    cluster_agreement,
+    list_federated_methods,
+)
 from repro.optim import adamw_init
 
 
@@ -70,22 +75,17 @@ def _wave_erm(key, optima, labels, *, wave: int, n: int, d: int,
     raise ValueError(f"unknown task {task!r}")  # pragma: no cover - static
 
 
-def _purity(pred: np.ndarray, true: np.ndarray) -> float:
-    from collections import Counter
-
-    total = 0
-    for c in np.unique(pred):
-        total += Counter(true[pred == c]).most_common(1)[0][1]
-    return total / len(true)
-
-
 def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
              wave: int = 4096, task: str = "ridge", sketch_dim: int = 64,
              init: str = "kmeans++", kmeans_iters: int = 50, seed: int = 0,
-             mesh=None) -> dict:
+             method: str = "odcl", rounds: int = 5, mesh=None) -> dict:
     """Generate a K-cluster federation of ``clients`` users, solve the
-    local ERMs in waves, run the device one-shot round, and return a
-    summary dict (per-phase wall clock, recovered clustering quality)."""
+    local ERMs in waves, run any registered federated method over the
+    resulting ``FederatedState`` (default: ODCL's device one-shot
+    round), and return a summary dict (per-phase wall clock, recovered
+    clustering quality).  Iterative methods run with zero per-round
+    local steps — the shallow clients are already at their local ERMs —
+    so IFCA here is pure sketch-assign/re-average rounds."""
     key = jax.random.PRNGKey(seed)
     k_opt, k_data = jax.random.split(key)
     optima = staggered_optima(k_opt, clusters, dim)
@@ -108,25 +108,30 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
                            opt_state=jax.vmap(adamw_init)(params),
                            n_clients=clients)
 
-    from repro.core.engine.aggregate import one_shot_aggregate_device
+    # C=10k+ states stay wholly on device: ODCL runs the jitted engine
+    # round; iterative methods (ifca/fedavg) loop sketch-space rounds
+    fed_method = build_federated_method(
+        method, algorithm="kmeans-device", engine="device", k=clusters,
+        algo_options={"init": init, "iters": kmeans_iters},
+        sketch_dim=sketch_dim, seed=seed, local_steps=0, rounds=rounds,
+        assign="sketch", init="clients")
 
     t1 = time.perf_counter()
-    new_state, labels, info = one_shot_aggregate_device(
-        state, None, algorithm="kmeans-device", k=clusters,
-        algo_options={"init": init, "iters": kmeans_iters},
-        sketch_dim=sketch_dim, seed=seed, mesh=mesh)
-    jax.block_until_ready(new_state.params)
+    res = fed_method.run(jax.random.PRNGKey(seed), state, None, None,
+                         mesh=mesh)
+    jax.block_until_ready(res.state.params)
     t_agg = time.perf_counter() - t1
 
     return {
         "clients": clients, "clusters": clusters, "dim": dim,
         "samples": samples, "wave": wave, "task": task,
-        "sketch_dim": sketch_dim, "seed": seed,
+        "sketch_dim": sketch_dim, "seed": seed, "method": method,
+        "comm_rounds": res.comm_rounds, "comm_bytes": res.comm_bytes,
         "phases": {"local_erm_s": t_erm, "aggregate_s": t_agg,
                    "total_s": t_erm + t_agg},
-        "n_clusters_recovered": info["n_clusters"],
-        "purity": _purity(labels, np.asarray(true_labels)),
-        "meta": info["meta"],
+        "n_clusters_recovered": res.n_clusters,
+        "purity": cluster_agreement(res.labels, np.asarray(true_labels)),
+        "meta": res.meta,
     }
 
 
@@ -144,6 +149,12 @@ def main(argv=None):
     ap.add_argument("--init", choices=("kmeans++", "spectral", "random"),
                     default="kmeans++")
     ap.add_argument("--kmeans-iters", type=int, default=50)
+    ap.add_argument("--method", default="odcl",
+                    choices=list(list_federated_methods()),
+                    help="registered federated method to run over the "
+                         "wave-batched federation")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="communication rounds (ifca / fedavg)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write the summary JSON here")
     args = ap.parse_args(argv)
@@ -152,12 +163,15 @@ def main(argv=None):
         clients=args.clients, clusters=args.clusters, dim=args.dim,
         samples=args.samples, wave=args.wave, task=args.task,
         sketch_dim=args.sketch_dim, init=args.init,
-        kmeans_iters=args.kmeans_iters, seed=args.seed)
+        kmeans_iters=args.kmeans_iters, seed=args.seed,
+        method=args.method, rounds=args.rounds)
     ph = summary["phases"]
     print(f"[simulate] C={summary['clients']} K={summary['clusters']} "
-          f"task={summary['task']} wave={summary['wave']}")
+          f"task={summary['task']} wave={summary['wave']} "
+          f"method={summary['method']} rounds={summary['comm_rounds']:g}")
     print(f"[simulate] local ERMs {ph['local_erm_s']:.2f}s  "
-          f"one-shot round {ph['aggregate_s']:.2f}s")
+          f"server rounds {ph['aggregate_s']:.2f}s "
+          f"({summary['comm_bytes'] / 1e6:.2f}MB moved)")
     print(f"[simulate] recovered K'={summary['n_clusters_recovered']} "
           f"purity={summary['purity']:.3f} "
           f"inertia={summary['meta'].get('inertia', float('nan')):.3g}")

@@ -90,6 +90,22 @@ def make_aggregate_step(cfg: ModelConfig, k: int, sketch_dim: int = 256,
     return aggregate_step
 
 
+def make_eval_batch(stream, *, n_clients: int, batch: int, seq_len: int,
+                    step: int = 999_999) -> dict:
+    """A held-out per-client eval batch from a ``ClusteredTokenStream``.
+
+    Drawn at a step index far beyond any training step so it never
+    collides with the training iterator; shared by train.py and the
+    fig4 LM benchmark (previously duplicated as ``stream_eval``)."""
+    import numpy as np
+
+    toks = np.stack([
+        stream.sample(c, batch, seq_len, step=step)
+        for c in range(n_clients)
+    ])
+    return {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
+
+
 def make_prefill_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
     def prefill_step(params, batch):
         logits, _ = tr.forward(params, cfg, batch, unroll=unroll)

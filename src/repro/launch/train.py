@@ -1,15 +1,27 @@
-"""Federated ODCL training driver.
+"""Federated training driver over the LM-scale method registry.
 
-Runs the paper's protocol at LM scale: per-client local training (no
-cross-client collectives), then ONE clustered aggregation round, then
-optional continued local fine-tuning of the personalized models.
+Runs any registered ``FederatedMethod`` (``core.federated_methods``) on
+a clustered LM federation: ODCL's one-shot protocol (local training, ONE
+clustered aggregation round, optional personalized fine-tuning), the
+iterative IFCA baseline, global FedAvg, or local-only — selected with
+``--method``; new methods registered via ``register_federated_method``
+appear in the flag automatically.
 
 Production: launch one process per host with the production mesh and
 ``--arch <id>``; this container (CPU, 1 device) runs the same driver
 with ``--reduced`` for the end-to-end example.
 
+  # Algorithm 1, host clustering (ODCL-KM++):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --clients 8 --clusters 2 --local-steps 100
+
+  # same protocol, the whole round jitted on-device:
+  PYTHONPATH=src python -m repro.launch.train --reduced \
+      --method odcl --engine device --algo kmeans++
+
+  # the iterative baseline the paper compares against (R rounds):
+  PYTHONPATH=src python -m repro.launch.train --reduced \
+      --method ifca --rounds 5 --local-steps 10 --warmup-steps 40
 """
 from __future__ import annotations
 
@@ -21,19 +33,15 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
-from repro.core.federated import (
-    evaluate_per_client,
-    init_federation,
-    local_training,
-    one_shot_aggregate,
+from repro.core.federated import evaluate_per_client, init_federation
+from repro.core.federated_methods import (
+    build_federated_method,
+    cluster_agreement,
+    list_federated_methods,
 )
-from repro.core.clustering import (
-    get_algorithm,
-    is_device_algorithm,
-    list_algorithms,
-)
-from repro.core.odcl import ODCLConfig
+from repro.core.clustering import list_algorithms
 from repro.data import ClusteredTokenStream, make_lm_batch_iterator
+from repro.launch.steps import make_eval_batch
 from repro.optim import AdamWConfig
 
 
@@ -42,11 +50,21 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized same-family variant")
+    ap.add_argument("--method", default="odcl",
+                    choices=list(list_federated_methods()),
+                    help="registered FederatedMethod to run")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--clusters", type=int, default=2)
     ap.add_argument("--local-steps", type=int, default=100)
     ap.add_argument("--post-steps", type=int, default=20,
-                    help="continued local steps after aggregation")
+                    help="continued local steps after aggregation (odcl)")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="communication rounds (ifca / fedavg)")
+    ap.add_argument("--warmup-steps", type=int, default=0,
+                    help="pure local steps before the round loop (ifca)")
+    ap.add_argument("--ifca-assign", choices=("loss", "sketch"),
+                    default="loss", dest="assign",
+                    help="IFCA cluster-estimate rule")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -65,7 +83,7 @@ def main(argv=None):
         cfg = cfg.reduced(max_vocab=256)
     print(f"arch={cfg.name} d_model={cfg.d_model} L={cfg.n_layers} "
           f"vocab={cfg.vocab_size} clients={args.clients} "
-          f"true_clusters={args.clusters}")
+          f"true_clusters={args.clusters} method={args.method}")
 
     stream = ClusteredTokenStream(
         n_clients=args.clients, n_clusters=args.clusters,
@@ -82,80 +100,35 @@ def main(argv=None):
     opt = AdamWConfig(lr=args.lr, weight_decay=0.0)
     state = init_federation(jax.random.PRNGKey(args.seed), cfg, args.clients)
 
-    # ---- phase 1: local ERM (zero cross-client communication) ----
+    # one flat kwargs superset — build_federated_method keeps only the
+    # fields the chosen method declares (registry stays ladder-free)
+    method = build_federated_method(
+        args.method, algorithm=args.algo, k=args.clusters,
+        engine=args.engine, sketch_dim=args.sketch_dim,
+        local_steps=args.local_steps, post_steps=args.post_steps,
+        rounds=args.rounds, warmup_steps=args.warmup_steps,
+        assign=args.assign, opt=opt, seed=args.seed)
+
     t0 = time.time()
-    state, losses = local_training(state, cfg, it, args.local_steps, opt)
-    print(f"[local] {args.local_steps} steps in {time.time()-t0:.1f}s  "
-          f"loss {np.mean(losses[0]):.4f} -> {np.mean(losses[-1]):.4f}")
+    res = method.run(jax.random.PRNGKey(args.seed), state, cfg, it)
+    elapsed = time.time() - t0
+    for r in res.round_metrics:
+        print(f"[{method.name}] {r}")
+    agreement = cluster_agreement(res.labels, stream.true_labels)
+    print(f"[{method.name}] {elapsed:.1f}s  rounds={res.comm_rounds:g} "
+          f"comm={res.comm_bytes / 1e6:.2f}MB  K'={res.n_clusters} "
+          f"cluster purity={agreement:.3f} labels={res.labels.tolist()}")
 
-    # ---- phase 2: the ONE-SHOT round (Algorithm 1) ----
-    if args.engine == "device":
-        if is_device_algorithm(get_algorithm(args.algo)):
-            # any registered DeviceClusteringAlgorithm passes straight
-            # through (the extension point — see ROADMAP)
-            algorithm, algo_options = args.algo, None
-        else:
-            # convenience: map the host Lloyd-family names onto the
-            # engine's init option
-            init_of = {"kmeans": "random", "kmeans++": "kmeans++",
-                       "spectral": "spectral"}
-            if args.algo not in init_of:
-                raise SystemExit(
-                    f"--engine device needs a device-capable algorithm "
-                    f"(e.g. kmeans-device) or a Lloyd-family name, "
-                    f"not {args.algo!r}")
-            algorithm = "kmeans-device"
-            algo_options = {"init": init_of[args.algo]}
-        state2, labels, info = one_shot_aggregate(
-            state, cfg, algorithm=algorithm, k=args.clusters,
-            algo_options=algo_options, engine="device",
-            sketch_dim=args.sketch_dim, seed=args.seed)
-    else:
-        odcl_cfg = ODCLConfig(algo=args.algo,
-                              k=args.clusters if args.algo != "clusterpath" else None)
-        state2, labels, info = one_shot_aggregate(
-            state, cfg, odcl_cfg, sketch_dim=args.sketch_dim, seed=args.seed)
-    agreement = _cluster_agreement(labels, stream.true_labels)
-    print(f"[one-shot] engine={args.engine} recovered K'={info['n_clusters']} "
-          f"cluster purity={agreement:.3f} labels={labels.tolist()}")
-
-    eval_batch = {"tokens": None}
-    toks, lab = stream_eval(stream, args)
-    eval_batch = {"tokens": toks, "labels": lab}
-    local_eval = evaluate_per_client(state, cfg, eval_batch)
-    agg_eval = evaluate_per_client(state2, cfg, eval_batch)
-    print(f"[eval] local-only loss {local_eval.mean():.4f}  "
-          f"after one-shot {agg_eval.mean():.4f}")
-
-    # ---- phase 3: continued personalized training ----
-    if args.post_steps:
-        state3, post_losses = local_training(state2, cfg, it, args.post_steps,
-                                             opt)
-        post_eval = evaluate_per_client(state3, cfg, eval_batch)
-        print(f"[post] +{args.post_steps} steps -> loss {post_eval.mean():.4f}")
-        state2 = state3
+    eval_batch = make_eval_batch(stream, n_clients=args.clients,
+                                 batch=args.batch, seq_len=args.seq_len)
+    final_eval = evaluate_per_client(res.state, cfg, eval_batch)
+    print(f"[eval] per-client loss {final_eval.mean():.4f} "
+          f"(min {final_eval.min():.4f} max {final_eval.max():.4f})")
 
     if args.ckpt_dir:
-        path = save_checkpoint(args.ckpt_dir, state2.step, state2.params)
+        path = save_checkpoint(args.ckpt_dir, res.state.step, res.state.params)
         print(f"[ckpt] saved {path}")
-    return state2, labels
-
-
-def stream_eval(stream, args):
-    toks = np.stack([
-        stream.sample(c, args.batch, args.seq_len, step=999_999)
-        for c in range(args.clients)
-    ])
-    return toks[:, :, :-1], toks[:, :, 1:]
-
-
-def _cluster_agreement(pred, true) -> float:
-    from collections import Counter
-
-    total = 0
-    for c in np.unique(pred):
-        total += Counter(true[pred == c]).most_common(1)[0][1]
-    return total / len(true)
+    return res.state, res.labels
 
 
 if __name__ == "__main__":

@@ -7,3 +7,14 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def same_partition(a, b) -> bool:
+    """Label vectors agree up to renaming of cluster ids (shared by the
+    engine, engine-property, and federated-method tests)."""
+    a, b = np.asarray(a), np.asarray(b)
+    fwd, bwd = {}, {}
+    for x, y in zip(a, b):
+        if fwd.setdefault(x, y) != y or bwd.setdefault(y, x) != x:
+            return False
+    return True

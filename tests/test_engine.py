@@ -20,6 +20,8 @@ from repro.kernels.kmeans_assign import kmeans_assign_pallas
 from repro.launch.simulate import simulate
 from repro.optim import adamw_init
 
+from conftest import same_partition
+
 
 def make_blobs(seed, k=3, per=12, d=8, sep=12.0, noise=0.3):
     rng = np.random.default_rng(seed)
@@ -31,16 +33,6 @@ def make_blobs(seed, k=3, per=12, d=8, sep=12.0, noise=0.3):
         [c + noise * rng.normal(size=(per, d)) for c in centers])
     labels = np.repeat(np.arange(k), per)
     return pts.astype(np.float32), labels
-
-
-def same_partition(a, b) -> bool:
-    """Label vectors agree up to renaming of cluster ids."""
-    a, b = np.asarray(a), np.asarray(b)
-    fwd, bwd = {}, {}
-    for x, y in zip(a, b):
-        if fwd.setdefault(x, y) != y or bwd.setdefault(y, x) != x:
-            return False
-    return True
 
 
 def blob_state(seed=0, k=3, per=16, d=8):
@@ -229,3 +221,64 @@ def test_simulate_large_c():
                        wave=2048, sketch_dim=64, seed=0)
     assert summary["purity"] >= 0.99
     assert summary["n_clusters_recovered"] == 8
+
+
+# ---------------------------------- degenerate one-shot shapes (ISSUE 3)
+# (the hypothesis-drawn shape/parity properties are in
+# tests/test_engine_properties.py; these fixed degenerate cases run even
+# without the optional hypothesis dependency)
+
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_one_shot_k1_collapses_to_global_mean(engine):
+    pts, _ = make_blobs(3, k=1, per=13, d=5)   # C=13: not a block multiple
+    params = {"theta": jnp.asarray(pts)}
+    state = FederatedState(params=params,
+                           opt_state=jax.vmap(adamw_init)(params),
+                           n_clients=len(pts))
+    new_state, labels, info = one_shot_aggregate(
+        state, None, algorithm="kmeans-device", k=1, sketch_dim=8,
+        engine=engine)
+    assert info["n_clusters"] == 1
+    assert np.all(np.asarray(labels) == 0)
+    np.testing.assert_allclose(
+        np.asarray(new_state.params["theta"]),
+        np.broadcast_to(pts.mean(0), pts.shape), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_one_shot_c_equals_k_is_identity(engine):
+    pts, _ = make_blobs(4, k=5, per=1, d=6, sep=40.0, noise=0.0)
+    params = {"theta": jnp.asarray(pts)}
+    state = FederatedState(params=params,
+                           opt_state=jax.vmap(adamw_init)(params),
+                           n_clients=len(pts))
+    new_state, labels, info = one_shot_aggregate(
+        state, None, algorithm="kmeans-device", k=5, sketch_dim=16,
+        engine=engine)
+    # every client is its own cluster -> averaging changes nothing
+    assert info["n_clusters"] == 5
+    assert len(np.unique(labels)) == 5
+    np.testing.assert_allclose(np.asarray(new_state.params["theta"]), pts,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_one_shot_duplicate_clients_share_label(engine):
+    # two distinct models, each duplicated across many clients: the
+    # sketch rows are duplicates within each group and the recovered
+    # clustering must be exactly the two groups
+    a = np.full((4,), 5.0, np.float32)
+    b = np.full((4,), -5.0, np.float32)
+    pts = np.stack([a] * 7 + [b] * 6)          # C=13, k=2
+    true = np.array([0] * 7 + [1] * 6)
+    params = {"theta": jnp.asarray(pts)}
+    state = FederatedState(params=params,
+                           opt_state=jax.vmap(adamw_init)(params),
+                           n_clients=len(pts))
+    new_state, labels, info = one_shot_aggregate(
+        state, None, algorithm="kmeans-device", k=2, sketch_dim=8,
+        engine=engine)
+    assert info["n_clusters"] == 2
+    assert same_partition(labels, true)
+    np.testing.assert_allclose(np.asarray(new_state.params["theta"]), pts,
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,255 @@
+"""The LM-scale FederatedMethod registry (core/federated_methods.py).
+
+Covers the four contracts ISSUE 3 pins down: registry round-trip,
+ODCLFederated reproducing the pre-refactor train.py flow bit-exactly on
+a reduced arch, IFCAFederated recovering a planted 2-cluster federation,
+and comm-cost accounting (one-shot = 1 round, IFCA = R rounds).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.federated import (
+    FederatedState,
+    init_federation,
+    local_training,
+    one_shot_aggregate,
+)
+from repro.core.federated_methods import (
+    FederatedMethod,
+    FederatedMethodResult,
+    IFCAFederated,
+    LocalOnlyFederated,
+    ODCLFederated,
+    FedAvgGlobal,
+    build_federated_method,
+    cluster_agreement,
+    get_federated_method,
+    list_federated_methods,
+    params_bytes_per_client,
+    register_federated_method,
+    unregister_federated_method,
+)
+from repro.core.odcl import ODCLConfig
+from repro.data import ClusteredTokenStream, make_lm_batch_iterator
+from repro.optim import AdamWConfig, adamw_init
+
+from conftest import same_partition
+
+
+N_CLIENTS, K, BATCH, SEQ = 4, 2, 2, 16
+
+
+def tiny_cfg():
+    return get_config("qwen2_0_5b").reduced(n_layers=1, max_d_model=64,
+                                            max_vocab=64)
+
+
+def make_stream(cfg, seed=0):
+    return ClusteredTokenStream(n_clients=N_CLIENTS, n_clusters=K,
+                                vocab_size=cfg.vocab_size, seed=seed,
+                                branching=4)
+
+
+def make_iter(stream):
+    raw = make_lm_batch_iterator(
+        stream, clients_per_batch=list(range(N_CLIENTS)),
+        per_client_batch=BATCH, seq_len=SEQ)
+    return ({"tokens": t, "labels": l} for t, l in raw)
+
+
+def blob_state(seed=0, k=3, per=5, d=6, sep=25.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d))
+    dists = np.linalg.norm(centers[:, None] - centers[None], axis=-1)
+    np.fill_diagonal(dists, np.inf)
+    centers *= sep / dists.min()
+    pts = np.concatenate(
+        [c + 0.2 * rng.normal(size=(per, d)) for c in centers]
+    ).astype(np.float32)
+    params = {"theta": jnp.asarray(pts)}
+    state = FederatedState(params=params,
+                           opt_state=jax.vmap(adamw_init)(params),
+                           n_clients=len(pts))
+    return state, np.repeat(np.arange(k), per)
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_prepopulated():
+    names = list_federated_methods()
+    assert {"odcl", "ifca", "fedavg", "local-only"} <= set(names)
+    assert get_federated_method("odcl") is ODCLFederated
+    assert get_federated_method("ifca") is IFCAFederated
+    assert get_federated_method("fedavg") is FedAvgGlobal
+    assert get_federated_method("local-only") is LocalOnlyFederated
+
+
+def test_registry_round_trip_and_build():
+    @dataclasses.dataclass
+    class Dummy:
+        local_steps: int = 0
+        name: str = "dummy-fm"
+
+        def run(self, key, state, cfg, batches=None, *, mesh=None):
+            return FederatedMethodResult(
+                state=state, labels=np.zeros(state.n_clients, np.int32),
+                n_clusters=1, comm_rounds=0, comm_bytes=0,
+                round_metrics=[], meta={})
+
+    try:
+        register_federated_method(Dummy, name="dummy-fm")
+        assert "dummy-fm" in list_federated_methods()
+        assert get_federated_method("dummy-fm") is Dummy
+        with pytest.raises(ValueError, match="already registered"):
+            register_federated_method(Dummy, name="dummy-fm")
+        # build_federated_method keeps declared fields, drops the rest
+        m = build_federated_method("dummy-fm", local_steps=3,
+                                   rounds=7, engine="device")
+        assert isinstance(m, Dummy) and m.local_steps == 3
+        assert isinstance(m, FederatedMethod)   # protocol conformance
+        state, _ = blob_state()
+        res = m.run(jax.random.PRNGKey(0), state, None)
+        assert isinstance(res, FederatedMethodResult)
+    finally:
+        unregister_federated_method("dummy-fm")
+    with pytest.raises(KeyError, match="dummy-fm"):
+        get_federated_method("dummy-fm")
+
+
+def test_prepopulated_methods_are_protocol_instances():
+    for name in ("odcl", "ifca", "fedavg", "local-only"):
+        assert isinstance(get_federated_method(name)(), FederatedMethod)
+
+
+# -------------------------------------- ODCL ≡ legacy train.py flow
+
+def test_odcl_federated_matches_legacy_train_flow_bit_exact():
+    """The exact pre-refactor launch/train.py sequence — local_training
+    then one_shot_aggregate(ODCLConfig) — must be reproduced bit-for-bit
+    by ODCLFederated.run on the same batch stream."""
+    cfg = tiny_cfg()
+    opt = AdamWConfig(lr=1e-3, weight_decay=0.0)
+    steps = 6
+
+    # legacy flow (what train.py hardcoded before the registry)
+    stream = make_stream(cfg)
+    it = make_iter(stream)
+    state = init_federation(jax.random.PRNGKey(0), cfg, N_CLIENTS)
+    state, _ = local_training(state, cfg, it, steps, opt)
+    legacy_state, legacy_labels, _ = one_shot_aggregate(
+        state, cfg, ODCLConfig(algo="kmeans++", k=K), sketch_dim=32, seed=0)
+
+    # registry flow
+    stream2 = make_stream(cfg)
+    method = ODCLFederated(algorithm="kmeans++", k=K, sketch_dim=32,
+                           local_steps=steps, opt=opt, seed=0)
+    res = method.run(jax.random.PRNGKey(0),
+                     init_federation(jax.random.PRNGKey(0), cfg, N_CLIENTS),
+                     cfg, make_iter(stream2))
+
+    assert res.comm_rounds == 1
+    np.testing.assert_array_equal(res.labels, legacy_labels)
+    legacy_leaves = jax.tree_util.tree_leaves(legacy_state.params)
+    new_leaves = jax.tree_util.tree_leaves(res.state.params)
+    assert len(legacy_leaves) == len(new_leaves)
+    for a, b in zip(legacy_leaves, new_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------- IFCA planted clusters
+
+# sketch-space assignment compares client parameters directly, which
+# need the same ~120-step separation the one-shot sketch clustering
+# does (see tests/test_federated.py); loss assignment separates sooner
+@pytest.mark.parametrize("assign,warmup", [("loss", 40), ("sketch", 120)])
+def test_ifca_federated_recovers_planted_clusters(assign, warmup):
+    cfg = tiny_cfg()
+    stream = make_stream(cfg)
+    it = make_iter(stream)
+    state = init_federation(jax.random.PRNGKey(0), cfg, N_CLIENTS)
+    method = IFCAFederated(k=K, rounds=2, local_steps=5, warmup_steps=warmup,
+                           init="clients", assign=assign, sketch_dim=32,
+                           opt=AdamWConfig(lr=1e-3, weight_decay=0.0))
+    res = method.run(jax.random.PRNGKey(0), state, cfg, it)
+    assert res.comm_rounds == 2.0
+    assert res.n_clusters == K
+    assert same_partition(res.labels, stream.true_labels)
+    assert cluster_agreement(res.labels, stream.true_labels) == 1.0
+    # personalized models: clients in the same round-final cluster hold
+    # models refined from the same broadcast model
+    assert len(res.round_metrics) == 2
+    assert res.round_metrics[-1]["assign_churn"] <= 0.5
+
+
+def test_ifca_sketch_rounds_on_shallow_state():
+    """cfg=None path (simulate.py): pure sketch-assign/re-average rounds
+    still recover planted blob clusters."""
+    state, true = blob_state(seed=1, k=3, per=5)
+    method = IFCAFederated(k=3, rounds=3, local_steps=0, assign="sketch",
+                           init="clients", sketch_dim=16)
+    res = method.run(jax.random.PRNGKey(0), state, None, None)
+    assert same_partition(res.labels, true)
+    pts = np.asarray(state.params["theta"])
+    theta = np.asarray(res.state.params["theta"])
+    for c in np.unique(res.labels):
+        members = np.where(res.labels == c)[0]
+        # every member holds the cluster model, and that model is the
+        # MEAN of the members' own uploaded ERMs (not a seed client's
+        # raw model — the re-average must actually aggregate)
+        np.testing.assert_allclose(
+            theta[members],
+            np.broadcast_to(pts[members].mean(0), theta[members].shape),
+            rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- comm accounting
+
+def test_comm_accounting_one_shot_vs_iterative():
+    state, _ = blob_state(seed=2, k=2, per=4, d=8)
+    bytes_per = params_bytes_per_client(state)
+    assert bytes_per == 8 * 4                      # d float32 per client
+
+    odcl = ODCLFederated(algorithm="kmeans++", k=2, sketch_dim=16)
+    r = odcl.run(jax.random.PRNGKey(0), blob_state(seed=2, k=2, per=4, d=8)[0],
+                 None)
+    assert r.comm_rounds == 1.0
+    # uplink sketch + model, downlink cluster model — once
+    assert r.comm_bytes == state.n_clients * (16 * 4 + 2 * bytes_per)
+
+    rounds = 4
+    ifca = IFCAFederated(k=2, rounds=rounds, local_steps=0, assign="sketch",
+                         init="clients", sketch_dim=16)
+    r2 = ifca.run(jax.random.PRNGKey(0),
+                  blob_state(seed=2, k=2, per=4, d=8)[0], None)
+    assert r2.comm_rounds == float(rounds)
+    assert r2.comm_bytes == rounds * state.n_clients * (16 * 4 + 2 * bytes_per)
+    assert r2.comm_bytes > r.comm_bytes            # Fig-4 at the byte level
+
+    local = LocalOnlyFederated().run(jax.random.PRNGKey(0),
+                                     blob_state(seed=2, k=2, per=4, d=8)[0],
+                                     None)
+    assert local.comm_rounds == 0.0 and local.comm_bytes == 0.0
+    assert local.n_clusters == state.n_clients
+
+    fedavg = FedAvgGlobal(rounds=3, local_steps=0)
+    r3 = fedavg.run(jax.random.PRNGKey(0),
+                    blob_state(seed=2, k=2, per=4, d=8)[0], None)
+    assert r3.comm_rounds == 3.0 and r3.n_clusters == 1
+    theta = np.asarray(r3.state.params["theta"])
+    np.testing.assert_allclose(theta, np.broadcast_to(theta[0], theta.shape),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_training_methods_require_cfg_and_batches():
+    state, _ = blob_state()
+    with pytest.raises(ValueError, match="local steps"):
+        ODCLFederated(local_steps=5).run(jax.random.PRNGKey(0), state, None)
+    with pytest.raises(ValueError, match="assign='loss'"):
+        IFCAFederated(assign="loss").run(jax.random.PRNGKey(0), state, None)
+    with pytest.raises(ValueError, match="local steps"):
+        FedAvgGlobal(local_steps=2).run(jax.random.PRNGKey(0), state, None)

@@ -1,0 +1,119 @@
+"""Golden regression tests for core/theory.py and the per-algorithm
+admissibility constants.
+
+The Theorem-1 / Table-1 formulas are transcriptions of the paper's
+constants; nothing else in the suite pins their VALUES, so a silently
+dropped factor would pass every behavioural test.  Each golden below is
+hand-derived from the printed formula (derivation in the comment) and
+locked tightly — drift of any coefficient fails here first.
+"""
+import numpy as np
+import pytest
+
+from repro.core import theory
+from repro.core.clustering import get_algorithm
+
+LOG2 = np.log(2.0)
+
+# ProblemConstants used throughout: L=2, mu_F=1, R=1, d=2, G_F=3,
+# N=1, F_star=1/2, beta=2 — chosen so every term of M is non-zero.
+C = theory.ProblemConstants(L=2.0, mu_F=1.0, R=1.0, d=2, G_F=3.0,
+                            N=1.0, F_star=0.5, beta=2.0)
+
+
+def test_constant_M_golden():
+    # t1 = 16*2*(1/2)*(log2+2)/1^2            = 16 (log2 + 2)
+    # t2 = 64*1*2*(log2 + 2 log6 + 3*2)/1     = 128 (log2 + 2 log6 + 6)
+    # t3 = 16*1*1*(log2+2)/1                  = 16 (log2 + 2)
+    # t4 = 2*3 + 16*1*2*(1 + log2 + 2 log6 + 6)
+    by_hand = (16 * (LOG2 + 2)
+               + 128 * (LOG2 + 2 * np.log(6) + 6)
+               + 16 * (LOG2 + 2)
+               + 6 + 32 * (7 + LOG2 + 2 * np.log(6)))
+    assert theory.constant_M(C) == pytest.approx(by_hand, rel=1e-12)
+    assert theory.constant_M(C) == pytest.approx(1768.4472888204873,
+                                                 rel=1e-10)
+
+
+def test_constant_M_seed_constants_golden():
+    # the constants the pre-existing monotonicity test uses — locked
+    c2 = theory.ProblemConstants(L=1.0, mu_F=0.5, R=10.0, d=5, G_F=1.0)
+    assert theory.constant_M(c2) == pytest.approx(436308.9013884954,
+                                                  rel=1e-10)
+
+
+def test_sample_threshold_golden():
+    # rhs = 4 * 10 * 4^2 / (2 - 2*0.5)^2 = 640; n/log n = 640 at n ~ 5513.6
+    n = theory.sample_threshold(M=10.0, alpha=4.0, D=2.0, gamma=0.5)
+    assert n == pytest.approx(5513.580484337553, rel=1e-9)
+    assert n / np.log(n) == pytest.approx(640.0, rel=1e-6)
+
+
+def test_threshold_odcl_cc_golden():
+    # alpha = 4 (100-5)/5 = 76; rhs = 4 M alpha^2 / (D-2g)^2 = 4*76^2/9
+    n = theory.threshold_odcl_cc(M=1.0, m=100, c_min=5, D=4.0, gamma=0.5)
+    assert n == pytest.approx(26107.459284824385, rel=1e-9)
+    assert n / np.log(n) == pytest.approx(4 * 76.0 ** 2 / 9.0, rel=1e-6)
+
+
+def test_threshold_odcl_km_golden():
+    # alpha = 2 + 2 sqrt(100)/5 = 6; rhs = 4*36/9 = 16
+    n = theory.threshold_odcl_km(M=1.0, m=100, c_min=5, D=4.0, gamma=0.5)
+    assert n == pytest.approx(67.36107796577377, rel=1e-9)
+    assert n / np.log(n) == pytest.approx(16.0, rel=1e-6)
+
+
+def test_ifca_comm_rounds_golden():
+    # 8 * 10 / 0.1 * log(2*1/0.01) = 800 log(200)
+    t = theory.ifca_comm_rounds(kappa=10, p=0.1, D=1.0, eps=0.01)
+    assert t == pytest.approx(800.0 * np.log(200.0), rel=1e-12)
+    assert t == pytest.approx(4238.653893238429, rel=1e-10)
+    assert theory.communication_saving(10, 0.1, 1.0, 0.01) == pytest.approx(t)
+
+
+def test_all_for_all_comm_rounds_golden():
+    # x = 100*50/5 = 1000 -> 1000 log 1000
+    t = theory.all_for_all_comm_rounds(100, 50, 5)
+    assert t == pytest.approx(1000.0 * np.log(1000.0), rel=1e-12)
+    assert t == pytest.approx(6907.755278982137, rel=1e-10)
+
+
+def test_mse_bound_theorem1_golden():
+    # t1 = 2 E_k/(n c_k) = 2*2/5000 = 8e-4
+    # t2 = 8*4*3*R^2/(500*5*0.5^2) = 96/625 = 0.1536
+    # t3 = 8*40*R^2/500^2 = 0.00128
+    b = theory.mse_bound_theorem1(C, n=500, K=4, c_k=10, c_min=5,
+                                  E_k=2.0, E_tilde=3.0, gamma=0.5, m=40)
+    assert b == pytest.approx(8e-4 + 0.1536 + 0.00128, rel=1e-12)
+    assert b == pytest.approx(0.15568, rel=1e-10)
+
+
+def test_merge_condition_golden():
+    assert theory.merge_condition(100, 100) == pytest.approx(0.005, rel=1e-12)
+    assert theory.merge_condition(50, 200) == pytest.approx(0.001, rel=1e-12)
+
+
+# ------------------------------------------ Lemma-1/2 admissibility alphas
+
+KMEANS_FAMILY = ("kmeans", "kmeans++", "spectral", "kmeans-device",
+                 "gradient")
+CONVEX_FAMILY = ("convex", "clusterpath")
+
+
+@pytest.mark.parametrize("name", KMEANS_FAMILY)
+def test_lemma2_alpha_kmeans_family(name):
+    # Lemma 2: alpha = 2 + 2 c sqrt(m) / |C_(K)|, c = 1
+    algo = get_algorithm(name)
+    assert algo.admissibility_alpha(100, 5) == pytest.approx(6.0, rel=1e-12)
+    assert algo.admissibility_alpha(64, 4) == pytest.approx(6.0, rel=1e-12)
+    assert algo.admissibility_alpha(400, 10) == pytest.approx(6.0, rel=1e-12)
+    assert algo.admissibility_alpha(900, 10) == pytest.approx(8.0, rel=1e-12)
+
+
+@pytest.mark.parametrize("name", CONVEX_FAMILY)
+def test_lemma1_alpha_convex_family(name):
+    # Lemma 1: alpha = 4 (m - |C_(K)|) / |C_(K)|
+    algo = get_algorithm(name)
+    assert algo.admissibility_alpha(100, 5) == pytest.approx(76.0, rel=1e-12)
+    assert algo.admissibility_alpha(10, 5) == pytest.approx(4.0, rel=1e-12)
+    assert algo.admissibility_alpha(6, 2) == pytest.approx(8.0, rel=1e-12)
