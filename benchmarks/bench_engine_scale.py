@@ -1,10 +1,16 @@
-"""Aggregation-engine scaling: C-sweep of the device one-shot round.
+"""Aggregation-engine scaling: per-algorithm C-sweep of the device
+one-shot round.
 
-For each federation size C the full pipeline of ``launch/simulate.py``
-runs (wave-batched local ERMs -> sketch -> kmeans-device -> cluster
-mean, all on device) and the per-phase wall clock plus peak memory are
-recorded to ``BENCH_engine.json`` — the perf trajectory the next
-optimization PRs measure against.
+For each (algorithm, federation size C) cell the full pipeline of
+``launch/simulate.py`` runs (wave-batched local ERMs -> sketch ->
+device clustering -> cluster mean, all on device) and the per-phase
+wall clock plus peak memory are recorded to ``BENCH_engine.json`` —
+the perf trajectory the next optimization PRs measure against.
+
+The kmeans family sweeps to C=16k; the convex family stops at C=4k
+(its complete fusion graph is E = C(C-1)/2 edges, so the AMA state is
+O(E * sketch_dim) — the convex rows run a narrower sketch to keep the
+dual block in memory).
 """
 from __future__ import annotations
 
@@ -16,9 +22,14 @@ import jax
 from benchmarks.common import emit
 from repro.launch.simulate import simulate
 
-C_GRID = (256, 1024, 4096, 16384)
 CLUSTERS = 8
 OUT = "BENCH_engine.json"
+# (algorithm, C grid, simulate overrides)
+SWEEPS = (
+    ("kmeans-device", (256, 1024, 4096, 16384), {}),
+    ("convex-device", (256, 1024, 4096),
+     {"sketch_dim": 32, "cc_iters": 200}),
+)
 
 
 def _peak_bytes() -> dict:
@@ -35,16 +46,19 @@ def _peak_bytes() -> dict:
     }
 
 
-def run(c_grid=C_GRID, out: str = OUT):
+def run(sweeps=SWEEPS, out: str = OUT):
     rows = []
-    for c in c_grid:
-        summary = simulate(clients=c, clusters=CLUSTERS, wave=4096)
-        row = {**summary, **_peak_bytes()}
-        rows.append(row)
-        ph = summary["phases"]
-        emit(f"bench_engine/C{c}", ph["aggregate_s"] * 1e6,
-             f"erm_s={ph['local_erm_s']:.2f};purity={summary['purity']:.3f};"
-             f"rss={row['peak_rss_bytes']}")
+    for algorithm, c_grid, overrides in sweeps:
+        for c in c_grid:
+            summary = simulate(clients=c, clusters=CLUSTERS, wave=4096,
+                               algorithm=algorithm, **overrides)
+            row = {**summary, **_peak_bytes()}
+            rows.append(row)
+            ph = summary["phases"]
+            emit(f"bench_engine/{algorithm}/C{c}", ph["aggregate_s"] * 1e6,
+                 f"erm_s={ph['local_erm_s']:.2f};"
+                 f"purity={summary['purity']:.3f};"
+                 f"rss={row['peak_rss_bytes']}")
     report = {"bench": "engine_scale", "backend": jax.default_backend(),
               "clusters": CLUSTERS, "rows": rows}
     with open(out, "w") as f:

@@ -1,24 +1,22 @@
 """Figure 3 (Appendix E.3): exact-lambda ODCL-CC vs the practical
 clusterpath variant — MSE and cluster counts vs n (linear regression,
-K=4)."""
+K=4).  Drives the unified ``Method.fit`` API (``methods.ODCL``); the
+legacy ``ODCLConfig`` shim keeps its own coverage in
+``tests/test_registry_and_methods.py``."""
 from __future__ import annotations
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
-from repro.core import ODCLConfig, batched_ridge_erm, odcl
+from repro.core import ODCL, batched_ridge_erm
 from repro.core.clustering import lambda_interval
 from repro.data import make_linear_regression_federation
 
 N_GRID = (50, 200, 800)
 RUNS = 2
 M_USERS = 100
-
-
-def nmse(models, fed):
-    opt = fed.optima[fed.true_labels]
-    return float(np.mean(np.sum((models - opt) ** 2, 1) / np.sum(opt ** 2, 1)))
 
 
 def run():
@@ -30,17 +28,21 @@ def run():
             fed = make_linear_regression_federation(seed=seed, m=M_USERS, K=4, n=n)
             local = np.asarray(batched_ridge_erm(
                 jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
+            erm = lambda xs, ys: local    # noqa: E731 - precomputed ERMs
+            key = jax.random.PRNGKey(seed)
             # paper E.1 selection: bounds (17) on the true clustering;
             # uniform-in-interval when non-empty else the upper bound
             lo, hi = lambda_interval(local, fed.true_labels)
             lam = 0.5 * (lo + hi) if lo < hi else lo
-            exact = odcl(local, ODCLConfig(algo="convex", lam=lam,
-                                           cc_iters=250))
+            exact = ODCL(algorithm="convex",
+                         options={"lam": lam, "iters": 250}).fit(
+                key, fed.xs, fed.ys, erm)
             path, us = timed(
-                odcl, local, ODCLConfig(algo="clusterpath", n_lambdas=8,
-                                        cc_iters=250), iters=1)
-            ee.append(nmse(exact.user_models, fed))
-            pe.append(nmse(path.user_models, fed))
+                ODCL(algorithm="clusterpath",
+                     options={"n_lambdas": 8, "iters": 250}).fit,
+                key, fed.xs, fed.ys, erm, iters=1)
+            ee.append(exact.nmse(fed.optima, fed.true_labels))
+            pe.append(path.nmse(fed.optima, fed.true_labels))
             ek.append(exact.n_clusters)
             pk.append(path.n_clusters)
         exact_curve.append(float(np.mean(ee)))

@@ -5,6 +5,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Device convex-clustering gate: the newest engine path fails fast and
+# loudly before the multi-minute full suite below.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" \
+    tests/test_device_convex.py
+
 # Fast gate first: the full suite minus the @slow large-C engine runs.
 # Deselected: failures already present at the seed commit (c788f4d) —
 # kept visible here so a future fix can re-enable them.
@@ -20,10 +25,12 @@ from repro.core import ODCL, get_algorithm, list_algorithms, list_methods
 from repro.core.clustering import is_device_algorithm
 from repro.core.federated_methods import list_federated_methods
 
-assert len(list_algorithms()) >= 6, list_algorithms()
+assert len(list_algorithms()) >= 8, list_algorithms()
 assert "odcl" in list_methods()
 get_algorithm("kmeans++")
 assert is_device_algorithm(get_algorithm("kmeans-device"))
+assert is_device_algorithm(get_algorithm("convex-device"))
+assert is_device_algorithm(get_algorithm("clusterpath-device"))
 assert {"odcl", "ifca", "fedavg", "local-only"} <= set(list_federated_methods())
 print("benchmark driver imports OK;",
       f"{len(list_algorithms())} clustering algorithms,",
@@ -42,11 +49,22 @@ PYTHONPATH=src python -m repro.launch.simulate \
     --clients 256 --clusters 4 --wave 128 --samples 32 --init spectral \
     --method ifca --rounds 3
 
+# the convex family on the same federation (K-free exact-lambda ODCL-CC
+# through the device AMA + fusion-graph components, one jitted round)
+PYTHONPATH=src python -m repro.launch.simulate \
+    --clients 128 --clusters 4 --wave 64 --samples 32 \
+    --algorithm convex --sketch-dim 32
+
 # reduced deep-model drivers through the FederatedMethod registry:
 # the one-shot round on the device engine, and IFCA's round loop
 PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
     --clusters 2 --local-steps 4 --post-steps 0 --batch 2 --seq-len 16 \
     --method odcl --engine device --sketch-dim 32
+
+# same reduced train run, but clustered by the device convex family
+PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
+    --clusters 2 --local-steps 4 --post-steps 0 --batch 2 --seq-len 16 \
+    --method odcl --engine device --algo convex --sketch-dim 32
 PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
     --clusters 2 --local-steps 3 --batch 2 --seq-len 16 \
     --method ifca --rounds 2 --warmup-steps 3 --sketch-dim 32

@@ -23,6 +23,7 @@ from repro.core.clustering.api import (
     ClusteringResult,
     DeviceClusteringAlgorithm,
     DeviceClusteringResult,
+    device_twin,
     get_algorithm,
     is_device_algorithm,
     list_algorithms,
@@ -50,6 +51,7 @@ __all__ = [
     "ClusteringResult",
     "DeviceClusteringAlgorithm",
     "DeviceClusteringResult",
+    "device_twin",
     "get_algorithm",
     "is_device_algorithm",
     "list_algorithms",

@@ -28,6 +28,10 @@ from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine.device_convex import (
+    device_clusterpath,
+    device_convex_cluster,
+)
 from repro.core.engine.device_kmeans import device_kmeans
 
 from repro.core.clustering.admissible import (
@@ -100,6 +104,22 @@ def is_device_algorithm(algo) -> bool:
     return callable(getattr(algo, "device_call", None))
 
 
+def device_twin(algo) -> Optional["DeviceClusteringAlgorithm"]:
+    """The registered ``"<name>-device"`` twin of a host algorithm.
+
+    The engine auto-dispatch (``federated.one_shot_aggregate``) upgrades
+    host-only names whose twin exists — ``"convex"`` runs as
+    ``"convex-device"`` under ``engine='auto'|'device'`` — while names
+    without a twin keep their host path.  Returns ``None`` when ``algo``
+    has no device-capable twin.
+    """
+    name = getattr(algo, "name", None)
+    if not isinstance(name, str) or name.endswith("-device"):
+        return None
+    twin = _REGISTRY.get(f"{name}-device")
+    return twin if twin is not None and is_device_algorithm(twin) else None
+
+
 # --------------------------------------------------------------- adapters
 
 def _as_result(labels, centers, meta) -> ClusteringResult:
@@ -149,31 +169,113 @@ class DeviceLloydFamily:
     Same admissibility as the host Lloyd family (Lemma 2: K-means-type
     objective, init-agnostic bound); the init is an option rather than a
     separate registry entry (``init='kmeans++' | 'spectral' | 'random'``).
+    ``restarts`` keeps the best-inertia clustering of that many vmapped
+    inits; ``batch_m`` switches to minibatch Lloyd updates (values >= m
+    reduce to full Lloyd bit-exactly).
     """
     name: str = "kmeans-device"
     requires_k: bool = True
 
     def device_call(self, key, points, *, k: Optional[int] = None,
                     iters: int = 100, init: str = "kmeans++",
+                    restarts: int = 1, batch_m: Optional[int] = None,
                     **_: Any) -> DeviceClusteringResult:
         if k is None:
             raise ValueError(f"{self.name!r} requires k")
-        res = device_kmeans(key, points, k, iters=iters, init=init)
+        res = device_kmeans(key, points, k, iters=iters, init=init,
+                            restarts=restarts, batch_m=batch_m)
+        # report the EFFECTIVE restart count: full-batch spectral seeding
+        # is deterministic, so device_kmeans collapses its restarts to 1
+        full_batch = batch_m is None or batch_m >= points.shape[0]
+        eff_restarts = 1 if (init == "spectral" and full_batch) else restarts
         return DeviceClusteringResult(
             labels=res.labels, centers=res.centers,
-            meta={"inertia": res.inertia, "n_iter": res.n_iter})
+            meta={"inertia": res.inertia, "n_iter": res.n_iter,
+                  "restarts": jnp.asarray(eff_restarts, jnp.int32)})
 
     def __call__(self, key, points, *, k: Optional[int] = None,
                  iters: int = 100, init: str = "kmeans++",
+                 restarts: int = 1, batch_m: Optional[int] = None,
                  **_: Any) -> ClusteringResult:
         res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
-                               iters=iters, init=init)
+                               iters=iters, init=init, restarts=restarts,
+                               batch_m=batch_m)
         return _as_result(res.labels, res.centers,
                           {"inertia": float(res.meta["inertia"]),
-                           "n_iter": int(res.meta["n_iter"])})
+                           "n_iter": int(res.meta["n_iter"]),
+                           "restarts": int(res.meta["restarts"])})
 
     def admissibility_alpha(self, m: int, c_min: int) -> float:
         return alpha_kmeans(m, c_min)
+
+
+def _device_convex_result(res) -> DeviceClusteringResult:
+    return DeviceClusteringResult(
+        labels=res.labels, centers=res.centers,
+        meta={"lam": res.lam, "n_clusters": res.n_clusters,
+              "ama_iters": res.n_iter})
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConvexClustering:
+    """Device twin of ``"convex"`` (``engine.device_convex``): the AMA
+    fixed point, fusion-graph component extraction, and cluster means
+    all stay jnp — the engine inlines it into the jitted one-shot round.
+    Lemma 1 admissibility is the host family's (same objective)."""
+    name: str = "convex-device"
+    requires_k: bool = False
+
+    def device_call(self, key, points, *, k: Optional[int] = None,
+                    lam: Optional[float] = None, iters: int = 400,
+                    weights=None, merge_tol=None,
+                    **_: Any) -> DeviceClusteringResult:
+        del k
+        return _device_convex_result(device_convex_cluster(
+            key, points, lam=lam, iters=iters, weights=weights,
+            merge_tol=merge_tol))
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 lam: Optional[float] = None, iters: int = 400,
+                 weights=None, merge_tol=None, **_: Any) -> ClusteringResult:
+        res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
+                               lam=lam, iters=iters, weights=weights,
+                               merge_tol=merge_tol)
+        return _as_result(res.labels, res.centers,
+                          {"lam": float(res.meta["lam"]),
+                           "n_clusters": int(res.meta["n_clusters"])})
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float:
+        return alpha_convex_clustering(m, c_min)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceClusterpath:
+    """Device twin of ``"clusterpath"``: the lambda ladder advances as
+    one batched AMA solve (the batched group-prox kernel) and the
+    plurality plateau selects the clustering — K-free, on device."""
+    name: str = "clusterpath-device"
+    requires_k: bool = False
+
+    def device_call(self, key, points, *, k: Optional[int] = None,
+                    n_lambdas: int = 10, iters: int = 300,
+                    merge_tol=None, **_: Any) -> DeviceClusteringResult:
+        del k
+        return _device_convex_result(device_clusterpath(
+            key, points, n_lambdas=n_lambdas, iters=iters,
+            merge_tol=merge_tol))
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 n_lambdas: int = 10, iters: int = 300,
+                 merge_tol=None, **_: Any) -> ClusteringResult:
+        res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
+                               n_lambdas=n_lambdas, iters=iters,
+                               merge_tol=merge_tol)
+        return _as_result(res.labels, res.centers,
+                          {"lam": float(res.meta["lam"]),
+                           "n_clusters": int(res.meta["n_clusters"])})
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float:
+        return alpha_convex_clustering(m, c_min)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,6 +390,8 @@ for _algo in (
     GradientClustering(),
     ConvexClustering(),
     Clusterpath(),
+    DeviceConvexClustering(),
+    DeviceClusterpath(),
 ):
     register_algorithm(_algo)
 del _algo

@@ -11,12 +11,23 @@ in this subsystem:
           the client axis, producing the device-resident (C, sketch_dim)
           matrix (communication: sketch_dim floats per client).
   step 2  (the server clusters {theta_hat_i} with an admissible
-          algorithm) — ``engine/device_kmeans.py``: a Lloyd loop whose
+          algorithm) — one module per admissible family:
+          ``engine/device_kmeans.py`` is a Lloyd loop whose
           assign+accumulate is the fused Pallas kernel
           ``kernels/kmeans_assign.py`` (jnp oracle / interpret mode
-          off-TPU), exposed to the registry as ``"kmeans-device"`` via
-          the ``DeviceClusteringAlgorithm`` protocol variant
-          (``clustering/api.py``) that takes and returns jnp arrays.
+          off-TPU), hardened for huge C with multi-restart
+          (``restarts=r`` vmapped inits, best inertia wins) and
+          minibatch updates (``batch_m``); ``engine/device_convex.py``
+          is the convex/clusterpath family — the AMA fixed point as a
+          ``lax.while_loop`` over the ``kernels/group_prox.py`` dual
+          prox (batched over the lambda ladder), with fusion-graph
+          cluster extraction by iterated min-label propagation.  Both
+          register through the ``DeviceClusteringAlgorithm`` protocol
+          variant (``clustering/api.py``) that takes and returns jnp
+          arrays, as ``"kmeans-device"`` and ``"convex-device"`` /
+          ``"clusterpath-device"``; the host names ``"convex"`` /
+          ``"clusterpath"`` auto-upgrade to their twins under
+          ``engine='auto'|'device'``.
   step 3  (the server averages models within each recovered cluster)
           — the masked one-hot mean inside ``one_shot_aggregate_device``,
           fused into the same jitted program as steps 1-2.
@@ -24,15 +35,30 @@ in this subsystem:
           ``onehot @ means``; under a mesh both 3 and 4 lower to psums
           over the ``data``-sharded client axis.
 
-The host-side path (``core/clustering/kmeans.py`` +
+The host-side path (``core/clustering/{kmeans,convex}.py`` +
 ``federated.one_shot_aggregate(engine="host")``) is kept as the parity
 oracle; ``federated.one_shot_aggregate`` auto-dispatches here whenever
-the chosen algorithm is device-capable.
+the chosen algorithm is device-capable or has a device twin.
+
+Extension point (worked example: the convex family): implement a
+normal registry algorithm that additionally offers ``device_call(key,
+jnp_points, *, k, **options) -> DeviceClusteringResult`` — all-jnp and
+traceable, like ``device_convex_cluster`` — and ``register_algorithm``
+it; register it under ``"<host-name>-device"`` and the host name
+auto-upgrades too.
 """
+from repro.core.engine.device_convex import (
+    DeviceConvexResult,
+    device_clusterpath,
+    device_convex_cluster,
+)
 from repro.core.engine.device_kmeans import DeviceKMeansResult, device_kmeans
 
 __all__ = [
+    "DeviceConvexResult",
     "DeviceKMeansResult",
+    "device_clusterpath",
+    "device_convex_cluster",
     "device_kmeans",
     "one_shot_aggregate_device",
 ]

@@ -1,0 +1,236 @@
+"""Device-resident convex clustering — ODCL-CC inside the jitted round.
+
+The host solver (``core/clustering/convex.py``) already runs its AMA
+iteration on device, but extracts clusters with a NumPy union-find and
+chooses lambdas with host-side probing — every one-shot aggregation
+through the convex family therefore round-trips the sketch matrix
+through host memory.  This module is the all-jnp, traceable port:
+
+  * ``_ama_fixed_point`` — the Chi & Lange (2015) AMA splitting as a
+    ``lax.while_loop`` with a tolerance/max-iter schedule, batched over
+    a leading lambda axis so the clusterpath ladder advances all L
+    solves in lock-step.  The inner dual prox is the group-prox Pallas
+    kernel (``kernels.ops.group_ball_proj_batched``: compiled on TPU,
+    interpret mode under ``REPRO_FORCE_PALLAS=1``, jnp oracle
+    elsewhere).
+  * ``_fusion_components`` — cluster extraction as iterated min-label
+    propagation over the fusion graph (||u_i - u_j|| <= merge_tol),
+    converging in graph-diameter steps; no host union-find.
+  * ``device_convex_cluster`` / ``device_clusterpath`` — fixed-lambda
+    ODCL-CC and the K-free lambda-ladder variant.  Everything returned
+    is device-resident; labels are fusion-graph root ids in [0, m) and
+    ``centers`` is root-indexed (one row per potential cluster, zero
+    rows for non-roots), so the result plugs straight into the engine's
+    one-hot cluster mean without dynamic shapes.
+
+The registry adapters exposing these as ``"convex-device"`` /
+``"clusterpath-device"`` live in ``core/clustering/api.py``; the host
+solver remains the parity oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+class DeviceConvexResult(NamedTuple):
+    """Device-resident result (every field is a jnp array)."""
+    labels: jnp.ndarray       # (m,) int32 fusion-graph root id per point
+    centers: jnp.ndarray      # (m, d) root-indexed cluster means of u
+    u: jnp.ndarray            # (m, d) final fused representatives
+    n_clusters: jnp.ndarray   # () int32 number of distinct roots
+    n_iter: jnp.ndarray       # () int32 AMA iterations actually run
+    lam: jnp.ndarray          # () float32 fusion penalty used
+
+
+def _edges(m: int):
+    """Static upper-triangular edge list of the complete graph."""
+    iu, ju = np.triu_indices(m, k=1)
+    return jnp.asarray(iu, jnp.int32), jnp.asarray(ju, jnp.int32)
+
+
+def _ama_fixed_point(a, lams, weights, *, iters: int, tol: float):
+    """Batched AMA: a (m, d), lams (L,), weights (E,) -> u (L, m, d).
+
+    All L solves advance together inside one ``lax.while_loop``; the
+    loop stops when every solve's dual update falls below the
+    scale-aware tolerance or after ``iters`` iterations.  Mirrors the
+    host ``_ama_solve`` update exactly (same eta = 1/m, same prox).
+    """
+    m, d = a.shape
+    i_idx, j_idx = _edges(m)
+    e = i_idx.shape[0]
+    L = lams.shape[0]
+    eta = 1.0 / m
+    radius = lams[:, None] * weights[None, :]              # (L, E)
+    thresh = tol * (1.0 + jnp.max(jnp.abs(a)))
+
+    def u_of(nu):
+        delta = jnp.zeros((L, m, d), jnp.float32)
+        delta = delta.at[:, i_idx].add(nu).at[:, j_idx].add(-nu)
+        return a[None] + delta
+
+    def cond(carry):
+        _, it, moved = carry
+        return (it < iters) & (moved > thresh)
+
+    def body(carry):
+        nu, it, _ = carry
+        u = u_of(nu)
+        grad = u[:, i_idx] - u[:, j_idx]                   # (L, E, d)
+        new_nu = kops.group_ball_proj_batched(nu - eta * grad, radius)
+        # max dual step, rescaled by 1/eta to the primal's units
+        moved = jnp.max(jnp.abs(new_nu - nu)) / eta
+        return new_nu, it + 1, moved
+
+    nu0 = jnp.zeros((L, e, d), jnp.float32)
+    nu, n_iter, _ = jax.lax.while_loop(
+        cond, body, (nu0, jnp.array(0, jnp.int32), jnp.array(jnp.inf)))
+    return u_of(nu), n_iter
+
+
+def _fusion_components(u, merge_tol):
+    """Connected components of the fusion graph as min-label propagation.
+
+    Each step every point adopts the smallest label among its fusion
+    neighbours (||u_i - u_j|| <= merge_tol, self included); the loop
+    reaches the component-min fixed point in graph-diameter steps.
+    """
+    m = u.shape[0]
+    d2 = kops.pairwise_sqdist(u, u)
+    adj = d2 <= merge_tol * merge_tol          # diag is 0 => self included
+
+    def cond(carry):
+        _, changed = carry
+        return changed
+
+    def body(carry):
+        lab, _ = carry
+        neigh = jnp.min(jnp.where(adj, lab[None, :], m), axis=1)
+        new = jnp.minimum(lab, neigh).astype(jnp.int32)
+        return new, jnp.any(new != lab)
+
+    labels, _ = jax.lax.while_loop(
+        cond, body, (jnp.arange(m, dtype=jnp.int32), jnp.array(True)))
+    return labels
+
+
+def _default_merge_tol(u):
+    """Host parity: max(1e-6, 1e-3 * diameter of the fused u's)."""
+    diam = jnp.max(jnp.linalg.norm(u - jnp.mean(u, axis=0, keepdims=True),
+                                   axis=1)) + 1e-12
+    return jnp.maximum(1e-6, 1e-3 * diam)
+
+
+def _root_indexed_centers(u, labels):
+    """(m, d) per-root cluster means + (m,) member counts of u's fusion
+    components — static shapes, zero rows for non-root ids.  Segment
+    scatter-adds, O(m d): an (m, m) one-hot contraction here would
+    dominate peak memory once the clusterpath vmaps this over L rungs."""
+    m, d = u.shape
+    sums = jnp.zeros((m, d), jnp.float32).at[labels].add(u)
+    counts = jnp.zeros((m,), jnp.float32).at[labels].add(1.0)
+    centers = sums / jnp.maximum(counts, 1.0)[:, None]
+    return centers, counts
+
+
+def _extract(u, lam, n_iter, merge_tol) -> DeviceConvexResult:
+    tol = _default_merge_tol(u) if merge_tol is None else merge_tol
+    labels = _fusion_components(u, tol)
+    centers, counts = _root_indexed_centers(u, labels)
+    return DeviceConvexResult(
+        labels=labels, centers=centers, u=u,
+        n_clusters=jnp.sum(counts > 0).astype(jnp.int32),
+        n_iter=jnp.asarray(n_iter, jnp.int32),
+        lam=jnp.asarray(lam, jnp.float32))
+
+
+def _min_pairwise_dist(a):
+    d2 = kops.pairwise_sqdist(a, a)
+    m = a.shape[0]
+    off = jnp.where(jnp.eye(m, dtype=bool), jnp.inf, d2)
+    return jnp.sqrt(jnp.min(off))
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def device_convex_cluster(key, points, *, lam=None, iters: int = 400,
+                          tol: float = 1e-7, weights=None,
+                          merge_tol=None) -> DeviceConvexResult:
+    """Fixed-lambda sum-of-norms clustering, fully on device.
+
+    ``lam=None`` reproduces the host default (the upper recovery bound
+    (17) of the all-singletons clustering, min pairwise distance over
+    2(m-1)) as a traced value.  ``key`` is unused (the solver is
+    deterministic) but kept for the ``device_call`` protocol signature.
+    """
+    del key
+    a = jnp.asarray(points, jnp.float32)
+    m, d = a.shape
+    e = m * (m - 1) // 2
+    if e == 0:          # single client: nothing to fuse
+        lam0 = jnp.asarray(1e-3 if lam is None else lam, jnp.float32)
+        return _extract(a, lam0, jnp.array(0, jnp.int32), merge_tol)
+    if lam is None:
+        lam = _min_pairwise_dist(a) / (2.0 * (m - 1))
+    lam = jnp.asarray(lam, jnp.float32)
+    w = (jnp.ones((e,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    u, n_iter = _ama_fixed_point(a, lam[None], w, iters=iters, tol=tol)
+    return _extract(u[0], lam, n_iter, merge_tol)
+
+
+@functools.partial(jax.jit, static_argnames=("n_lambdas", "iters"))
+def device_clusterpath(key, points, *, n_lambdas: int = 10,
+                       iters: int = 300, tol: float = 1e-7,
+                       merge_tol=None) -> DeviceConvexResult:
+    """K-free lambda-ladder convex clustering, fully on device.
+
+    A ladder of ``n_lambdas`` equidistant penalties (the host sweep's
+    spacing) spans the singleton recovery bound (17) up to the
+    complete-graph fusion regime (lam ~ 2 max_i ||a_i - abar|| / m,
+    above the uniform-weight full-fusion threshold); the batched AMA
+    advances
+    every rung in lock-step (one (L, E, d) dual block through the
+    batched group-prox kernel) and the clustering recovered by the most
+    rungs wins (plurality plateau, K' > 1 breaking ties) — the
+    device analogue of the host clusterpath's rule (b).  The host
+    probe-and-verify refinement (rule (a), the interval check (17))
+    stays host-side; parity tests compare recovered partitions, not the
+    selection diagnostics.
+    """
+    del key
+    a = jnp.asarray(points, jnp.float32)
+    m, d = a.shape
+    e = m * (m - 1) // 2
+    if e == 0:
+        return _extract(a, jnp.float32(1e-3), jnp.array(0, jnp.int32),
+                        merge_tol)
+    lam_lo = jnp.maximum(_min_pairwise_dist(a) / (2.0 * (m - 1)), 1e-8)
+    centred = a - jnp.mean(a, axis=0, keepdims=True)
+    lam_hi = jnp.maximum(
+        2.0 * jnp.max(jnp.linalg.norm(centred, axis=1)) / m, lam_lo * 10.0)
+    lams = jnp.linspace(lam_lo, lam_hi, n_lambdas).astype(jnp.float32)
+    w = jnp.ones((e,), jnp.float32)
+    u, n_iter = _ama_fixed_point(a, lams, w, iters=iters, tol=tol)
+
+    def extract_one(u_l):
+        tol_l = (_default_merge_tol(u_l) if merge_tol is None
+                 else jnp.asarray(merge_tol, jnp.float32))
+        labels_l = _fusion_components(u_l, tol_l)
+        centers_l, counts_l = _root_indexed_centers(u_l, labels_l)
+        return labels_l, centers_l, jnp.sum(counts_l > 0)
+
+    labels_L, centers_L, ncl = jax.vmap(extract_one)(u)     # (L, ...)
+    plurality = jnp.sum(ncl[None, :] == ncl[:, None], axis=1)
+    sel = jnp.argmax(plurality * 2 + (ncl > 1))
+    return DeviceConvexResult(
+        labels=labels_L[sel], centers=centers_L[sel], u=u[sel],
+        n_clusters=ncl[sel].astype(jnp.int32),
+        n_iter=jnp.asarray(n_iter, jnp.int32),
+        lam=lams[sel])

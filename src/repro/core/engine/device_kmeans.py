@@ -11,6 +11,19 @@ iteration the only materialized state is the (k, d) sums / (k,) counts
 accumulator, so the loop scales to C >> 1k sketch rows and stays fully
 traceable inside the jitted one-shot round (``engine/aggregate.py``).
 
+Two huge-C hardening knobs on top of the plain loop:
+
+  * ``restarts=r`` — run r independent inits (vmapped over restart
+    keys) and keep the best-inertia clustering.  The restart-key fan
+    always includes the caller's key itself, so ``restarts=r`` inertia
+    is monotonically <= the single-restart run for the same key — the
+    guard against kmeans++ D^2 seeding's merge/split local optima.
+  * ``batch_m=b`` — minibatch Lloyd: every iteration assigns and
+    re-accumulates a without-replacement sample of b sketch rows
+    instead of all m (the final labels/inertia are still computed on
+    the full data).  ``batch_m >= m`` (or ``None``) takes the full-Lloyd
+    path bit-exactly.
+
 Everything returned is device-resident (no NumPy boundary); the
 registry adapter that exposes this loop as the ``kmeans-device``
 algorithm lives in ``core/clustering/api.py``.
@@ -18,7 +31,7 @@ algorithm lives in ``core/clustering/api.py``.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,37 +47,41 @@ class DeviceKMeansResult(NamedTuple):
     n_iter: jnp.ndarray     # () Lloyd iterations actually run
 
 
-@functools.partial(jax.jit, static_argnames=("k", "iters", "init"))
-def device_kmeans(key, points, k: int, iters: int = 50,
-                  init: str = "kmeans++", tol: float = 1e-8) -> DeviceKMeansResult:
-    """Lloyd's algorithm with the fused assign+accumulate kernel.
-
-    Mirrors ``clustering.kmeans.kmeans`` exactly (same inits, same
-    early-freeze update rule) so that identical (key, points, k, init)
-    produce identical center trajectories — the parity tests rely on
-    this.  The difference is purely mechanical: the per-iteration
-    reduction never builds the (m, k) one-hot, and the result stays on
-    device.
-    """
+def _init_centers(key, points, k: int, init: str):
     # local import: clustering.api registers the adapter for this loop,
     # so a module-level import here would be circular
     from repro.core.clustering.kmeans import kmeans_plus_plus_init, spectral_init
 
-    points = points.astype(jnp.float32)
-    m, d = points.shape
+    m, _ = points.shape
     if init == "kmeans++":
-        centers = kmeans_plus_plus_init(key, points, k)
-    elif init == "spectral":
-        centers = spectral_init(points, k)
-    elif init == "random":
+        return kmeans_plus_plus_init(key, points, k)
+    if init == "spectral":
+        return spectral_init(points, k)
+    if init == "random":
         sel = jax.random.choice(key, m, (k,), replace=False)
-        centers = points[sel]
-    else:  # pragma: no cover - guarded by static arg
-        raise ValueError(f"unknown init {init!r}")
+        return points[sel]
+    raise ValueError(f"unknown init {init!r}")  # pragma: no cover - static
 
-    def body(carry, _):
+
+def _lloyd(key, points, k: int, iters: int, init: str, tol: float,
+           batch_m: Optional[int]) -> DeviceKMeansResult:
+    """One Lloyd run.  ``batch_m=None`` is the full (PR-2 bit-exact)
+    path; otherwise each iteration updates from a fresh without-
+    replacement sample of ``batch_m`` rows."""
+    m, d = points.shape
+    centers = _init_centers(key, points, k, init)
+    # the init consumes ``key`` exactly as the full path always did;
+    # minibatch sampling draws from a fold so full-Lloyd stays bit-exact
+    iter_keys = jax.random.split(jax.random.fold_in(key, 0x6d62), iters)
+
+    def body(carry, it_key):
         centers, done, it = carry
-        _, sums, counts = kops.kmeans_assign(points, centers)
+        if batch_m is None:
+            batch = points
+        else:
+            sel = jax.random.choice(it_key, m, (batch_m,), replace=False)
+            batch = points[sel]
+        _, sums, counts = kops.kmeans_assign(batch, centers)
         means = sums / jnp.maximum(counts, 1.0)[:, None]
         new_centers = jnp.where(counts[:, None] > 0, means, centers)
         moved = jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1))
@@ -73,8 +90,8 @@ def device_kmeans(key, points, k: int, iters: int = 50,
         return (centers, new_done, it + jnp.where(done, 0, 1)), None
 
     (centers, _, n_iter), _ = jax.lax.scan(
-        body, (centers, jnp.array(False), jnp.array(0, jnp.int32)), None,
-        length=iters)
+        body, (centers, jnp.array(False), jnp.array(0, jnp.int32)),
+        iter_keys)
 
     labels, sums, counts = kops.kmeans_assign(points, centers)
     # inertia from the accumulator instead of an (m, k) distance matrix:
@@ -86,3 +103,37 @@ def device_kmeans(key, points, k: int, iters: int = 50,
     return DeviceKMeansResult(labels=labels, centers=centers,
                               inertia=jnp.maximum(inertia, 0.0),
                               n_iter=n_iter)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "init",
+                                             "restarts", "batch_m"))
+def device_kmeans(key, points, k: int, iters: int = 50,
+                  init: str = "kmeans++", tol: float = 1e-8,
+                  restarts: int = 1,
+                  batch_m: Optional[int] = None) -> DeviceKMeansResult:
+    """Lloyd's algorithm with the fused assign+accumulate kernel.
+
+    With ``restarts=1`` and full batches this mirrors
+    ``clustering.kmeans.kmeans`` exactly (same inits, same early-freeze
+    update rule) so that identical (key, points, k, init) produce
+    identical center trajectories — the parity tests rely on this.
+    ``restarts=r`` vmaps r inits (the caller's key first, then r-1
+    splits) and selects the lowest final inertia; ``batch_m`` samples
+    that many rows per update (values >= m reduce to full Lloyd
+    bit-exactly).
+    """
+    points = points.astype(jnp.float32)
+    m, d = points.shape
+    if batch_m is not None and batch_m >= m:
+        batch_m = None                      # full Lloyd, bit-exact
+    if init == "spectral" and batch_m is None:
+        restarts = 1    # spectral seeding ignores the key: every restart
+        #                 would be the identical run, pure wasted compute
+    run = functools.partial(_lloyd, points=points, k=k, iters=iters,
+                            init=init, tol=tol, batch_m=batch_m)
+    if restarts <= 1:
+        return run(key)
+    keys = jnp.concatenate([key[None], jax.random.split(key, restarts - 1)])
+    stacked = jax.vmap(lambda kk: run(kk))(keys)
+    best = jnp.argmin(stacked.inertia)
+    return jax.tree_util.tree_map(lambda x: x[best], stacked)

@@ -26,7 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.clustering.api import get_algorithm, is_device_algorithm
+from repro.core.clustering.api import (
+    device_twin,
+    get_algorithm,
+    is_device_algorithm,
+)
 from repro.core.odcl import ODCLConfig, run_clustering
 from repro.core.sketch import sketch_tree
 from repro.launch.steps import make_local_train_step
@@ -143,11 +147,14 @@ def one_shot_aggregate(state: FederatedState, cfg: Optional[ModelConfig],
 
     ``engine`` selects the execution path: ``"auto"`` (default) runs the
     whole round on device via ``engine.one_shot_aggregate_device``
-    whenever the resolved algorithm is device-capable, and falls back to
-    the host path otherwise; ``"host"``/``"device"`` force one path.
-    ``info["sketches"]`` (the full (C, sketch_dim) host copy) is only
-    populated with ``return_sketches=True`` so large-C runs don't pay
-    the transfer.  Returns (new_state, labels, info).
+    whenever the resolved algorithm is device-capable — including
+    host-only names with a registered ``"<name>-device"`` twin
+    (``"convex"`` / ``"clusterpath"`` upgrade to their device ports) —
+    and falls back to the host path otherwise; ``"host"``/``"device"``
+    force one path.  ``info["sketches"]`` (the full (C, sketch_dim)
+    host copy) is only populated with ``return_sketches=True`` so
+    large-C runs don't pay the transfer.  Returns (new_state, labels,
+    info).
     """
     if engine not in ("auto", "host", "device"):
         raise ValueError(f"engine must be auto|host|device, got {engine!r}")
@@ -160,11 +167,13 @@ def one_shot_aggregate(state: FederatedState, cfg: Optional[ModelConfig],
         assert_separable = odcl_cfg.assert_separable
         cluster_seed = odcl_cfg.seed
     algo = get_algorithm(algorithm)
-    if engine == "device" and not is_device_algorithm(algo):
+    dev_algo = algo if is_device_algorithm(algo) else device_twin(algo)
+    if engine == "device" and dev_algo is None:
         raise ValueError(
             f"engine='device' needs a device-capable algorithm, but "
-            f"{algo.name!r} is host-only (try 'kmeans-device')")
-    use_device = engine != "host" and is_device_algorithm(algo)
+            f"{algo.name!r} is host-only with no registered "
+            f"'{algo.name}-device' twin (try 'kmeans-device')")
+    use_device = engine != "host" and dev_algo is not None
     if use_device and assert_separable:
         if engine == "device":
             raise ValueError("assert_separable requires engine='host' (the "
@@ -174,7 +183,7 @@ def one_shot_aggregate(state: FederatedState, cfg: Optional[ModelConfig],
         from repro.core.engine.aggregate import one_shot_aggregate_device
 
         return one_shot_aggregate_device(
-            state, cfg, algorithm=algo, k=k, algo_options=algo_options,
+            state, cfg, algorithm=dev_algo, k=k, algo_options=algo_options,
             sketch_dim=sketch_dim, seed=seed, cluster_seed=cluster_seed,
             mesh=mesh, return_sketches=return_sketches)
 

@@ -46,7 +46,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.clustering.api import get_algorithm
+from repro.core.clustering.api import (
+    device_twin,
+    get_algorithm,
+    is_device_algorithm,
+)
 from repro.core.federated import (
     FederatedState,
     _router_invariant_filter,
@@ -140,18 +144,27 @@ class ODCLFederated:
                        "spectral": "spectral"}
 
     def _resolve(self):
-        """(algorithm, options) after the legacy device-name mapping."""
+        """(algorithm, options) after the legacy device-name mapping.
+
+        The Lloyd-family host names map onto ``kmeans-device`` with the
+        matching ``init`` option; names with a registered
+        ``"<name>-device"`` twin (convex, clusterpath) pass through
+        unchanged — ``one_shot_aggregate`` upgrades them itself.
+        """
         algorithm, options = self.algorithm, self.algo_options
-        if self.engine == "device" and not callable(
-                getattr(get_algorithm(algorithm), "device_call", None)):
-            if algorithm not in self._DEVICE_INIT_OF:
-                raise ValueError(
-                    f"engine='device' needs a device-capable algorithm "
-                    f"(e.g. kmeans-device) or a Lloyd-family name, "
-                    f"not {algorithm!r}")
-            algorithm = "kmeans-device"
-            options = {"init": self._DEVICE_INIT_OF[self.algorithm],
-                       **(self.algo_options or {})}
+        if self.engine == "device":
+            algo = get_algorithm(algorithm)
+            if not is_device_algorithm(algo):
+                if algorithm in self._DEVICE_INIT_OF:
+                    algorithm = "kmeans-device"
+                    options = {"init": self._DEVICE_INIT_OF[self.algorithm],
+                               **(self.algo_options or {})}
+                elif device_twin(algo) is None:
+                    raise ValueError(
+                        f"engine='device' needs a device-capable algorithm "
+                        f"(e.g. kmeans-device), a Lloyd-family name, or a "
+                        f"name with a registered '-device' twin, "
+                        f"not {algorithm!r}")
         return algorithm, options
 
     def run(self, key, state: FederatedState, cfg, batches=None, *,

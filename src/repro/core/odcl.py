@@ -55,9 +55,9 @@ class ODCLConfig:
         if self.algo in ("kmeans", "kmeans++", "spectral", "gradient",
                          "kmeans-device"):
             return {"iters": self.kmeans_iters}
-        if self.algo == "convex":
+        if self.algo in ("convex", "convex-device"):
             return {"lam": self.lam, "iters": self.cc_iters}
-        if self.algo == "clusterpath":
+        if self.algo in ("clusterpath", "clusterpath-device"):
             return {"n_lambdas": self.n_lambdas, "iters": self.cc_iters}
         return {}                    # externally registered algorithms
 

@@ -1,13 +1,22 @@
 """Pallas TPU kernel: row-wise L2-ball projection (group prox).
 
-The AMA solver for convex clustering (repro.core.clustering.convex)
-projects every edge's dual variable onto the ball of radius lambda each
-iteration: for E = m(m-1)/2 edges and sketch dim d this is an (E, d)
+The AMA solver for convex clustering (repro.core.clustering.convex and
+its device twin repro.core.engine.device_convex) projects every edge's
+dual variable onto the ball of radius lambda each iteration: for
+E = m(m-1)/2 edges and sketch dim d this is an (E, d)
 row-normalization — memory bound, so we tile rows through VMEM in
 (be, d) blocks and fuse the norm + rescale.
 
   grid = (E/be,)
   V tile: (be, d) VMEM    radius tile: (be,)    out: (be, d)
+
+The batched variant below runs the same projection over a leading batch
+axis — the lambda-ladder sweep of the device clusterpath advances all L
+solves in lock-step, so its dual state is (L, E, d) with a per-(l, e)
+radius.  The grid grows a batch dimension; edge tiles keep the same
+(be, d) VMEM footprint and E is padded to a multiple of ``be`` exactly
+as in the unbatched kernel (pad radius 1.0 => pad rows pass through
+unscaled and are sliced off).
 """
 from __future__ import annotations
 
@@ -46,6 +55,38 @@ def group_ball_proj_pallas(v, radius, *, be: int = 512, interpret: bool = False)
         interpret=interpret,
     )(vp, rp)
     return out[:e]
+
+
+def _batched_proj_kernel(v_ref, r_ref, o_ref):
+    v = v_ref[0].astype(jnp.float32)                      # (be, d)
+    r = r_ref[0].astype(jnp.float32)                      # (be,)
+    n = jnp.sqrt(jnp.sum(v * v, axis=1))                  # (be,)
+    scale = jnp.where(n > r, r / jnp.maximum(n, 1e-30), 1.0)
+    o_ref[0] = v * scale[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("be", "interpret"))
+def group_ball_proj_batched_pallas(v, radius, *, be: int = 512,
+                                   interpret: bool = False):
+    """Batched row-wise ball projection: v (b, e, d), radius (b, e)."""
+    b, e, d = v.shape
+    radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (b, e))
+    be = min(be, _rup(e, 8))
+    ep = _rup(e, be)
+    vp = jnp.pad(v, ((0, 0), (0, ep - e), (0, 0)))
+    rp = jnp.pad(radius, ((0, 0), (0, ep - e)), constant_values=1.0)
+    out = pl.pallas_call(
+        _batched_proj_kernel,
+        grid=(b, ep // be),
+        in_specs=[
+            pl.BlockSpec((1, be, d), lambda l, i: (l, i, 0)),
+            pl.BlockSpec((1, be), lambda l, i: (l, i)),
+        ],
+        out_specs=pl.BlockSpec((1, be, d), lambda l, i: (l, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ep, d), jnp.float32),
+        interpret=interpret,
+    )(vp, rp)
+    return out[:, :e]
 
 
 def _rup(x: int, mult: int) -> int:

@@ -15,7 +15,10 @@ import jax
 from repro.kernels import ref
 from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
-from repro.kernels.group_prox import group_ball_proj_pallas
+from repro.kernels.group_prox import (
+    group_ball_proj_batched_pallas,
+    group_ball_proj_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_pallas
 
 # Force-enable pallas-in-interpret-mode everywhere (slow; tests only).
@@ -51,6 +54,15 @@ def group_ball_proj(v, radius):
     if _FORCE_PALLAS:
         return group_ball_proj_pallas(v, radius, interpret=True)
     return ref.group_ball_proj(v, radius)
+
+
+def group_ball_proj_batched(v, radius):
+    """Batched ball projection (b,e,d) — the lambda-ladder dual prox."""
+    if _on_tpu():
+        return group_ball_proj_batched_pallas(v, radius)
+    if _FORCE_PALLAS:
+        return group_ball_proj_batched_pallas(v, radius, interpret=True)
+    return ref.group_ball_proj_batched(v, radius)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None):

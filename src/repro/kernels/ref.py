@@ -51,6 +51,20 @@ def group_ball_proj(v: jnp.ndarray, radius) -> jnp.ndarray:
     return v * scale
 
 
+def group_ball_proj_batched(v: jnp.ndarray, radius) -> jnp.ndarray:
+    """Batched row-wise ball projection: v (b, e, d), radius (b, e).
+
+    The lambda-ladder AMA sweep of the device clusterpath advances every
+    solve in lock-step, so all L dual blocks project at once.
+    """
+    v = v.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(v * v, axis=2, keepdims=True))      # (b, e, 1)
+    radius = jnp.broadcast_to(
+        jnp.asarray(radius, jnp.float32), v.shape[:2])[..., None]
+    scale = jnp.where(norms > radius, radius / jnp.maximum(norms, 1e-30), 1.0)
+    return v * scale
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                     scale: float | None = None):
     """Reference attention: q (b,h,sq,dh), k/v (b,hkv,skv,dh) with GQA.

@@ -29,6 +29,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.clustering import (
+    device_twin,
+    get_algorithm,
+    is_device_algorithm,
+    lambda_interval,
+    list_algorithms,
+)
 from repro.core.erm import batched_ridge_erm, logistic_erm
 from repro.core.federated import FederatedState
 from repro.core.federated_methods import (
@@ -77,15 +84,26 @@ def _wave_erm(key, optima, labels, *, wave: int, n: int, d: int,
 
 def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
              wave: int = 4096, task: str = "ridge", sketch_dim: int = 64,
-             init: str = "kmeans++", kmeans_iters: int = 50, seed: int = 0,
-             method: str = "odcl", rounds: int = 5, mesh=None) -> dict:
+             algorithm: str = "kmeans-device", init: str = "kmeans++",
+             kmeans_iters: int = 50, restarts: int = 1, cc_iters: int = 300,
+             seed: int = 0, method: str = "odcl", rounds: int = 5,
+             mesh=None) -> dict:
     """Generate a K-cluster federation of ``clients`` users, solve the
     local ERMs in waves, run any registered federated method over the
     resulting ``FederatedState`` (default: ODCL's device one-shot
     round), and return a summary dict (per-phase wall clock, recovered
     clustering quality).  Iterative methods run with zero per-round
     local steps — the shallow clients are already at their local ERMs —
-    so IFCA here is pure sketch-assign/re-average rounds."""
+    so IFCA here is pure sketch-assign/re-average rounds.
+
+    ``algorithm`` selects the admissible clustering family: the Lloyd
+    device loop by default (``init``/``kmeans_iters``/``restarts``
+    apply), or the convex family — ``convex``/``convex-device`` runs
+    the paper's E.1 exact-lambda ODCL-CC (the recovery bounds (17) on
+    the true clustering are a host-side driver setup pass over the
+    local models; the aggregation round itself stays one jitted device
+    program), ``clusterpath``/``clusterpath-device`` the K-free ladder.
+    """
     key = jax.random.PRNGKey(seed)
     k_opt, k_data = jax.random.split(key)
     optima = staggered_optima(k_opt, clusters, dim)
@@ -108,11 +126,24 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
                            opt_state=jax.vmap(adamw_init)(params),
                            n_clients=clients)
 
+    if algorithm.startswith("convex"):
+        # paper E.1 exact-lambda selection: recovery bounds (17) on the
+        # true clustering (the JL sketch is near-isometric, so the
+        # theta-space midpoint lands inside the sketch-space interval)
+        lo, hi = lambda_interval(np.asarray(thetas), np.asarray(true_labels))
+        lam = 0.5 * (lo + hi) if lo < hi else lo
+        algo_options = {"lam": lam, "iters": cc_iters}
+    elif algorithm.startswith("clusterpath"):
+        algo_options = {"iters": cc_iters}
+    else:
+        algo_options = {"init": init, "iters": kmeans_iters,
+                        "restarts": restarts}
+
     # C=10k+ states stay wholly on device: ODCL runs the jitted engine
     # round; iterative methods (ifca/fedavg) loop sketch-space rounds
     fed_method = build_federated_method(
-        method, algorithm="kmeans-device", engine="device", k=clusters,
-        algo_options={"init": init, "iters": kmeans_iters},
+        method, algorithm=algorithm, engine="device", k=clusters,
+        algo_options=algo_options,
         sketch_dim=sketch_dim, seed=seed, local_steps=0, rounds=rounds,
         assign="sketch", init="clients")
 
@@ -126,6 +157,7 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         "clients": clients, "clusters": clusters, "dim": dim,
         "samples": samples, "wave": wave, "task": task,
         "sketch_dim": sketch_dim, "seed": seed, "method": method,
+        "algorithm": algorithm, "restarts": restarts,
         "comm_rounds": res.comm_rounds, "comm_bytes": res.comm_bytes,
         "phases": {"local_erm_s": t_erm, "aggregate_s": t_agg,
                    "total_s": t_erm + t_agg},
@@ -133,6 +165,17 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         "purity": cluster_agreement(res.labels, np.asarray(true_labels)),
         "meta": res.meta,
     }
+
+
+def _device_runnable_algorithms() -> list:
+    """Registry names the device engine can actually run: device-capable
+    algorithms, names with a registered '-device' twin, and the Lloyd
+    host names ODCLFederated maps onto kmeans-device inits."""
+    lloyd = {"kmeans", "kmeans++", "spectral"}
+    return [n for n in list_algorithms()
+            if n in lloyd
+            or is_device_algorithm(get_algorithm(n))
+            or device_twin(get_algorithm(n)) is not None]
 
 
 def main(argv=None):
@@ -146,9 +189,20 @@ def main(argv=None):
                     help="clients generated+solved per vmap wave")
     ap.add_argument("--task", choices=("ridge", "logistic"), default="ridge")
     ap.add_argument("--sketch-dim", type=int, default=64)
+    ap.add_argument("--algorithm", default="kmeans-device",
+                    choices=_device_runnable_algorithms(),
+                    help="admissible clustering family for the one-shot "
+                         "round (device-runnable names only); convex/"
+                         "clusterpath (and their -device twins) run the "
+                         "K-free ODCL-CC path on device")
     ap.add_argument("--init", choices=("kmeans++", "spectral", "random"),
                     default="kmeans++")
     ap.add_argument("--kmeans-iters", type=int, default=50)
+    ap.add_argument("--restarts", type=int, default=1,
+                    help="multi-restart Lloyd: keep the best-inertia "
+                         "clustering of this many vmapped inits")
+    ap.add_argument("--cc-iters", type=int, default=300,
+                    help="max AMA iterations for the convex family")
     ap.add_argument("--method", default="odcl",
                     choices=list(list_federated_methods()),
                     help="registered federated method to run over the "
@@ -162,12 +216,14 @@ def main(argv=None):
     summary = simulate(
         clients=args.clients, clusters=args.clusters, dim=args.dim,
         samples=args.samples, wave=args.wave, task=args.task,
-        sketch_dim=args.sketch_dim, init=args.init,
-        kmeans_iters=args.kmeans_iters, seed=args.seed,
+        sketch_dim=args.sketch_dim, algorithm=args.algorithm,
+        init=args.init, kmeans_iters=args.kmeans_iters,
+        restarts=args.restarts, cc_iters=args.cc_iters, seed=args.seed,
         method=args.method, rounds=args.rounds)
     ph = summary["phases"]
     print(f"[simulate] C={summary['clients']} K={summary['clusters']} "
           f"task={summary['task']} wave={summary['wave']} "
+          f"algo={summary['algorithm']} "
           f"method={summary['method']} rounds={summary['comm_rounds']:g}")
     print(f"[simulate] local ERMs {ph['local_erm_s']:.2f}s  "
           f"server rounds {ph['aggregate_s']:.2f}s "

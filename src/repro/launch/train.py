@@ -15,9 +15,14 @@ with ``--reduced`` for the end-to-end example.
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --clients 8 --clusters 2 --local-steps 100
 
-  # same protocol, the whole round jitted on-device:
+  # same protocol, the whole round jitted on-device (add --restarts /
+  # --batch-m for multi-restart or minibatch Lloyd at huge C):
   PYTHONPATH=src python -m repro.launch.train --reduced \
-      --method odcl --engine device --algo kmeans++
+      --method odcl --engine device --algo kmeans++ --restarts 4
+
+  # ODCL-CC on-device: K-free convex clustering in the jitted round
+  PYTHONPATH=src python -m repro.launch.train --reduced \
+      --method odcl --engine device --algo convex
 
   # the iterative baseline the paper compares against (R rounds):
   PYTHONPATH=src python -m repro.launch.train --reduced \
@@ -69,10 +74,21 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--algo", default="kmeans++",
-                    choices=list(list_algorithms()))
+                    choices=list(list_algorithms()),
+                    help="admissible clustering algorithm; with --engine "
+                         "device the Lloyd names map onto kmeans-device "
+                         "and convex/clusterpath onto their -device twins")
     ap.add_argument("--engine", choices=("host", "device"), default="host",
                     help="device = run the whole one-shot round jitted "
                          "on-device (engine.one_shot_aggregate_device)")
+    ap.add_argument("--restarts", type=int, default=1,
+                    help="multi-restart Lloyd for the device kmeans "
+                         "family: vmap this many inits and keep the "
+                         "best-inertia clustering")
+    ap.add_argument("--batch-m", type=int, default=None,
+                    help="minibatch Lloyd: sample this many sketch rows "
+                         "per iteration (device kmeans family; >= C runs "
+                         "full Lloyd bit-exactly)")
     ap.add_argument("--sketch-dim", type=int, default=128)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -100,11 +116,26 @@ def main(argv=None):
     opt = AdamWConfig(lr=args.lr, weight_decay=0.0)
     state = init_federation(jax.random.PRNGKey(args.seed), cfg, args.clients)
 
+    algo_options = {}
+    if args.restarts > 1:
+        algo_options["restarts"] = args.restarts
+    if args.batch_m is not None:
+        algo_options["batch_m"] = args.batch_m
+    if algo_options and (args.engine != "device"
+                         or args.algo.startswith(("convex", "clusterpath"))):
+        # the registry adapters swallow unknown options, so say it loudly
+        # rather than let the knobs silently no-op
+        print(f"[warn] {sorted(algo_options)} only apply to the device "
+              f"kmeans family; ignored for --engine {args.engine} "
+              f"--algo {args.algo}")
+        algo_options = {}
+
     # one flat kwargs superset — build_federated_method keeps only the
     # fields the chosen method declares (registry stays ladder-free)
     method = build_federated_method(
         args.method, algorithm=args.algo, k=args.clusters,
         engine=args.engine, sketch_dim=args.sketch_dim,
+        algo_options=algo_options or None,
         local_steps=args.local_steps, post_steps=args.post_steps,
         rounds=args.rounds, warmup_steps=args.warmup_steps,
         assign=args.assign, opt=opt, seed=args.seed)

@@ -1,0 +1,257 @@
+"""Device convex-clustering validation: host/device AMA parity on
+planted-cluster sketches, batched group-prox kernel block boundaries,
+the K-free device clusterpath, engine dispatch for the convex names,
+and the zero-host-sketch-transfer contract of the jitted convex round."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustering import (
+    convex_clustering,
+    device_twin,
+    get_algorithm,
+    is_device_algorithm,
+    lambda_interval,
+    list_algorithms,
+)
+from repro.core.engine import device_clusterpath, device_convex_cluster
+from repro.core.federated import FederatedState, one_shot_aggregate
+from repro.kernels import ref
+from repro.kernels.group_prox import group_ball_proj_batched_pallas
+from repro.launch.simulate import simulate
+from repro.optim import adamw_init
+
+from conftest import same_partition
+
+
+def make_blobs(seed, k=3, per=10, d=6, sep=30.0, noise=0.1):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d))
+    dists = np.linalg.norm(centers[:, None] - centers[None], axis=-1)
+    np.fill_diagonal(dists, np.inf)
+    centers *= sep / dists.min()
+    pts = np.concatenate(
+        [c + noise * rng.normal(size=(per, d)) for c in centers])
+    labels = np.repeat(np.arange(k), per)
+    return pts.astype(np.float32), labels
+
+
+def interval_lambda(pts, labels):
+    lo, hi = lambda_interval(pts, labels)
+    assert lo < hi
+    return 0.5 * (lo + hi)
+
+
+def blob_state(seed=0, k=3, per=12, d=8):
+    pts, true = make_blobs(seed, k=k, per=per, d=d, sep=15.0, noise=0.3)
+    params = {"theta": jnp.asarray(pts)}
+    return FederatedState(params=params,
+                          opt_state=jax.vmap(adamw_init)(params),
+                          n_clients=len(pts)), true
+
+
+# ------------------------------------------------------ registry plumbing
+
+def test_convex_device_registered_and_device_capable():
+    assert {"convex-device", "clusterpath-device"} <= set(list_algorithms())
+    for name in ("convex-device", "clusterpath-device"):
+        algo = get_algorithm(name)
+        assert is_device_algorithm(algo)
+        assert not algo.requires_k
+    # the host names stay host-only but expose their device twins
+    assert device_twin(get_algorithm("convex")).name == "convex-device"
+    assert device_twin(get_algorithm("clusterpath")).name == \
+        "clusterpath-device"
+    assert device_twin(get_algorithm("kmeans++")) is None
+    assert device_twin(get_algorithm("kmeans-device")) is None
+
+
+# ------------------------------------------------- device vs host parity
+
+@pytest.mark.parametrize("seed,k", [(0, 3), (1, 2), (2, 4)])
+def test_device_convex_matches_host_convex(seed, k):
+    pts, true = make_blobs(seed, k=k)
+    lam = interval_lambda(pts, true)
+    host = convex_clustering(jnp.asarray(pts), lam, iters=400)
+    dev = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts),
+                                lam=lam, iters=400)
+    # same fusion graph -> same partition and cluster count
+    assert int(dev.n_clusters) == host.n_clusters == k
+    assert same_partition(np.asarray(host.labels), np.asarray(dev.labels))
+    assert same_partition(np.asarray(dev.labels), true)
+    # cluster means agree within AMA tolerance: align device's
+    # root-indexed centers to the host's compact ids
+    dev_labels = np.asarray(dev.labels)
+    dev_centers = np.asarray(dev.centers)[np.unique(dev_labels)]
+    host_order = [np.asarray(host.labels)[dev_labels == r][0]
+                  for r in np.unique(dev_labels)]
+    np.testing.assert_allclose(dev_centers, host.centers[host_order],
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_device_convex_default_lambda_matches_host():
+    pts, _ = make_blobs(4)
+    host = get_algorithm("convex")(jax.random.PRNGKey(0), pts)
+    dev = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts))
+    assert int(dev.n_clusters) == host.n_clusters
+    assert same_partition(host.labels, np.asarray(dev.labels))
+
+
+@pytest.mark.parametrize("seed,k", [(0, 3), (1, 2), (2, 4)])
+def test_device_clusterpath_recovers_planted_k(seed, k):
+    pts, true = make_blobs(seed, k=k)
+    res = device_clusterpath(jax.random.PRNGKey(0), jnp.asarray(pts),
+                             n_lambdas=10, iters=300)
+    assert int(res.n_clusters) == k
+    assert same_partition(np.asarray(res.labels), true)
+
+
+def test_device_convex_lambda_extremes():
+    pts, _ = make_blobs(3, k=3, per=8)
+    m = len(pts)
+    tiny = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts),
+                                 lam=1e-7, iters=100)
+    assert int(tiny.n_clusters) == m          # no fusion: all singletons
+    huge = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts),
+                                 lam=1e3, iters=400)
+    assert int(huge.n_clusters) == 1          # everything fuses
+
+
+def test_device_convex_single_client():
+    pts = np.ones((1, 4), np.float32)
+    res = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts))
+    assert int(res.n_clusters) == 1
+    assert np.asarray(res.labels).tolist() == [0]
+
+
+# -------------------------------------- fused kernel at block boundaries
+
+@pytest.mark.parametrize("b,e,d,be", [
+    (3, 13, 5, 8),      # E not a multiple of be: one padded tail block
+    (2, 300, 33, 128),  # multi-block edge grid + padded tail
+    (1, 256, 16, 256),  # exact single block
+    (4, 5, 4, 256),     # E smaller than be
+])
+def test_group_prox_batched_pallas_block_boundaries(b, e, d, be):
+    rng = np.random.default_rng(e * 7 + b)
+    v = jnp.asarray(rng.normal(size=(b, e, d)).astype(np.float32))
+    r = jnp.asarray(rng.uniform(0.1, 2.0, size=(b, e)).astype(np.float32))
+    out_p = group_ball_proj_batched_pallas(v, r, be=be, interpret=True)
+    out_r = ref.group_ball_proj_batched(v, r)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+    # rows inside the radius pass through untouched
+    inside = np.linalg.norm(np.asarray(v), axis=2) <= np.asarray(r)
+    np.testing.assert_array_equal(np.asarray(out_p)[inside],
+                                  np.asarray(v)[inside])
+
+
+# ------------------------------------------- one-shot round on the engine
+
+def test_convex_auto_engine_dispatches_to_device_and_agrees_with_host():
+    state, true = blob_state()
+    kwargs = dict(algorithm="convex", sketch_dim=32, seed=3)
+    _, lab_host, info_host = one_shot_aggregate(state, None, engine="host",
+                                                **kwargs)
+    _, lab_auto, info_auto = one_shot_aggregate(state, None, engine="auto",
+                                                **kwargs)
+    _, lab_dev, info_dev = one_shot_aggregate(state, None, engine="device",
+                                              **kwargs)
+    assert info_host["engine"] == "host"
+    assert info_auto["engine"] == "device"
+    assert info_dev["engine"] == "device"
+    assert same_partition(lab_host, lab_auto)
+    assert same_partition(lab_auto, lab_dev)
+    assert info_auto["n_clusters"] == info_host["n_clusters"]
+
+
+def test_clusterpath_auto_engine_recovers_planted_clusters():
+    state, true = blob_state()
+    new_state, labels, info = one_shot_aggregate(
+        state, None, algorithm="clusterpath", engine="auto", sketch_dim=32,
+        seed=3)
+    assert info["engine"] == "device"
+    assert info["n_clusters"] == 3
+    assert same_partition(labels, true)
+    # clients in one recovered cluster share the averaged model
+    theta = np.asarray(new_state.params["theta"])
+    for c in np.unique(labels):
+        members = np.where(labels == c)[0]
+        np.testing.assert_allclose(
+            theta[members], np.broadcast_to(theta[members[0]],
+                                            theta[members].shape),
+            rtol=1e-6, atol=1e-6)
+
+
+def test_convex_engines_agree_on_averaged_params_with_interval_lambda():
+    state, true = blob_state()
+    # oracle lambda in sketch space: pull the sketches once host-side
+    # (debug path) to compute the recovery interval, then run both
+    # engines at that lambda
+    _, _, info = one_shot_aggregate(state, None, algorithm="convex",
+                                    engine="host", sketch_dim=32, seed=3,
+                                    return_sketches=True)
+    lam = interval_lambda(info["sketches"], true)
+    kwargs = dict(algorithm="convex", algo_options={"lam": lam},
+                  sketch_dim=32, seed=3)
+    st_h, lab_h, info_h = one_shot_aggregate(state, None, engine="host",
+                                             **kwargs)
+    st_d, lab_d, info_d = one_shot_aggregate(state, None, engine="auto",
+                                             **kwargs)
+    assert info_d["engine"] == "device"
+    assert info_h["n_clusters"] == info_d["n_clusters"] == 3
+    assert same_partition(lab_h, lab_d)
+    assert same_partition(lab_d, true)
+    np.testing.assert_allclose(np.asarray(st_h.params["theta"]),
+                               np.asarray(st_d.params["theta"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _arrays_of_shape(obj, shape):
+    """All ndarray leaves of a nested dict matching ``shape``."""
+    found = []
+    if isinstance(obj, dict):
+        for v in obj.values():
+            found += _arrays_of_shape(v, shape)
+    elif isinstance(obj, (np.ndarray, jnp.ndarray)) and obj.shape == shape:
+        found.append(obj)
+    return found
+
+
+def test_convex_device_engine_no_host_sketch_transfer():
+    state, _ = blob_state()
+    sketch_dim = 32
+    full = (state.n_clients, sketch_dim)
+    _, _, info = one_shot_aggregate(state, None, algorithm="convex",
+                                    engine="auto", sketch_dim=sketch_dim)
+    assert info["engine"] == "device"
+    assert not _arrays_of_shape(info, full), \
+        "one-shot info must not materialize the (C, sketch_dim) sketches"
+    assert all(np.asarray(v).ndim == 0 for v in info["meta"].values())
+    _, _, info = one_shot_aggregate(state, None, algorithm="convex",
+                                    engine="auto", sketch_dim=sketch_dim,
+                                    return_sketches=True)
+    assert len(_arrays_of_shape(info, full)) == 1  # opt-in still works
+
+
+# ----------------------------------------------------- simulation driver
+
+def test_simulate_convex_exact_lambda_recovers_clusters():
+    summary = simulate(clients=96, clusters=4, dim=8, samples=64, wave=48,
+                       sketch_dim=32, seed=0, algorithm="convex",
+                       cc_iters=300)
+    assert summary["algorithm"] == "convex"
+    assert summary["purity"] == 1.0
+    assert summary["n_clusters_recovered"] == 4
+    assert summary["meta"]["engine"] == "device"
+
+
+@pytest.mark.slow
+def test_simulate_convex_large_c():
+    """C >= 4096 convex sweep (the complete-graph AMA at bench scale)."""
+    summary = simulate(clients=4096, clusters=8, dim=16, samples=64,
+                       wave=2048, sketch_dim=32, seed=0,
+                       algorithm="convex-device", cc_iters=200)
+    assert summary["purity"] >= 0.99
+    assert summary["n_clusters_recovered"] == 8

@@ -106,6 +106,67 @@ def test_one_shot_engines_agree(seed, sizes, d, sketch_dim):
 # The degenerate non-drawn cases (k=1, C==k, duplicate client sketches)
 # live in tests/test_engine.py so they run even without hypothesis.
 
+# -------------------------------------- multi-restart / minibatch Lloyd
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), sizes=sizes_st, d=st.integers(2, 8),
+       restarts=st.integers(2, 5),
+       init=st.sampled_from(["kmeans++", "random"]))
+def test_multi_restart_inertia_monotone(seed, sizes, d, restarts, init):
+    """restarts=r keeps the best of r inits INCLUDING the caller's key,
+    so its inertia can never exceed the single-restart run."""
+    pts, _ = make_blobs(seed, sizes, d)
+    k = len(sizes)
+    key = jax.random.PRNGKey(seed)
+    one = device_kmeans(key, jnp.asarray(pts), k, iters=25, init=init)
+    multi = device_kmeans(key, jnp.asarray(pts), k, iters=25, init=init,
+                          restarts=restarts)
+    assert float(multi.inertia) <= float(one.inertia) + 1e-4
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), sizes=sizes_st, d=st.integers(2, 8),
+       init=st.sampled_from(["kmeans++", "spectral", "random"]))
+def test_minibatch_full_batch_is_bitexact(seed, sizes, d, init):
+    """batch_m >= m reduces to the full-Lloyd path bit-for-bit."""
+    pts, _ = make_blobs(seed, sizes, d)
+    m, k = len(pts), len(sizes)
+    key = jax.random.PRNGKey(seed)
+    full = device_kmeans(key, jnp.asarray(pts), k, iters=25, init=init)
+    mb = device_kmeans(key, jnp.asarray(pts), k, iters=25, init=init,
+                       batch_m=m)
+    np.testing.assert_array_equal(np.asarray(full.labels),
+                                  np.asarray(mb.labels))
+    np.testing.assert_array_equal(np.asarray(full.centers),
+                                  np.asarray(mb.centers))
+    np.testing.assert_array_equal(np.asarray(full.inertia),
+                                  np.asarray(mb.inertia))
+    assert int(full.n_iter) == int(mb.n_iter)
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), sizes=st.lists(st.integers(4, 9),
+                                                   min_size=2, max_size=4),
+       d=st.integers(2, 6))
+def test_minibatch_lloyd_is_valid_clustering(seed, sizes, d):
+    """Sub-m minibatches still return a full-data labeling with finite
+    inertia >= the full-Lloyd inertia minus tolerance is NOT guaranteed,
+    but the result contract (shapes, label range, final full-data
+    inertia consistency) must hold."""
+    pts, _ = make_blobs(seed, sizes, d)
+    m, k = len(pts), len(sizes)
+    res = device_kmeans(jax.random.PRNGKey(seed), jnp.asarray(pts), k,
+                        iters=25, batch_m=max(2, m // 2))
+    labels = np.asarray(res.labels)
+    assert labels.shape == (m,)
+    assert labels.min() >= 0 and labels.max() < k
+    # reported inertia is the full-data objective of the final centers
+    centers = np.asarray(res.centers)
+    d2 = ((pts[:, None] - centers[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(float(res.inertia), d2.min(1).sum(),
+                               rtol=1e-4, atol=1e-4)
+
+
 @settings(max_examples=4, deadline=None, derandomize=True)
 @given(seed=st.integers(0, 10_000), d=st.integers(2, 6))
 def test_device_kmeans_k1_inertia_is_total_variance(seed, d):

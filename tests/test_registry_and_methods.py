@@ -184,6 +184,36 @@ def test_new_algorithm_usable_via_method_and_legacy_shim():
         unregister_algorithm("first-coord-sign")
 
 
+def test_legacy_shim_convex_family_matches_method_api():
+    """Shim-coverage for the convex-family option mapping
+    (``ODCLConfig.algorithm_options``: lam/cc_iters/n_lambdas) now that
+    ``benchmarks/fig3_clusterpath.py`` drives ``Method.fit`` directly —
+    the deprecation path must stay exercised until the shim is removed."""
+    pts, true = blobs(seed=2, k=3, per=8, d=5, sep=40.0)
+    from repro.core.clustering import lambda_interval
+
+    lo, hi = lambda_interval(pts, true)
+    lam = 0.5 * (lo + hi)
+    key = jax.random.PRNGKey(0)
+    erm = lambda xs, ys: pts    # noqa: E731 - the "local models" stack
+
+    legacy = odcl(pts, ODCLConfig(algo="convex", lam=lam, cc_iters=250))
+    via_method = ODCL(algorithm="convex",
+                      options={"lam": lam, "iters": 250}).fit(
+        key, None, None, erm)
+    np.testing.assert_array_equal(legacy.labels, via_method.labels)
+    np.testing.assert_array_equal(legacy.user_models, via_method.user_models)
+    assert legacy.n_clusters == via_method.n_clusters == 3
+
+    legacy_cp = odcl(pts, ODCLConfig(algo="clusterpath", n_lambdas=6,
+                                     cc_iters=200))
+    via_method_cp = ODCL(algorithm="clusterpath",
+                         options={"n_lambdas": 6, "iters": 200}).fit(
+        key, None, None, erm)
+    np.testing.assert_array_equal(legacy_cp.labels, via_method_cp.labels)
+    assert legacy_cp.n_clusters == via_method_cp.n_clusters
+
+
 def test_assert_separable_flags_bad_clustering():
     rng = np.random.default_rng(0)
     pts = rng.normal(size=(20, 4)).astype(np.float32)   # no cluster structure

@@ -97,7 +97,8 @@ def test_merge_condition_golden():
 
 KMEANS_FAMILY = ("kmeans", "kmeans++", "spectral", "kmeans-device",
                  "gradient")
-CONVEX_FAMILY = ("convex", "clusterpath")
+CONVEX_FAMILY = ("convex", "clusterpath", "convex-device",
+                 "clusterpath-device")
 
 
 @pytest.mark.parametrize("name", KMEANS_FAMILY)
