@@ -1,16 +1,22 @@
-"""Aggregation-engine scaling: per-algorithm C-sweep of the device
+"""Aggregation-engine scaling: per-algorithm C-sweep of the streaming
 one-shot round.
 
-For each (algorithm, federation size C) cell the full pipeline of
-``launch/simulate.py`` runs (wave-batched local ERMs -> sketch ->
-device clustering -> cluster mean, all on device) and the per-phase
-wall clock plus peak memory are recorded to ``BENCH_engine.json`` —
-the perf trajectory the next optimization PRs measure against.
+For each (algorithm, edge set, federation size C) cell the full pipeline
+of ``launch/simulate.py`` runs — wave-batched local ERMs streamed into
+an ``AggregationSession`` (``ingest`` sketches each wave on device into
+the fixed-capacity buffer), then ``finalize`` (registered clustering +
+cluster mean, one jitted program) — and the per-phase wall clock plus
+peak memory are recorded to ``BENCH_engine.json``: the perf trajectory
+the next optimization PRs measure against.  The phases are disjoint:
+``ingest_s`` is the streaming-upload dispatch inside the wave loop,
+``local_erm_s`` the wave ERMs without it (comparable with pre-session
+rows), ``aggregate_s`` the finalize round.
 
-The kmeans family sweeps to C=16k; the convex family stops at C=4k
-(its complete fusion graph is E = C(C-1)/2 edges, so the AMA state is
-O(E * sketch_dim) — the convex rows run a narrower sketch to keep the
-dual block in memory).
+The kmeans family sweeps to C=16k.  The convex family's complete fusion
+graph is E = C(C-1)/2 edges (the AMA state is O(E * sketch_dim)), which
+walls at C=4k — the ``edges=knn`` rows swap in the sparse mutual-kNN
+graph (E = C*k via the tiled top-k over the ``pairwise_l2`` kernel) and
+carry the family to C=16k.
 """
 from __future__ import annotations
 
@@ -29,6 +35,9 @@ SWEEPS = (
     ("kmeans-device", (256, 1024, 4096, 16384), {}),
     ("convex-device", (256, 1024, 4096),
      {"sketch_dim": 32, "cc_iters": 200}),
+    # sparse kNN fusion graph: past the complete-graph C=4k edge wall
+    ("convex-device", (4096, 16384),
+     {"sketch_dim": 32, "cc_iters": 200, "edges": "knn", "knn_k": 8}),
 )
 
 
@@ -49,14 +58,18 @@ def _peak_bytes() -> dict:
 def run(sweeps=SWEEPS, out: str = OUT):
     rows = []
     for algorithm, c_grid, overrides in sweeps:
+        tag = algorithm
+        if overrides.get("edges", "complete") != "complete":
+            tag = f"{algorithm}+{overrides['edges']}"
         for c in c_grid:
             summary = simulate(clients=c, clusters=CLUSTERS, wave=4096,
                                algorithm=algorithm, **overrides)
             row = {**summary, **_peak_bytes()}
             rows.append(row)
             ph = summary["phases"]
-            emit(f"bench_engine/{algorithm}/C{c}", ph["aggregate_s"] * 1e6,
+            emit(f"bench_engine/{tag}/C{c}", ph["aggregate_s"] * 1e6,
                  f"erm_s={ph['local_erm_s']:.2f};"
+                 f"ingest_s={ph['ingest_s']:.2f};"
                  f"purity={summary['purity']:.3f};"
                  f"rss={row['peak_rss_bytes']}")
     report = {"bench": "engine_scale", "backend": jax.default_backend(),

@@ -103,14 +103,19 @@ def run_lm():
 
     for rounds in LM_ROUND_GRID:
         # equal total compute (120 optimizer steps per client) across
-        # every point, so the emitted gap isolates communication
-        res, loss, purity = fresh_run(IFCAFederated(
-            k=k, rounds=rounds, local_steps=10,
-            warmup_steps=120 - rounds * 10,
-            init="clients", sketch_dim=32, opt=opt))
-        emit(f"fig4lm/ifca@r{rounds}", 0.0,
-             f"rounds={res.comm_rounds:g}:bytes={res.comm_bytes:.3g}:"
-             f"loss={loss:.4f}:purity={purity:.2f}")
+        # every point, so the emitted gap isolates communication;
+        # carry=True is the FedOpt-style variant (per-cluster Adam
+        # moments averaged server-side and carried across rounds)
+        for carry in (False, True):
+            res, loss, purity = fresh_run(IFCAFederated(
+                k=k, rounds=rounds, local_steps=10,
+                warmup_steps=120 - rounds * 10,
+                init="clients", sketch_dim=32, opt=opt,
+                carry_opt_state=carry))
+            tag = "ifca-carry" if carry else "ifca"
+            emit(f"fig4lm/{tag}@r{rounds}", 0.0,
+                 f"rounds={res.comm_rounds:g}:bytes={res.comm_bytes:.3g}:"
+                 f"loss={loss:.4f}:purity={purity:.2f}")
 
 
 def main():

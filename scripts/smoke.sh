@@ -5,10 +5,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-# Device convex-clustering gate: the newest engine path fails fast and
-# loudly before the multi-minute full suite below.
+# Streaming-session + edge-set + device convex gates: the newest engine
+# paths fail fast and loudly before the multi-minute full suite below.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" \
-    tests/test_device_convex.py
+    tests/test_session.py tests/test_edges.py tests/test_device_convex.py
 
 # Fast gate first: the full suite minus the @slow large-C engine runs.
 # Deselected: failures already present at the seed commit (c788f4d) —
@@ -23,6 +23,7 @@ PYTHONPATH=src python - <<'PY'
 import benchmarks.run  # imports every benchmark module
 from repro.core import ODCL, get_algorithm, list_algorithms, list_methods
 from repro.core.clustering import is_device_algorithm
+from repro.core.engine import AggregationSession, list_edge_sets
 from repro.core.federated_methods import list_federated_methods
 
 assert len(list_algorithms()) >= 8, list_algorithms()
@@ -31,11 +32,14 @@ get_algorithm("kmeans++")
 assert is_device_algorithm(get_algorithm("kmeans-device"))
 assert is_device_algorithm(get_algorithm("convex-device"))
 assert is_device_algorithm(get_algorithm("clusterpath-device"))
+assert {"complete", "knn"} <= set(list_edge_sets())
+assert callable(AggregationSession)
 assert {"odcl", "ifca", "fedavg", "local-only"} <= set(list_federated_methods())
 print("benchmark driver imports OK;",
       f"{len(list_algorithms())} clustering algorithms,",
       f"{len(list_methods())} federated methods,",
-      f"{len(list_federated_methods())} LM-scale federated methods registered")
+      f"{len(list_federated_methods())} LM-scale federated methods,",
+      f"{len(list_edge_sets())} edge sets registered")
 PY
 
 # reduced large-C simulation: the device aggregation engine end-to-end
@@ -55,6 +59,12 @@ PYTHONPATH=src python -m repro.launch.simulate \
     --clients 128 --clusters 4 --wave 64 --samples 32 \
     --algorithm convex --sketch-dim 32
 
+# the same convex round over the sparse mutual-kNN fusion graph (the
+# EdgeSet registry path that scales ODCL-CC past the C=4k edge wall)
+PYTHONPATH=src python -m repro.launch.simulate \
+    --clients 128 --clusters 4 --wave 64 --samples 32 \
+    --algorithm convex-device --edges knn --knn-k 6 --sketch-dim 32
+
 # reduced deep-model drivers through the FederatedMethod registry:
 # the one-shot round on the device engine, and IFCA's round loop
 PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
@@ -67,4 +77,17 @@ PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
     --method odcl --engine device --algo convex --sketch-dim 32
 PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
     --clusters 2 --local-steps 3 --batch 2 --seq-len 16 \
-    --method ifca --rounds 2 --warmup-steps 3 --sketch-dim 32
+    --method ifca --rounds 2 --warmup-steps 3 --sketch-dim 32 \
+    --ifca-carry-opt
+
+# sketch-routed serving: train a reduced federation to a checkpoint,
+# then serve the cluster model the client's sketch routes to (the
+# AggregationSession rebuilt from the stacked checkpoint)
+SMOKE_CKPT="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_CKPT"' EXIT
+PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
+    --clusters 2 --local-steps 4 --post-steps 0 --batch 2 --seq-len 16 \
+    --method odcl --engine device --sketch-dim 32 --ckpt-dir "$SMOKE_CKPT"
+PYTHONPATH=src python -m repro.launch.serve --reduced --batch 2 \
+    --prompt-len 8 --gen 4 --ckpt-dir "$SMOKE_CKPT" --route-by-sketch \
+    --clusters 2 --client 3 --route-sketch-dim 32

@@ -104,6 +104,47 @@ def is_device_algorithm(algo) -> bool:
     return callable(getattr(algo, "device_call", None))
 
 
+# host Lloyd-family names and the kmeans-device init that reproduces them
+LLOYD_DEVICE_INIT = {"kmeans": "random", "kmeans++": "kmeans++",
+                     "spectral": "spectral"}
+
+
+def resolve_device_request(algorithm, options: Optional[dict] = None, *,
+                           strict: bool = True):
+    """Map an algorithm request onto something the device engine can run.
+
+    Device-capable names and names with a registered ``"-device"`` twin
+    pass through unchanged (``one_shot_aggregate`` / the session upgrade
+    twins themselves); the host Lloyd-family names map onto
+    ``kmeans-device`` with the matching ``init`` option — the legacy
+    ``launch/train.py`` behaviour, now shared by ``ODCLFederated``, the
+    ``AggregationSession``, and ``launch/simulate.py``.  Returns
+    ``(algorithm, options)``.  Unmappable host-only names raise when
+    ``strict`` (engine='device') and pass through when not (engine=
+    'auto', where the caller falls back to the host path).
+    """
+    algo = get_algorithm(algorithm)
+    if is_device_algorithm(algo):
+        return algorithm, options
+    name = getattr(algo, "name", algorithm)
+    # the Lloyd mapping outranks the twin passthrough: "kmeans" has a
+    # registered "kmeans-device" twin, but letting the twin upgrade it
+    # would silently swap its random init for the twin's kmeans++
+    # default — the explicit init mapping is what reproduces the host
+    # algorithm
+    if name in LLOYD_DEVICE_INIT:
+        return "kmeans-device", {"init": LLOYD_DEVICE_INIT[name],
+                                 **(options or {})}
+    if device_twin(algo) is not None:
+        return algorithm, options
+    if strict:
+        raise ValueError(
+            f"engine='device' needs a device-capable algorithm "
+            f"(e.g. kmeans-device), a Lloyd-family name, or a name with "
+            f"a registered '-device' twin, not {name!r}")
+    return algorithm, options
+
+
 def device_twin(algo) -> Optional["DeviceClusteringAlgorithm"]:
     """The registered ``"<name>-device"`` twin of a host algorithm.
 
@@ -221,25 +262,30 @@ class DeviceConvexClustering:
     """Device twin of ``"convex"`` (``engine.device_convex``): the AMA
     fixed point, fusion-graph component extraction, and cluster means
     all stay jnp — the engine inlines it into the jitted one-shot round.
-    Lemma 1 admissibility is the host family's (same objective)."""
+    The fusion graph is a registered ``EdgeSet`` (``engine/edges.py``):
+    ``edges='complete'`` (paper default, host bit-parity) or
+    ``edges='knn'`` with ``knn_k`` neighbours (the sparse graph that
+    scales past the complete graph's C=4k edge wall).  Lemma 1
+    admissibility is the host family's (same objective)."""
     name: str = "convex-device"
     requires_k: bool = False
 
     def device_call(self, key, points, *, k: Optional[int] = None,
                     lam: Optional[float] = None, iters: int = 400,
-                    weights=None, merge_tol=None,
-                    **_: Any) -> DeviceClusteringResult:
+                    weights=None, merge_tol=None, edges: str = "complete",
+                    knn_k: int = 8, **_: Any) -> DeviceClusteringResult:
         del k
         return _device_convex_result(device_convex_cluster(
             key, points, lam=lam, iters=iters, weights=weights,
-            merge_tol=merge_tol))
+            merge_tol=merge_tol, edges=edges, knn_k=knn_k))
 
     def __call__(self, key, points, *, k: Optional[int] = None,
                  lam: Optional[float] = None, iters: int = 400,
-                 weights=None, merge_tol=None, **_: Any) -> ClusteringResult:
+                 weights=None, merge_tol=None, edges: str = "complete",
+                 knn_k: int = 8, **_: Any) -> ClusteringResult:
         res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
                                lam=lam, iters=iters, weights=weights,
-                               merge_tol=merge_tol)
+                               merge_tol=merge_tol, edges=edges, knn_k=knn_k)
         return _as_result(res.labels, res.centers,
                           {"lam": float(res.meta["lam"]),
                            "n_clusters": int(res.meta["n_clusters"])})
@@ -252,24 +298,29 @@ class DeviceConvexClustering:
 class DeviceClusterpath:
     """Device twin of ``"clusterpath"``: the lambda ladder advances as
     one batched AMA solve (the batched group-prox kernel) and the
-    plurality plateau selects the clustering — K-free, on device."""
+    plurality plateau selects the clustering — K-free, on device.
+    ``edges``/``knn_k`` select the registered fusion graph, as in
+    ``"convex-device"``."""
     name: str = "clusterpath-device"
     requires_k: bool = False
 
     def device_call(self, key, points, *, k: Optional[int] = None,
                     n_lambdas: int = 10, iters: int = 300,
-                    merge_tol=None, **_: Any) -> DeviceClusteringResult:
+                    merge_tol=None, edges: str = "complete",
+                    knn_k: int = 8, **_: Any) -> DeviceClusteringResult:
         del k
         return _device_convex_result(device_clusterpath(
             key, points, n_lambdas=n_lambdas, iters=iters,
-            merge_tol=merge_tol))
+            merge_tol=merge_tol, edges=edges, knn_k=knn_k))
 
     def __call__(self, key, points, *, k: Optional[int] = None,
                  n_lambdas: int = 10, iters: int = 300,
-                 merge_tol=None, **_: Any) -> ClusteringResult:
+                 merge_tol=None, edges: str = "complete",
+                 knn_k: int = 8, **_: Any) -> ClusteringResult:
         res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
                                n_lambdas=n_lambdas, iters=iters,
-                               merge_tol=merge_tol)
+                               merge_tol=merge_tol, edges=edges,
+                               knn_k=knn_k)
         return _as_result(res.labels, res.centers,
                           {"lam": float(res.meta["lam"]),
                            "n_clusters": int(res.meta["n_clusters"])})

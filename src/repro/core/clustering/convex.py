@@ -171,8 +171,14 @@ def lambda_interval(points, labels) -> tuple[float, float]:
         sizes.append(len(pk))
         cents.append(pk.mean(axis=0))
         if len(pk) > 1:
-            diff = pk[:, None] - pk[None, :]
-            diam = float(np.sqrt((diff ** 2).sum(-1)).max())
+            # chunked max pairwise distance: the (n_k, n_k, d) difference
+            # block is ~0.5GB per cluster at C=16k — stream row chunks
+            d2max = 0.0
+            for s in range(0, len(pk), 256):
+                blk = pk[s:s + 256]
+                d2 = ((blk[:, None] - pk[None, :]) ** 2).sum(-1)
+                d2max = max(d2max, float(d2.max()))
+            diam = float(np.sqrt(d2max))
         else:
             diam = 0.0
         lo = max(lo, diam / len(pk))

@@ -40,6 +40,19 @@ The host-side path (``core/clustering/{kmeans,convex}.py`` +
 oracle; ``federated.one_shot_aggregate`` auto-dispatches here whenever
 the chosen algorithm is device-capable or has a device twin.
 
+Two server-shape layers sit on top of the fused round:
+
+  * ``engine/session.py`` — ``AggregationSession``, the streaming
+    server API: ``ingest`` accumulates the (C, sketch_dim) sketch
+    matrix wave by wave in a fixed-capacity device buffer,
+    ``finalize`` runs steps 2-4 through the same traced body as the
+    fused round (bit-exact), and ``route``/``cluster_model`` serve
+    never-seen clients by nearest sketch-space cluster.
+  * ``engine/edges.py`` — the pluggable fusion-graph registry for the
+    convex family (``complete`` | ``knn``); the sparse mutual-kNN
+    builder (tiled top-k over the ``pairwise_l2`` kernel) is what takes
+    ``convex-device`` past the complete graph's C=4k edge wall.
+
 Extension point (worked example: the convex family): implement a
 normal registry algorithm that additionally offers ``device_call(key,
 jnp_points, *, k, **options) -> DeviceClusteringResult`` — all-jnp and
@@ -53,22 +66,45 @@ from repro.core.engine.device_convex import (
     device_convex_cluster,
 )
 from repro.core.engine.device_kmeans import DeviceKMeansResult, device_kmeans
+from repro.core.engine.edges import (
+    CompleteEdges,
+    Edges,
+    EdgeSet,
+    KnnEdges,
+    get_edge_set,
+    list_edge_sets,
+    register_edge_set,
+    unregister_edge_set,
+)
 
 __all__ = [
+    "AggregationSession",
+    "CompleteEdges",
     "DeviceConvexResult",
     "DeviceKMeansResult",
+    "Edges",
+    "EdgeSet",
+    "KnnEdges",
     "device_clusterpath",
     "device_convex_cluster",
     "device_kmeans",
+    "get_edge_set",
+    "list_edge_sets",
     "one_shot_aggregate_device",
+    "register_edge_set",
+    "unregister_edge_set",
 ]
 
 
 def __getattr__(name):
-    # lazy: aggregate.py imports federated.py (models, launch.steps);
-    # loading that eagerly from clustering/api.py's registration import
-    # would both slow light imports and close an import cycle
+    # lazy: aggregate.py/session.py import federated.py (models,
+    # launch.steps); loading that eagerly from clustering/api.py's
+    # registration import would both slow light imports and close an
+    # import cycle
     if name == "one_shot_aggregate_device":
         from repro.core.engine.aggregate import one_shot_aggregate_device
         return one_shot_aggregate_device
+    if name == "AggregationSession":
+        from repro.core.engine.session import AggregationSession
+        return AggregationSession
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -12,6 +12,12 @@ parameters never cross the host boundary; the only host outputs are the
 ``return_sketches=True`` to additionally pull the sketch matrix to host
 (small-C debugging only — large-C runs must not pay that transfer).
 
+The cluster->average stage is shared with the streaming server API
+(``engine/session.py``): ``_finalize_program`` is the same program
+minus the sketch vmap, run on a sketch matrix that was accumulated
+wave-by-wave — the two paths stay bit-exact because they trace the
+identical ``_cluster_and_average`` body.
+
 Under a mesh the client axis shards over ``data`` (the same stacked
 layout as ``federated.py``): the label/center reductions inside the
 device clustering loop and the one-hot contraction of the cluster mean
@@ -38,6 +44,34 @@ from repro.core.sketch import sketch_tree
 from repro.optim import adamw_init
 
 
+def _constrainer(mesh, client_axis):
+    def constrain(x):
+        if mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(client_axis)))
+
+    return constrain
+
+
+def _cluster_and_average(algo, options, k, constrain, cluster_key,
+                         sketches, params):
+    """Steps 2-4 on an already-materialized sketch matrix (traceable).
+
+    The single source of truth for the server's cluster->average stage:
+    both the fused one-shot round below and the streaming session's
+    ``finalize`` trace this exact body, which is what keeps the two
+    bit-exact on identical inputs.
+    """
+    res = algo.device_call(cluster_key, sketches, k=k, **options)
+    kk = res.centers.shape[0]
+    onehot = jax.nn.one_hot(res.labels, kk, dtype=jnp.float32)  # (C, K)
+    counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)          # (K,)
+    new_params = jax.tree_util.tree_map(
+        constrain, cluster_average_tree(params, onehot, counts))
+    return new_params, res
+
+
 @functools.lru_cache(maxsize=16)
 def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis):
     """Build the jitted end-to-end round for one static configuration.
@@ -47,12 +81,7 @@ def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis):
     retracing a fresh closure every call.
     """
     options = dict(opts)
-
-    def constrain(x):
-        if mesh is None:
-            return x
-        return jax.lax.with_sharding_constraint(
-            x, NamedSharding(mesh, P(client_axis)))
+    constrain = _constrainer(mesh, client_axis)
 
     @jax.jit
     def round_fn(sketch_key, cluster_key, params):
@@ -61,15 +90,67 @@ def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis):
                                   leaf_filter=leaf_filter)
         )(params)                                        # (C, sketch_dim)
         sketches = constrain(sketches)
-        res = algo.device_call(cluster_key, sketches, k=k, **options)
-        kk = res.centers.shape[0]
-        onehot = jax.nn.one_hot(res.labels, kk, dtype=jnp.float32)  # (C, K)
-        counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)          # (K,)
-        new_params = jax.tree_util.tree_map(
-            constrain, cluster_average_tree(params, onehot, counts))
+        new_params, res = _cluster_and_average(
+            algo, options, k, constrain, cluster_key, sketches, params)
         return new_params, res, sketches
 
     return round_fn
+
+
+@functools.lru_cache(maxsize=16)
+def _finalize_program(algo, k, opts, mesh, client_axis):
+    """Steps 2-4 alone, jitted — the streaming session's finalize.
+
+    Identical trace body to the fused round's tail, fed the sketch
+    matrix the session accumulated wave by wave instead of re-sketching.
+    """
+    options = dict(opts)
+    constrain = _constrainer(mesh, client_axis)
+
+    @jax.jit
+    def finalize_fn(cluster_key, sketches, params):
+        return _cluster_and_average(algo, options, k, constrain,
+                                    cluster_key, sketches, params)
+
+    return finalize_fn
+
+
+def resolve_device_algorithm(algorithm):
+    """Registry lookup + the hard device-capability check of the fused
+    round (the session resolves engine='auto' fallbacks itself)."""
+    algo = get_algorithm(algorithm)
+    if not is_device_algorithm(algo):
+        raise ValueError(
+            f"algorithm {getattr(algo, 'name', algo)!r} is host-only; the "
+            "device engine needs a DeviceClusteringAlgorithm "
+            "(e.g. 'kmeans-device'), or use engine='host'")
+    return algo
+
+
+def compact_labels(raw_labels):
+    """Host-side label compaction: device clusterings may emit
+    non-contiguous ids (empty Lloyd clusters, convex root ids).  Returns
+    (labels in [0, K'), uniq raw ids, first index per compact id)."""
+    raw = np.asarray(raw_labels)
+    uniq, first, labels = np.unique(raw, return_index=True,
+                                    return_inverse=True)
+    return labels.astype(np.int32), uniq, first
+
+
+def materialize_round(new_params, res, state: FederatedState):
+    """Host materialization of a device round: compacted labels + scalar
+    meta are the ONLY transfers; params/opt state stay device pytrees.
+    Returns ``(new_state, labels, info, uniq, first)`` — ``uniq`` the raw
+    ids behind each compact label, ``first`` one member index per compact
+    id (the session's routing/serving handles)."""
+    labels, uniq, first = compact_labels(res.labels)
+    meta = {name: float(np.asarray(v)) for name, v in res.meta.items()}
+    new_state = FederatedState(
+        params=new_params,
+        opt_state=jax.vmap(adamw_init)(new_params),
+        n_clients=state.n_clients, step=state.step)
+    info = {"n_clusters": int(len(uniq)), "meta": meta, "engine": "device"}
+    return new_state, labels, info, uniq, first
 
 
 def one_shot_aggregate_device(state: FederatedState, cfg=None, *,
@@ -92,12 +173,7 @@ def one_shot_aggregate_device(state: FederatedState, cfg=None, *,
     sketches and parameters is constrained to ``client_axis`` and XLA
     shards the round over it.
     """
-    algo = get_algorithm(algorithm)
-    if not is_device_algorithm(algo):
-        raise ValueError(
-            f"algorithm {getattr(algo, 'name', algo)!r} is host-only; the "
-            "device engine needs a DeviceClusteringAlgorithm "
-            "(e.g. 'kmeans-device'), or use engine='host'")
+    algo = resolve_device_algorithm(algorithm)
     leaf_filter = (_router_invariant_filter
                    if cfg is not None and getattr(cfg, "is_moe", False)
                    else None)
@@ -115,17 +191,7 @@ def one_shot_aggregate_device(state: FederatedState, cfg=None, *,
     new_params, res, sketches = round_fn(sketch_key, cluster_key,
                                          state.params)
 
-    # labels + scalar meta are the ONLY host materializations
-    raw_labels = np.asarray(res.labels)
-    uniq, labels = np.unique(raw_labels, return_inverse=True)
-    labels = labels.astype(np.int32)
-    meta = {name: float(np.asarray(v)) for name, v in res.meta.items()}
-
-    new_state = FederatedState(
-        params=new_params,
-        opt_state=jax.vmap(adamw_init)(new_params),
-        n_clients=state.n_clients, step=state.step)
-    info = {"n_clusters": int(len(uniq)), "meta": meta, "engine": "device"}
+    new_state, labels, info, _, _ = materialize_round(new_params, res, state)
     if return_sketches:
         info["sketches"] = np.asarray(sketches)
     return new_state, labels, info

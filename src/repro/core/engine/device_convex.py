@@ -13,9 +13,17 @@ through host memory.  This module is the all-jnp, traceable port:
     kernel (``kernels.ops.group_ball_proj_batched``: compiled on TPU,
     interpret mode under ``REPRO_FORCE_PALLAS=1``, jnp oracle
     elsewhere).
-  * ``_fusion_components`` — cluster extraction as iterated min-label
-    propagation over the fusion graph (||u_i - u_j|| <= merge_tol),
-    converging in graph-diameter steps; no host union-find.
+  * the fusion graph is a pluggable ``EdgeSet`` (``engine/edges.py``):
+    ``edges="complete"`` is the paper's all-pairs graph (bit-parity
+    with the host solver, E = m(m-1)/2 — the C=4k wall), ``edges="knn"``
+    the sparse mutual-kNN graph (E = m*k via a tiled top-k over the
+    ``pairwise_l2`` kernel) that scales the family to C=16k+.
+  * cluster extraction as iterated min-label propagation over the
+    fusion graph (||u_i - u_j|| <= merge_tol), converging in
+    graph-diameter steps; no host union-find.  The complete graph keeps
+    the dense (m, m) propagation (exact PR-4 behaviour); sparse edge
+    sets propagate over the edge list only, so the dense matrix is
+    never materialized.
   * ``device_convex_cluster`` / ``device_clusterpath`` — fixed-lambda
     ODCL-CC and the K-free lambda-ladder variant.  Everything returned
     is device-resident; labels are fusion-graph root ids in [0, m) and
@@ -34,8 +42,8 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.engine.edges import Edges, get_edge_set
 from repro.kernels import ops as kops
 
 
@@ -49,26 +57,22 @@ class DeviceConvexResult(NamedTuple):
     lam: jnp.ndarray          # () float32 fusion penalty used
 
 
-def _edges(m: int):
-    """Static upper-triangular edge list of the complete graph."""
-    iu, ju = np.triu_indices(m, k=1)
-    return jnp.asarray(iu, jnp.int32), jnp.asarray(ju, jnp.int32)
-
-
-def _ama_fixed_point(a, lams, weights, *, iters: int, tol: float):
-    """Batched AMA: a (m, d), lams (L,), weights (E,) -> u (L, m, d).
+def _ama_fixed_point(a, lams, edges: Edges, *, iters: int, tol: float):
+    """Batched AMA: a (m, d), lams (L,), edges E slots -> u (L, m, d).
 
     All L solves advance together inside one ``lax.while_loop``; the
     loop stops when every solve's dual update falls below the
-    scale-aware tolerance or after ``iters`` iterations.  Mirrors the
-    host ``_ama_solve`` update exactly (same eta = 1/m, same prox).
+    scale-aware tolerance or after ``iters`` iterations.  On the
+    complete edge set this mirrors the host ``_ama_solve`` update
+    exactly (same eta = 1/m, same prox); sparse edge sets use the
+    builder's ``inv_eta`` (their incidence-spectrum bound).
     """
     m, d = a.shape
-    i_idx, j_idx = _edges(m)
+    i_idx, j_idx = edges.i_idx, edges.j_idx
     e = i_idx.shape[0]
     L = lams.shape[0]
-    eta = 1.0 / m
-    radius = lams[:, None] * weights[None, :]              # (L, E)
+    eta = 1.0 / edges.inv_eta
+    radius = lams[:, None] * edges.weights[None, :]         # (L, E)
     thresh = tol * (1.0 + jnp.max(jnp.abs(a)))
 
     def u_of(nu):
@@ -95,12 +99,14 @@ def _ama_fixed_point(a, lams, weights, *, iters: int, tol: float):
     return u_of(nu), n_iter
 
 
-def _fusion_components(u, merge_tol):
-    """Connected components of the fusion graph as min-label propagation.
+def _fusion_components_dense(u, merge_tol):
+    """Connected components of the dense fusion graph as min-label
+    propagation.
 
     Each step every point adopts the smallest label among its fusion
     neighbours (||u_i - u_j|| <= merge_tol, self included); the loop
     reaches the component-min fixed point in graph-diameter steps.
+    Materializes the (m, m) distance matrix — complete-edge-set only.
     """
     m = u.shape[0]
     d2 = kops.pairwise_sqdist(u, u)
@@ -114,6 +120,33 @@ def _fusion_components(u, merge_tol):
         lab, _ = carry
         neigh = jnp.min(jnp.where(adj, lab[None, :], m), axis=1)
         new = jnp.minimum(lab, neigh).astype(jnp.int32)
+        return new, jnp.any(new != lab)
+
+    labels, _ = jax.lax.while_loop(
+        cond, body, (jnp.arange(m, dtype=jnp.int32), jnp.array(True)))
+    return labels
+
+
+def _fusion_components_edges(u, i_idx, j_idx, merge_tol):
+    """Min-label propagation restricted to the edge list — O(E) per
+    step, never materializes (m, m).  Two points fuse only along a path
+    of fused *edges*, which is the meaningful notion of the fusion
+    graph on a sparse edge set (non-adjacent points never interact in
+    the objective either)."""
+    m = u.shape[0]
+    du = u[i_idx] - u[j_idx]
+    fused = jnp.sum(du * du, axis=1) <= merge_tol * merge_tol   # (E,)
+    sentinel = jnp.asarray(m, jnp.int32)
+
+    def cond(carry):
+        _, changed = carry
+        return changed
+
+    def body(carry):
+        lab, _ = carry
+        cand = jnp.where(fused, jnp.minimum(lab[i_idx], lab[j_idx]),
+                         sentinel)
+        new = lab.at[i_idx].min(cand).at[j_idx].min(cand)
         return new, jnp.any(new != lab)
 
     labels, _ = jax.lax.while_loop(
@@ -140,9 +173,16 @@ def _root_indexed_centers(u, labels):
     return centers, counts
 
 
-def _extract(u, lam, n_iter, merge_tol) -> DeviceConvexResult:
+def _components(u, merge_tol, edge_set: Optional[Edges]):
     tol = _default_merge_tol(u) if merge_tol is None else merge_tol
-    labels = _fusion_components(u, tol)
+    if edge_set is None:
+        return _fusion_components_dense(u, tol)
+    return _fusion_components_edges(u, edge_set.i_idx, edge_set.j_idx, tol)
+
+
+def _extract(u, lam, n_iter, merge_tol,
+             edge_set: Optional[Edges] = None) -> DeviceConvexResult:
+    labels = _components(u, merge_tol, edge_set)
     centers, counts = _root_indexed_centers(u, labels)
     return DeviceConvexResult(
         labels=labels, centers=centers, u=u,
@@ -158,37 +198,62 @@ def _min_pairwise_dist(a):
     return jnp.sqrt(jnp.min(off))
 
 
-@functools.partial(jax.jit, static_argnames=("iters",))
+def _build_edges(points, edges: str, knn_k: int) -> Edges:
+    return get_edge_set(edges)(points, knn_k=knn_k)
+
+
+def _nearest_dist(a, edge_set: Edges):
+    """Min pairwise distance, free from the kNN builder when available."""
+    if edge_set.min_dist is not None:
+        return edge_set.min_dist
+    return _min_pairwise_dist(a)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "edges", "knn_k"))
 def device_convex_cluster(key, points, *, lam=None, iters: int = 400,
                           tol: float = 1e-7, weights=None,
-                          merge_tol=None) -> DeviceConvexResult:
+                          merge_tol=None, edges: str = "complete",
+                          knn_k: int = 8) -> DeviceConvexResult:
     """Fixed-lambda sum-of-norms clustering, fully on device.
 
     ``lam=None`` reproduces the host default (the upper recovery bound
     (17) of the all-singletons clustering, min pairwise distance over
-    2(m-1)) as a traced value.  ``key`` is unused (the solver is
-    deterministic) but kept for the ``device_call`` protocol signature.
+    2(m-1)) as a traced value.  ``edges`` selects the registered fusion
+    graph (``"complete"`` | ``"knn"``; ``knn_k`` neighbours for the
+    latter).  ``weights`` overrides the edge set's per-slot weights
+    (complete-graph (E,) order — only meaningful with the complete
+    edge set).  ``key`` is unused (the solver is deterministic) but
+    kept for the ``device_call`` protocol signature.
     """
     del key
     a = jnp.asarray(points, jnp.float32)
     m, d = a.shape
-    e = m * (m - 1) // 2
-    if e == 0:          # single client: nothing to fuse
+    if m < 2:           # single client: nothing to fuse
         lam0 = jnp.asarray(1e-3 if lam is None else lam, jnp.float32)
         return _extract(a, lam0, jnp.array(0, jnp.int32), merge_tol)
+    edge_set = _build_edges(a, edges, knn_k)
+    if weights is not None:
+        if edges != "complete":
+            raise ValueError("explicit weights= are defined in complete-"
+                             "graph edge order; use edge-set options for "
+                             f"edges={edges!r}")
+        edge_set = edge_set._replace(
+            weights=jnp.asarray(weights, jnp.float32))
     if lam is None:
-        lam = _min_pairwise_dist(a) / (2.0 * (m - 1))
+        lam = _nearest_dist(a, edge_set) / (2.0 * (m - 1))
     lam = jnp.asarray(lam, jnp.float32)
-    w = (jnp.ones((e,), jnp.float32) if weights is None
-         else jnp.asarray(weights, jnp.float32))
-    u, n_iter = _ama_fixed_point(a, lam[None], w, iters=iters, tol=tol)
-    return _extract(u[0], lam, n_iter, merge_tol)
+    u, n_iter = _ama_fixed_point(a, lam[None], edge_set, iters=iters,
+                                 tol=tol)
+    sparse = None if edges == "complete" else edge_set
+    return _extract(u[0], lam, n_iter, merge_tol, sparse)
 
 
-@functools.partial(jax.jit, static_argnames=("n_lambdas", "iters"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_lambdas", "iters", "edges", "knn_k"))
 def device_clusterpath(key, points, *, n_lambdas: int = 10,
                        iters: int = 300, tol: float = 1e-7,
-                       merge_tol=None) -> DeviceConvexResult:
+                       merge_tol=None, edges: str = "complete",
+                       knn_k: int = 8) -> DeviceConvexResult:
     """K-free lambda-ladder convex clustering, fully on device.
 
     A ladder of ``n_lambdas`` equidistant penalties (the host sweep's
@@ -202,27 +267,29 @@ def device_clusterpath(key, points, *, n_lambdas: int = 10,
     device analogue of the host clusterpath's rule (b).  The host
     probe-and-verify refinement (rule (a), the interval check (17))
     stays host-side; parity tests compare recovered partitions, not the
-    selection diagnostics.
+    selection diagnostics.  ``edges="knn"`` swaps in the sparse fusion
+    graph (degree-normalized weights keep the ladder's lambda scales
+    transferable).
     """
     del key
     a = jnp.asarray(points, jnp.float32)
     m, d = a.shape
-    e = m * (m - 1) // 2
-    if e == 0:
+    if m < 2:
         return _extract(a, jnp.float32(1e-3), jnp.array(0, jnp.int32),
                         merge_tol)
-    lam_lo = jnp.maximum(_min_pairwise_dist(a) / (2.0 * (m - 1)), 1e-8)
+    edge_set = _build_edges(a, edges, knn_k)
+    lam_lo = jnp.maximum(_nearest_dist(a, edge_set) / (2.0 * (m - 1)), 1e-8)
     centred = a - jnp.mean(a, axis=0, keepdims=True)
     lam_hi = jnp.maximum(
         2.0 * jnp.max(jnp.linalg.norm(centred, axis=1)) / m, lam_lo * 10.0)
     lams = jnp.linspace(lam_lo, lam_hi, n_lambdas).astype(jnp.float32)
-    w = jnp.ones((e,), jnp.float32)
-    u, n_iter = _ama_fixed_point(a, lams, w, iters=iters, tol=tol)
+    u, n_iter = _ama_fixed_point(a, lams, edge_set, iters=iters, tol=tol)
+    sparse = None if edges == "complete" else edge_set
 
     def extract_one(u_l):
-        tol_l = (_default_merge_tol(u_l) if merge_tol is None
+        tol_l = (None if merge_tol is None
                  else jnp.asarray(merge_tol, jnp.float32))
-        labels_l = _fusion_components(u_l, tol_l)
+        labels_l = _components(u_l, tol_l, sparse)
         centers_l, counts_l = _root_indexed_centers(u_l, labels_l)
         return labels_l, centers_l, jnp.sum(counts_l > 0)
 

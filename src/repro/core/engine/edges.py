@@ -1,0 +1,210 @@
+"""Pluggable edge sets for the device convex-clustering family.
+
+The AMA solver (``engine/device_convex.py``) is generic over the fusion
+graph: the sum-of-norms penalty runs over an edge list, the dual state
+is one (E, d) block, and the step size is governed by the unweighted
+incidence spectrum.  Until now the graph was hardcoded to the complete
+graph — E = C(C-1)/2 edges, which is the C=4k wall in BENCH_engine.json
+(8.4M edges, 954s on this container).  This module makes the graph a
+registry plugin:
+
+  * ``Edges`` — the static-shape device representation every builder
+    returns: upper-triangular ``(i_idx, j_idx)`` endpoint vectors,
+    per-edge ``weights`` (0 marks an inert slot, e.g. a deduplicated
+    mutual-kNN copy — a zero radius projects its dual to zero, so inert
+    slots cost FLOPs but never move the solution), and ``inv_eta``, the
+    reciprocal AMA step (``eta <= 1/rho(A A^T)`` for the unweighted
+    incidence A).
+  * ``CompleteEdges`` — the paper's choice (uniform weights over all
+    pairs); ``inv_eta = m`` mirrors the host solver exactly.
+  * ``KnnEdges`` — the sparse mutual-kNN graph: a tiled top-k over the
+    ``pairwise_l2`` kernel (row tiles of the (m, m) distance matrix
+    stream through ``kernels.ops.pairwise_sqdist``; the full matrix is
+    never materialized), duplicate mutual pairs collapsed to one slot,
+    E = m*k slots total.  Weights are degree-normalized to
+    ``(m-1)/avg_degree`` so a fusion penalty lambda calibrated on the
+    complete graph (the paper's interval (17)) transfers: the aggregate
+    pull on a point matches the complete graph's.  ``inv_eta = 2 *
+    max_degree`` (the unweighted-Laplacian bound).
+  * ``register_edge_set`` / ``get_edge_set`` / ``list_edge_sets`` — the
+    registry, mirroring the clustering and federated-method registries;
+    new graphs (epsilon-balls, cluster-aware samplers, ...) drop in
+    without touching the solver.
+
+Builders are all-jnp and traceable — ``device_convex_cluster`` inlines
+them into the jitted one-shot round, so C=16k convex clustering runs
+with E = 16k * k edges instead of 134M.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+class Edges(NamedTuple):
+    """Device-resident fusion graph with static shapes."""
+    i_idx: jnp.ndarray            # (E,) int32, i < j on active slots
+    j_idx: jnp.ndarray            # (E,) int32
+    weights: jnp.ndarray          # (E,) float32, 0 = inert slot
+    inv_eta: Any                  # () f32 (or python float), step = 1/inv_eta
+    min_dist: Optional[jnp.ndarray] = None   # () min pairwise distance,
+    #                                          when the builder gets it
+    #                                          for free (kNN does)
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.i_idx.shape[0])
+
+
+@runtime_checkable
+class EdgeSet(Protocol):
+    """A registered fusion-graph builder (all-jnp, traceable)."""
+    name: str
+
+    def __call__(self, points, **options: Any) -> Edges: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class CompleteEdges:
+    """All m(m-1)/2 pairs, uniform weight 1 — the paper's fusion graph.
+
+    ``inv_eta = m`` (rho(A A^T) = m for the complete graph), identical
+    to the host solver's hardcoded step, so the complete edge set keeps
+    the device/host AMA parity bit-for-bit.
+    """
+    name: str = "complete"
+
+    def __call__(self, points, **_: Any) -> Edges:
+        m = points.shape[0]
+        iu, ju = np.triu_indices(m, k=1)
+        e = iu.shape[0]
+        # inv_eta stays a python float: eta = 1/m is then computed in
+        # host precision exactly as the host solver does (bit parity)
+        return Edges(
+            i_idx=jnp.asarray(iu, jnp.int32),
+            j_idx=jnp.asarray(ju, jnp.int32),
+            weights=jnp.ones((e,), jnp.float32),
+            inv_eta=float(max(m, 1)))
+
+
+def _tiled_topk(points, k: int, tile: int):
+    """Per-row k nearest neighbours without the dense (m, m) matrix.
+
+    Row tiles of the distance matrix stream through the ``pairwise_l2``
+    kernel dispatch ((tile, m) at a time) and ``lax.top_k`` reduces each
+    tile to its k smallest off-diagonal entries — peak memory O(tile*m)
+    instead of O(m^2).  Returns (idx (m, k) int32, dist (m, k) f32).
+    """
+    m, d = points.shape
+    tile = max(8, min(tile, m))
+    mt = ((m + tile - 1) // tile) * tile
+    blocks = jnp.pad(points, ((0, mt - m), (0, 0))).reshape(-1, tile, d)
+    starts = jnp.arange(blocks.shape[0], dtype=jnp.int32) * tile
+    cols = jnp.arange(m, dtype=jnp.int32)
+
+    def one(_, blk_start):
+        blk, start = blk_start
+        d2 = kops.pairwise_sqdist(blk, points)              # (tile, m)
+        rows = start + jnp.arange(tile, dtype=jnp.int32)
+        d2 = jnp.where(rows[:, None] == cols[None, :], jnp.inf, d2)
+        neg, idx = jax.lax.top_k(-d2, k)
+        return _, (idx.astype(jnp.int32), -neg)
+
+    _, (idx, d2) = jax.lax.scan(one, None, (blocks, starts))
+    idx = idx.reshape(mt, k)[:m]
+    d2 = d2.reshape(mt, k)[:m]
+    return idx, jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class KnnEdges:
+    """Sparse mutual-kNN fusion graph — the C >> 4k convex edge set.
+
+    E = m*k static slots (one per (row, neighbour) pair).  Each slot is
+    canonicalized to (min, max); when a pair is mutually nearest the
+    copy owned by the larger endpoint is zero-weighted, so every
+    unordered edge contributes exactly once.  Active weights are the
+    uniform degree-normalized value (m-1)/avg_degree: the total pull
+    lambda * sum_j w_ij on a point matches the complete graph's
+    lambda * (m-1), which keeps the paper's interval-(17) lambda scales
+    meaningful on the sparse graph.
+    """
+    name: str = "knn"
+
+    def __call__(self, points, *, knn_k: int = 8, tile: int = 1024,
+                 **_: Any) -> Edges:
+        m = points.shape[0]
+        k = int(min(max(knn_k, 1), max(m - 1, 1)))
+        if m < 2:
+            return CompleteEdges()(points)
+        idx, dist = _tiled_topk(points, k, tile)            # (m, k)
+        rows = jnp.repeat(jnp.arange(m, dtype=jnp.int32), k)
+        nbrs = idx.reshape(-1)
+        # mutual-pair dedup: slot (i -> j) with i > j is a duplicate iff
+        # i also appears in knn(j) — that edge already exists as (j -> i)
+        back = idx[idx]                                     # (m, k, k)
+        mutual = jnp.any(
+            back == jnp.arange(m, dtype=jnp.int32)[:, None, None], axis=-1)
+        keep = (rows < nbrs) | ~mutual.reshape(-1)
+        i_idx = jnp.minimum(rows, nbrs)
+        j_idx = jnp.maximum(rows, nbrs)
+        n_active = jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
+        avg_deg = 2.0 * n_active / m
+        w0 = jnp.asarray(m - 1, jnp.float32) / avg_deg
+        weights = jnp.where(keep, w0, 0.0)
+        deg = (jnp.zeros((m,), jnp.float32)
+               .at[i_idx].add(keep.astype(jnp.float32))
+               .at[j_idx].add(keep.astype(jnp.float32)))
+        inv_eta = jnp.maximum(2.0 * jnp.max(deg), 1.0)
+        return Edges(i_idx=i_idx, j_idx=j_idx, weights=weights,
+                     inv_eta=inv_eta, min_dist=jnp.min(dist))
+
+
+# --------------------------------------------------------------- registry
+
+_EDGE_SETS: dict[str, EdgeSet] = {}
+
+
+def register_edge_set(builder: EdgeSet, *, name: Optional[str] = None,
+                      overwrite: bool = False) -> EdgeSet:
+    """Add a fusion-graph builder. Returns it (decorator-safe)."""
+    key = name if name is not None else builder.name
+    if not key:
+        raise ValueError("edge set needs a non-empty name")
+    if key in _EDGE_SETS and not overwrite:
+        raise ValueError(f"edge set {key!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _EDGE_SETS[key] = builder
+    return builder
+
+
+def unregister_edge_set(name: str) -> None:
+    """Remove a registered edge set (used by tests/plugins)."""
+    _EDGE_SETS.pop(name, None)
+
+
+def get_edge_set(name) -> EdgeSet:
+    """Resolve a name (or pass through an instance) to a builder."""
+    if not isinstance(name, str):
+        return name
+    try:
+        return _EDGE_SETS[name]
+    except KeyError:
+        raise KeyError(f"unknown edge set {name!r}; "
+                       f"registered: {sorted(_EDGE_SETS)}") from None
+
+
+def list_edge_sets() -> tuple[str, ...]:
+    """Names of every registered fusion-graph builder."""
+    return tuple(sorted(_EDGE_SETS))
+
+
+for _b in (CompleteEdges(), KnnEdges()):
+    register_edge_set(_b)
+del _b

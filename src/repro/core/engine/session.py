@@ -1,0 +1,365 @@
+"""AggregationSession — the server side of Algorithm 1 as a long-lived,
+streaming service.
+
+The paper's server is not a function call: clients upload sketches over
+time, the server clusters once enough arrived, and later traffic is
+*routed* — a fresh client is assigned to its nearest recovered cluster
+and served that cluster's model (IFCA's serving loop, k-FED's one-shot
+estimate).  ``one_shot_aggregate`` compresses all of that into a single
+invocation that needs every client's parameters in one stacked pytree;
+this module is the stateful redesign:
+
+  * ``ingest(wave)`` / ``ingest(sketches=...)`` — step-1 uploads, wave
+    by wave.  Parameter waves are sketched on device (the same vmapped
+    JL projection as the fused round) and written into a fixed-capacity
+    (capacity, sketch_dim) device buffer by ``dynamic_update_slice``;
+    nothing federation-sized ever crosses to host, and the wave size is
+    the caller's memory knob (``launch/simulate.py`` feeds its ERM
+    waves straight in).  Sketch-only waves support servers that never
+    see raw parameters (the paper's actual communication model).
+  * ``finalize(algorithm=..., engine=...)`` — steps 2-4: the registered
+    clustering + per-cluster parameter mean over everything ingested.
+    The device path traces the exact ``_cluster_and_average`` body of
+    the fused round (``engine/aggregate.py``), so a session fed any
+    wave partition of a federation is **bit-exact** with
+    ``one_shot_aggregate(engine="device")`` on the same clients — the
+    property tests in ``tests/test_session.py`` pin this down.
+  * ``route(sketch | params)`` — serving: nearest recovered cluster in
+    sketch space through the fused ``kernels/kmeans_assign`` dispatch;
+    ``cluster_model(cid)`` hands back that cluster's averaged model
+    (what ``launch/serve.py --route-by-sketch`` serves).
+
+The session is deliberately dumb about *which* clustering runs: it
+resolves ``algorithm`` through the admissible registry exactly like
+``one_shot_aggregate`` (device twins upgrade host names), so every
+registered family — including ``convex-device`` with the sparse
+``edges="knn"`` fusion graph — streams the same way.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.clustering.api import (
+    device_twin,
+    get_algorithm,
+    is_device_algorithm,
+    resolve_device_request,
+)
+from repro.core.engine.aggregate import (
+    _finalize_program,
+    compact_labels,
+    materialize_round,
+)
+from repro.core.federated import FederatedState, cluster_average_tree
+from repro.core.sketch import sketch_tree
+from repro.kernels import ops as kops
+from repro.optim import adamw_init
+
+
+class AggregationSession:
+    """Streaming server-side aggregation over a fixed client capacity.
+
+    Args:
+      capacity: maximum number of clients this session can ingest (the
+        sketch buffer is allocated once at this size).
+      sketch_dim: JL sketch width (step-1 upload size per client).
+      cfg: optional ``ModelConfig`` — only consulted for the MoE
+        router-invariant sketch filter, exactly as in
+        ``one_shot_aggregate``.
+      seed / cluster_seed: drive the shared JL projection and the
+        clustering init (same split as the fused round).
+      mesh / client_axis: shard the client axis of the buffers.
+    """
+
+    def __init__(self, capacity: int, *, sketch_dim: int = 256, cfg=None,
+                 seed: int = 0, cluster_seed: Optional[int] = None,
+                 mesh=None, client_axis: str = "data"):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.sketch_dim = int(sketch_dim)
+        self.seed = int(seed)
+        self.cluster_seed = self.seed if cluster_seed is None else int(
+            cluster_seed)
+        self.mesh, self.client_axis = mesh, client_axis
+        from repro.core.federated import _router_invariant_filter
+        self._leaf_filter = (_router_invariant_filter
+                             if cfg is not None
+                             and getattr(cfg, "is_moe", False) else None)
+        self._sketch_key = jax.random.PRNGKey(self.seed)
+        self._sketches = self._constrain(
+            jnp.zeros((self.capacity, self.sketch_dim), jnp.float32))
+        self._params = None            # stacked buffer, lazily allocated
+        self._count = 0
+        self._mode: Optional[str] = None    # 'params' | 'sketches'
+        self._final = None             # (state, labels, info) of finalize
+        self._route_centers = None     # (K', sketch_dim) active centers
+        self._first_idx = None         # (K',) one member index per cluster
+
+        def _ingest(sk_buf, p_buf, wave, offset):
+            sk = jax.vmap(
+                lambda p: sketch_tree(self._sketch_key, p, self.sketch_dim,
+                                      leaf_filter=self._leaf_filter))(wave)
+            sk_buf = self._constrain(
+                jax.lax.dynamic_update_slice_in_dim(sk_buf, sk, offset, 0))
+            p_buf = jax.tree_util.tree_map(
+                lambda b, w: self._constrain(
+                    jax.lax.dynamic_update_slice_in_dim(b, w, offset, 0)),
+                p_buf, wave)
+            return sk_buf, p_buf
+
+        def _ingest_sk(sk_buf, sk, offset):
+            return self._constrain(
+                jax.lax.dynamic_update_slice_in_dim(sk_buf, sk, offset, 0))
+
+        # donate the capacity-sized buffers so XLA updates them in place
+        # (a fresh full-size copy per wave would defeat the streaming
+        # design); the CPU backend can't donate and would warn per wave
+        donate = jax.default_backend() != "cpu"
+        self._ingest_fn = jax.jit(_ingest,
+                                  donate_argnums=(0, 1) if donate else ())
+        self._ingest_sk_fn = jax.jit(_ingest_sk,
+                                     donate_argnums=(0,) if donate else ())
+        self._sketch_one = jax.jit(
+            lambda p: sketch_tree(self._sketch_key, p, self.sketch_dim,
+                                  leaf_filter=self._leaf_filter))
+
+    # ------------------------------------------------------------ ingest
+
+    def _constrain(self, x):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(self.client_axis)))
+
+    @property
+    def count(self) -> int:
+        """Clients ingested so far."""
+        return self._count
+
+    @property
+    def sketches(self) -> jnp.ndarray:
+        """Device-resident (count, sketch_dim) view of the accumulated
+        sketch matrix (no host copy)."""
+        return self._sketches[:self._count]
+
+    def _reserve(self, w: int) -> int:
+        if w < 1:
+            raise ValueError("empty wave")
+        if self._count + w > self.capacity:
+            raise ValueError(
+                f"session capacity exceeded: {self._count} ingested + wave "
+                f"of {w} > capacity {self.capacity}")
+        offset, self._count = self._count, self._count + w
+        self._final = None             # new uploads invalidate the round
+        return offset
+
+    def ingest(self, wave=None, *, sketches=None) -> int:
+        """Ingest one wave of step-1 uploads; returns the wave's offset.
+
+        ``wave`` is a stacked parameter pytree (every leaf has leading
+        axis w) or a ``FederatedState``; ``sketches=`` takes an already
+        projected (w, sketch_dim) matrix instead (sketch-only servers).
+        Modes cannot be mixed within one session: parameter averaging in
+        ``finalize`` needs every client's parameters.
+        """
+        if (wave is None) == (sketches is None):
+            raise ValueError("pass exactly one of wave= or sketches=")
+        if sketches is not None:
+            return self._ingest_sketches(sketches)
+        if isinstance(wave, FederatedState):
+            wave = wave.params
+        if self._mode == "sketches":
+            raise ValueError("session already holds sketch-only waves; "
+                             "cannot mix in parameter waves")
+        leaves = jax.tree_util.tree_leaves(wave)
+        if not leaves:
+            raise ValueError("empty parameter wave")
+        w = int(leaves[0].shape[0])
+        offset = self._reserve(w)
+        self._mode = "params"      # only after validation: a rejected
+        #                            wave must not lock the mode in
+        if self._params is None:
+            # the stacked buffer shards its client axis like the sketch
+            # buffer: per-device memory stays bounded by the shard
+            self._params = jax.tree_util.tree_map(
+                lambda l: self._constrain(
+                    jnp.zeros((self.capacity,) + l.shape[1:], l.dtype)),
+                wave)
+        self._sketches, self._params = self._ingest_fn(
+            self._sketches, self._params, wave,
+            jnp.asarray(offset, jnp.int32))
+        return offset
+
+    def _ingest_sketches(self, sketches) -> int:
+        if self._mode == "params":
+            raise ValueError("session already holds parameter waves; "
+                             "cannot mix in sketch-only waves")
+        sketches = jnp.asarray(sketches, jnp.float32)
+        if sketches.ndim != 2 or sketches.shape[1] != self.sketch_dim:
+            raise ValueError(f"sketch wave must be (w, {self.sketch_dim}), "
+                             f"got {sketches.shape}")
+        offset = self._reserve(int(sketches.shape[0]))
+        self._mode = "sketches"    # only after validation, as above
+        self._sketches = self._ingest_sk_fn(self._sketches, sketches,
+                                            jnp.asarray(offset, jnp.int32))
+        return offset
+
+    # ---------------------------------------------------------- finalize
+
+    def finalize(self, *, algorithm="kmeans-device", k: Optional[int] = None,
+                 algo_options: Optional[dict] = None,
+                 engine: str = "device"):
+        """Steps 2-4 over everything ingested: cluster the accumulated
+        sketch matrix, average parameters per recovered cluster.
+
+        Returns ``(new_state, labels, info)`` with the same contract as
+        ``one_shot_aggregate`` (``new_state is None`` for sketch-only
+        sessions, which have nothing to average — labels/centers still
+        come back and routing becomes available).  The device path is
+        bit-exact with the fused round on the same clients.
+        """
+        if engine not in ("auto", "host", "device"):
+            raise ValueError(f"engine must be auto|host|device, got "
+                             f"{engine!r}")
+        if self._count == 0:
+            raise ValueError("nothing ingested")
+        if engine != "host":
+            # the legacy Lloyd-name mapping (kmeans++ -> kmeans-device
+            # with init='kmeans++'), shared with ODCLFederated; raises
+            # for host-only no-twin names under engine='device'
+            algorithm, algo_options = resolve_device_request(
+                algorithm, algo_options, strict=engine == "device")
+        algo = get_algorithm(algorithm)
+        dev = algo if is_device_algorithm(algo) else device_twin(algo)
+        use_device = engine != "host" and dev is not None
+        if use_device:
+            algo = dev
+        k_eff = k if algo.requires_k else None
+        sketches = self.sketches                   # (count, sketch_dim)
+        params = (None if self._params is None else
+                  jax.tree_util.tree_map(lambda l: l[:self._count],
+                                         self._params))
+        if use_device:
+            out = self._finalize_device(algo, k_eff, algo_options, sketches,
+                                        params)
+        else:
+            out = self._finalize_host(algo, k_eff, algo_options, sketches,
+                                      params)
+        self._final = out
+        return out
+
+    def _finalize_device(self, algo, k, algo_options, sketches, params):
+        cluster_key = jax.random.PRNGKey(self.cluster_seed)
+        opts = tuple(sorted((algo_options or {}).items()))
+        if params is None:
+            res = algo.device_call(cluster_key, sketches, k=k,
+                                   **dict(opts))
+            labels, uniq, first = compact_labels(res.labels)
+            meta = {n: float(np.asarray(v)) for n, v in res.meta.items()}
+            info = {"n_clusters": int(len(uniq)), "meta": meta,
+                    "engine": "device", "count": self._count}
+            self._set_routing(res.centers[jnp.asarray(uniq)], first)
+            return None, labels, info
+        try:
+            fin = _finalize_program(algo, k, opts, self.mesh,
+                                    self.client_axis)
+        except TypeError:          # unhashable algorithm/options/mesh
+            fin = _finalize_program.__wrapped__(algo, k, opts, self.mesh,
+                                               self.client_axis)
+        new_params, res = fin(cluster_key, sketches, params)
+        state = FederatedState(params=params, opt_state=None,
+                               n_clients=self._count, step=0)
+        new_state, labels, info, uniq, first = materialize_round(
+            new_params, res, state)
+        info["count"] = self._count
+        self._set_routing(res.centers[jnp.asarray(uniq)], first)
+        return new_state, labels, info
+
+    def _finalize_host(self, algo, k, algo_options, sketches, params):
+        from repro.core.odcl import run_clustering
+
+        result = run_clustering(jax.random.PRNGKey(self.cluster_seed),
+                                np.asarray(sketches), algo, k=k,
+                                **(algo_options or {}))
+        labels, _, first = compact_labels(result.labels)
+        info = {"n_clusters": result.n_clusters, "meta": result.meta,
+                "engine": "host", "count": self._count}
+        self._set_routing(jnp.asarray(result.centers, jnp.float32), first)
+        if params is None:
+            return None, labels, info
+        labels_j = jnp.asarray(labels)
+        onehot = jax.nn.one_hot(labels_j, result.n_clusters,
+                                dtype=jnp.float32)
+        counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)
+        new_params = cluster_average_tree(params, onehot, counts)
+        new_state = FederatedState(
+            params=new_params, opt_state=jax.vmap(adamw_init)(new_params),
+            n_clients=self._count, step=0)
+        return new_state, labels, info
+
+    def _set_routing(self, centers, first_idx):
+        self._route_centers = centers
+        self._first_idx = np.asarray(first_idx)
+
+    # ------------------------------------------------------------- serve
+
+    def route(self, sketch=None, *, params=None):
+        """Assign a (possibly never-seen) client to its nearest recovered
+        cluster — the serving-time step 4.
+
+        Pass either a (sketch_dim,) / (n, sketch_dim) sketch or a raw
+        parameter pytree (sketched with the session's own projection).
+        Runs the fused ``kernels/kmeans_assign`` dispatch against the
+        active cluster centers; returns an int (or (n,) int array).
+        """
+        if self._final is None:
+            raise ValueError("route() needs finalize() first")
+        if (sketch is None) == (params is None):
+            raise ValueError("pass exactly one of sketch or params=")
+        if params is not None:
+            sketch = self._sketch_one(params)
+        sketch = jnp.asarray(sketch, jnp.float32)
+        single = sketch.ndim == 1
+        pts = sketch[None] if single else sketch
+        labels, _, _ = kops.kmeans_assign(pts, self._route_centers)
+        out = np.asarray(labels)
+        return int(out[0]) if single else out
+
+    def cluster_model(self, cluster_id: int):
+        """The averaged model of one recovered cluster (a single-model
+        pytree, no leading client axis) — what a routed client is served.
+        """
+        if self._final is None:
+            raise ValueError("cluster_model() needs finalize() first")
+        state = self._final[0]
+        if state is None:
+            raise ValueError("sketch-only session holds no parameters")
+        idx = int(self._first_idx[int(cluster_id)])
+        return jax.tree_util.tree_map(lambda l: l[idx], state.params)
+
+    @property
+    def route_centers(self) -> jnp.ndarray:
+        """(K', sketch_dim) active cluster centers (device-resident)."""
+        if self._final is None:
+            raise ValueError("finalize() first")
+        return self._route_centers
+
+    # ------------------------------------------------------------- state
+
+    def state(self) -> FederatedState:
+        """The ingested federation as a stacked ``FederatedState`` —
+        feeds any registered ``FederatedMethod`` (how ``simulate.py``
+        runs iterative baselines over a streamed-in federation)."""
+        if self._mode != "params":
+            raise ValueError("state() needs parameter waves")
+        params = jax.tree_util.tree_map(lambda l: l[:self._count],
+                                        self._params)
+        return FederatedState(params=params,
+                              opt_state=jax.vmap(adamw_init)(params),
+                              n_clients=self._count)

@@ -46,11 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.clustering.api import (
-    device_twin,
-    get_algorithm,
-    is_device_algorithm,
-)
+from repro.core.clustering.api import get_algorithm, resolve_device_request
 from repro.core.federated import (
     FederatedState,
     _router_invariant_filter,
@@ -59,6 +55,7 @@ from repro.core.federated import (
     one_shot_aggregate,
 )
 from repro.core.sketch import sketch_tree
+from repro.kernels import ops as kops
 from repro.optim import AdamWConfig, adamw_init
 
 
@@ -88,6 +85,16 @@ def params_bytes_per_client(state: FederatedState) -> int:
     leaves = jax.tree_util.tree_leaves(state.params)
     c = max(1, state.n_clients)
     return sum(l.size // c * l.dtype.itemsize for l in leaves)
+
+
+def sketch_round_bytes(n_clients: int, sketch_dim: int,
+                       bytes_per: int) -> float:
+    """Protocol bytes of ONE sketch-clustered round: uplink = the JL
+    sketch plus the full model (steps 3-4 average full parameters
+    server-side), downlink = the cluster model.  The single accounting
+    rule shared by ODCLFederated, IFCA's sketch-assign rounds, and the
+    streaming-session path of ``launch/simulate.py``."""
+    return float(n_clients * (sketch_dim * 4 + 2 * bytes_per))
 
 
 def cluster_agreement(pred, true) -> float:
@@ -140,9 +147,6 @@ class ODCLFederated:
     seed: int = 0
     name: str = "odcl"
 
-    _DEVICE_INIT_OF = {"kmeans": "random", "kmeans++": "kmeans++",
-                       "spectral": "spectral"}
-
     def _resolve(self):
         """(algorithm, options) after the legacy device-name mapping.
 
@@ -150,22 +154,12 @@ class ODCLFederated:
         matching ``init`` option; names with a registered
         ``"<name>-device"`` twin (convex, clusterpath) pass through
         unchanged — ``one_shot_aggregate`` upgrades them itself.
+        Shared with the streaming session
+        (``clustering.api.resolve_device_request``).
         """
-        algorithm, options = self.algorithm, self.algo_options
-        if self.engine == "device":
-            algo = get_algorithm(algorithm)
-            if not is_device_algorithm(algo):
-                if algorithm in self._DEVICE_INIT_OF:
-                    algorithm = "kmeans-device"
-                    options = {"init": self._DEVICE_INIT_OF[self.algorithm],
-                               **(self.algo_options or {})}
-                elif device_twin(algo) is None:
-                    raise ValueError(
-                        f"engine='device' needs a device-capable algorithm "
-                        f"(e.g. kmeans-device), a Lloyd-family name, or a "
-                        f"name with a registered '-device' twin, "
-                        f"not {algorithm!r}")
-        return algorithm, options
+        if self.engine != "device":
+            return self.algorithm, self.algo_options
+        return resolve_device_request(self.algorithm, self.algo_options)
 
     def run(self, key, state: FederatedState, cfg, batches=None, *,
             mesh=None) -> FederatedMethodResult:
@@ -195,10 +189,8 @@ class ODCLFederated:
                            "loss_last": float(np.mean(losses[-1]))})
 
         bytes_per = params_bytes_per_client(state)
-        # uplink: the sketch plus the full model (steps 3-4 average full
-        # parameters server-side); downlink: the cluster model — same
-        # both-directions accounting as the IFCA rule below
-        comm = state.n_clients * (self.sketch_dim * 4 + 2 * bytes_per)
+        comm = sketch_round_bytes(state.n_clients, self.sketch_dim,
+                                  bytes_per)
         return FederatedMethodResult(
             state=state, labels=np.asarray(labels),
             n_clusters=info["n_clusters"], comm_rounds=1.0,
@@ -217,12 +209,21 @@ class IFCAFederated:
     estimates its cluster (``assign='loss'``: lowest local loss of the
     k candidates, the paper's rule; ``assign='sketch'``: nearest
     cluster model to the client's current parameters in JL sketch
-    space); clients run ``local_steps`` optimizer steps from their
-    cluster's model; the server re-averages within assigned clusters
-    (``cluster_mean_tree``; empty clusters keep their model, as in
-    ``core.ifca``).  ``warmup_steps`` of pure local training before the
-    loop plus ``init='clients'`` reproduces the paper's good-init
-    regime; ``init='perturb'`` starts from the perturbed client mean.
+    space, computed by the engine's fused ``kernels/kmeans_assign``
+    dispatch — one pass over the (C, sketch_dim) matrix instead of a
+    materialized (C, k, sketch_dim) difference block); clients run
+    ``local_steps`` optimizer steps from their cluster's model; the
+    server re-averages within assigned clusters (``cluster_mean_tree``;
+    empty clusters keep their model, as in ``core.ifca``).
+    ``warmup_steps`` of pure local training before the loop plus
+    ``init='clients'`` reproduces the paper's good-init regime;
+    ``init='perturb'`` starts from the perturbed client mean.
+
+    ``carry_opt_state=True`` is the FedOpt-style variant: per-cluster
+    Adam moments are averaged server-side alongside the parameters and
+    re-broadcast next round, instead of re-initializing every client's
+    optimizer from zero each round (surfaced as ``launch/train.py
+    --ifca-carry-opt``; benchmarked in ``fig4_ifca_comm.run_lm``).
     """
     k: int = 2
     rounds: int = 5
@@ -232,6 +233,7 @@ class IFCAFederated:
     init: str = "perturb"              # 'perturb' | 'clients'
     init_scale: float = 1e-2
     sketch_dim: int = 128
+    carry_opt_state: bool = False
     opt: Optional[AdamWConfig] = None
     seed: int = 0
     name: str = "ifca"
@@ -275,8 +277,12 @@ class IFCAFederated:
                 sk = jax.vmap(lambda p: sketch_tree(
                     skey, p, self.sketch_dim, leaf_filter=leaf_filter))
                 s_c, s_k = sk(params_c), sk(theta)               # (C,s),(k,s)
-                d2 = jnp.sum((s_c[:, None] - s_k[None]) ** 2, axis=-1)
-                return jnp.argmin(d2, axis=1).astype(jnp.int32)
+                # nearest-center through the engine's fused
+                # assign+accumulate dispatch (Pallas kernel on TPU): no
+                # (C, k, sketch_dim) difference block, so the rule
+                # scales to the C >> 1k federations of simulate.py
+                labels, _, _ = kops.kmeans_assign(s_c, s_k)
+                return labels
             return assign_fn
         raise ValueError(f"unknown assign rule {self.assign!r}")
 
@@ -302,6 +308,10 @@ class IFCAFederated:
             # remat="none" matches local_training (the warmup/ODCL path)
             local_step = jax.jit(make_local_train_step(cfg, self.opt,
                                                        remat="none"))
+        # FedOpt-style carried moments: one Adam state per cluster model,
+        # averaged server-side each round exactly like the parameters
+        cluster_opt = (jax.vmap(adamw_init)(theta)
+                       if self.carry_opt_state and self.local_steps else None)
 
         params, labels, rounds = state.params, None, []
         for r in range(self.rounds):
@@ -319,7 +329,10 @@ class IFCAFederated:
                 # refine it locally before uploading
                 params = jax.tree_util.tree_map(lambda t: t[new_labels],
                                                 theta)
-                opt_state = jax.vmap(adamw_init)(params)
+                opt_state = (jax.tree_util.tree_map(
+                    lambda t: t[new_labels], cluster_opt)
+                    if cluster_opt is not None
+                    else jax.vmap(adamw_init)(params))
                 for _ in range(self.local_steps):
                     b = jax.tree_util.tree_map(jnp.asarray, next(batches))
                     loss, params, opt_state = local_step(params, opt_state, b)
@@ -340,6 +353,14 @@ class IFCAFederated:
                 return jnp.where(mask, mean, prev)
 
             theta = jax.tree_util.tree_map(keep, means, theta)
+            if cluster_opt is not None:
+                # per-cluster moment means; the integer step leaf is
+                # uniform within a cluster (everyone advanced the same
+                # carried state by local_steps) so its mean is exact
+                opt_means = cluster_mean_tree(opt_state, onehot,
+                                              jnp.maximum(counts, 1.0))
+                cluster_opt = jax.tree_util.tree_map(keep, opt_means,
+                                                     cluster_opt)
             rounds.append({"round": r, "assign_churn": churn,
                            "cluster_sizes": np.asarray(counts).tolist(),
                            "loss_last": losses[-1] if losses else None})
@@ -360,14 +381,16 @@ class IFCAFederated:
             per_round = state.n_clients * (self.k + 1) * bytes_per
         else:
             # up: sketch + trained model; down: the assigned model
-            per_round = state.n_clients * (self.sketch_dim * 4 + 2 * bytes_per)
+            per_round = sketch_round_bytes(state.n_clients, self.sketch_dim,
+                                           bytes_per)
         return FederatedMethodResult(
             state=new_state, labels=labels,
             n_clusters=int(len(np.unique(labels))),
             comm_rounds=float(self.rounds),
             comm_bytes=float(self.rounds * per_round), round_metrics=rounds,
             meta={"assign": self.assign, "k": self.k,
-                  "warmup_steps": self.warmup_steps})
+                  "warmup_steps": self.warmup_steps,
+                  "carry_opt_state": self.carry_opt_state})
 
 
 # ------------------------------------------------------------- baselines

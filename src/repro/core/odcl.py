@@ -18,6 +18,7 @@ parameters.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Union
 
 import jax
@@ -49,6 +50,13 @@ class ODCLConfig:
     n_lambdas: int = 10              # clusterpath sweep size
     seed: int = 0
     assert_separable: bool = False   # raise if condition (4) fails vs Lemma alpha
+
+    def __post_init__(self):
+        warnings.warn(
+            "ODCLConfig is a legacy shim scheduled for removal; use "
+            "methods.Method.fit (e.g. ODCL(algorithm=...).fit(...)) or "
+            "one_shot_aggregate(algorithm=..., k=..., algo_options=...) "
+            "instead", DeprecationWarning, stacklevel=2)
 
     def algorithm_options(self) -> dict:
         """Map the legacy flat fields onto registry-call options."""

@@ -2,8 +2,22 @@
 KV-cache/recurrent-state serving path (per-cluster personalized models
 from a federated checkpoint, or a fresh init).
 
+Two ways to pick the served model from a stacked federated checkpoint:
+
+  * ``--client i`` — the raw per-client slice (legacy behaviour);
+  * ``--route-by-sketch`` — the paper's own serving rule: rebuild the
+    cluster structure from the checkpoint through a streaming
+    ``AggregationSession`` (ingest the stacked parameters, finalize the
+    registered clustering over their sketches), route the requested
+    client's sketch to its nearest recovered cluster, and serve that
+    cluster's *averaged* model — step 4 of Algorithm 1 at serving time,
+    which also handles clients the training run never saw.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --ckpt-dir ckpts \
+      --route-by-sketch --clusters 2 --client 3
 """
 from __future__ import annotations
 
@@ -57,6 +71,24 @@ def generate(params, cfg, prompts, gen: int, *, temperature: float = 0.0,
                     "tok_per_s": b * (gen - 1) / max(t_decode, 1e-9)}
 
 
+def route_from_checkpoint(stacked, cfg, client: int, *, algorithm: str,
+                          clusters: int, sketch_dim: int, seed: int = 0):
+    """Cluster a stacked federated checkpoint and pick the served model
+    by sketch routing.  Returns (cluster model pytree, cluster id, info).
+    """
+    from repro.core.engine.session import AggregationSession
+
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    session = AggregationSession(n, sketch_dim=sketch_dim, cfg=cfg,
+                                 seed=seed)
+    session.ingest(stacked)
+    _, labels, info = session.finalize(algorithm=algorithm, k=clusters,
+                                       engine="device")
+    client_params = jax.tree_util.tree_map(lambda l: l[client], stacked)
+    cid = session.route(params=client_params)
+    return session.cluster_model(cid), cid, {"labels": labels, **info}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -67,8 +99,18 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--client", type=int, default=0,
-                    help="which client's personalized model to serve from a "
-                         "stacked federated checkpoint")
+                    help="which client to serve from a stacked federated "
+                         "checkpoint (its raw slice, or — with "
+                         "--route-by-sketch — its routed cluster model)")
+    ap.add_argument("--route-by-sketch", action="store_true",
+                    help="rebuild the cluster structure from the stacked "
+                         "checkpoint (AggregationSession) and serve the "
+                         "cluster model the client's sketch routes to")
+    ap.add_argument("--clusters", type=int, default=2,
+                    help="k for the routing clustering (--route-by-sketch)")
+    ap.add_argument("--route-algorithm", default="kmeans-device",
+                    help="registered clustering for --route-by-sketch")
+    ap.add_argument("--route-sketch-dim", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -85,21 +127,41 @@ def main(argv=None):
         if step is None:
             raise SystemExit(f"no checkpoints found in {args.ckpt_dir}")
         stacked = restore_checkpoint(args.ckpt_dir, step, params)
+        leading = jax.tree_util.tree_leaves(stacked)[0].shape
+        is_stacked = leading != jax.tree_util.tree_leaves(params)[0].shape
+        if args.route_by_sketch:
+            if not is_stacked:
+                raise SystemExit("--route-by-sketch needs a stacked "
+                                 "federated checkpoint (leading client "
+                                 "axis); this one is a single model")
+            n = leading[0]
+            if not 0 <= args.client < n:
+                raise SystemExit(f"client index {args.client} out of range "
+                                 f"for {n} checkpointed clients")
+            stacked = jax.tree_util.tree_map(
+                lambda l, r: jnp.asarray(l, r.dtype), stacked, params)
+            params, cid, info = route_from_checkpoint(
+                stacked, cfg, args.client, algorithm=args.route_algorithm,
+                clusters=args.clusters, sketch_dim=args.route_sketch_dim,
+                seed=args.seed)
+            print(f"[ckpt] restored step {step}; client {args.client} "
+                  f"routed to cluster {cid}/{info['n_clusters']} "
+                  f"(labels {info['labels'].tolist()})")
+        else:
+            def select(restored, ref):
+                # federated checkpoints stack params along a leading
+                # client axis; single-model checkpoints restore as-is
+                if restored.shape == ref.shape:
+                    return jnp.asarray(restored, ref.dtype)
+                if restored.shape[1:] != ref.shape or \
+                        not 0 <= args.client < restored.shape[0]:
+                    raise SystemExit(
+                        f"checkpoint leaf {restored.shape} does not match "
+                        f"model {ref.shape} (client index {args.client})")
+                return jnp.asarray(restored[args.client], ref.dtype)
 
-        def select(restored, ref):
-            # federated checkpoints stack params along a leading client
-            # axis; single-model checkpoints restore as-is
-            if restored.shape == ref.shape:
-                return jnp.asarray(restored, ref.dtype)
-            if restored.shape[1:] != ref.shape or \
-                    not 0 <= args.client < restored.shape[0]:
-                raise SystemExit(
-                    f"checkpoint leaf {restored.shape} does not match model "
-                    f"{ref.shape} (client index {args.client})")
-            return jnp.asarray(restored[args.client], ref.dtype)
-
-        params = jax.tree_util.tree_map(select, stacked, params)
-        print(f"[ckpt] restored step {step} (client {args.client})")
+            params = jax.tree_util.tree_map(select, stacked, params)
+            print(f"[ckpt] restored step {step} (client {args.client})")
 
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab_size)

@@ -1,4 +1,4 @@
-"""Large-C client simulation driving the device aggregation engine.
+"""Large-C client simulation driving the streaming aggregation session.
 
 Where ``launch/train.py`` runs the paper's protocol on a handful of
 deep-model clients (heavy step 1, C ~ 10), this driver targets the
@@ -8,15 +8,22 @@ Appendix E.2), IFCA- and k-FED-scale federations.
 
 Clients are synthesized and solved in batched vmap **waves** — each
 wave draws ``wave`` clients' covariates, responses, and closed-form /
-Newton local ERMs in one jitted call — so peak memory is bounded by the
-wave, not by C, and the (C, d) stack of local models never leaves the
-device.  The one-shot round then runs through
-``engine.one_shot_aggregate_device``: sketch -> kmeans-device ->
-per-cluster mean, one jitted program.  The two drivers compose: this is
-phase 1+2 for wide federations, ``train.py --engine device`` is the
-same phase 2 behind deep-model phase 1.
+Newton local ERMs in one jitted call, then feeds the wave straight into
+``engine.session.AggregationSession.ingest`` (the step-1 upload): the
+session sketches the wave on device and accumulates the (C, sketch_dim)
+matrix in its fixed-capacity buffer, so peak memory is bounded by the
+wave and nothing federation-sized crosses to host.  The one-shot server
+round is then ``session.finalize()`` — the registered clustering +
+cluster mean over the streamed-in sketches, bit-exact with the fused
+``one_shot_aggregate(engine="device")`` round.  Iterative baselines
+(``--method ifca|fedavg``) run over ``session.state()``, the same
+streamed-in federation as a stacked ``FederatedState``.
 
   PYTHONPATH=src python -m repro.launch.simulate --clients 4096 --clusters 8
+
+  # the convex family past the complete-graph wall: sparse kNN edges
+  PYTHONPATH=src python -m repro.launch.simulate --clients 16384 \
+      --algorithm convex-device --edges knn --knn-k 8 --sketch-dim 32
 """
 from __future__ import annotations
 
@@ -36,14 +43,16 @@ from repro.core.clustering import (
     lambda_interval,
     list_algorithms,
 )
+from repro.core.engine import list_edge_sets
+from repro.core.engine.session import AggregationSession
 from repro.core.erm import batched_ridge_erm, logistic_erm
-from repro.core.federated import FederatedState
 from repro.core.federated_methods import (
     build_federated_method,
     cluster_agreement,
     list_federated_methods,
+    params_bytes_per_client,
+    sketch_round_bytes,
 )
-from repro.optim import adamw_init
 
 
 def staggered_optima(key, K: int, d: int):
@@ -86,15 +95,17 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
              wave: int = 4096, task: str = "ridge", sketch_dim: int = 64,
              algorithm: str = "kmeans-device", init: str = "kmeans++",
              kmeans_iters: int = 50, restarts: int = 1, cc_iters: int = 300,
+             edges: str = "complete", knn_k: int = 8,
              seed: int = 0, method: str = "odcl", rounds: int = 5,
              mesh=None) -> dict:
-    """Generate a K-cluster federation of ``clients`` users, solve the
-    local ERMs in waves, run any registered federated method over the
-    resulting ``FederatedState`` (default: ODCL's device one-shot
-    round), and return a summary dict (per-phase wall clock, recovered
-    clustering quality).  Iterative methods run with zero per-round
-    local steps — the shallow clients are already at their local ERMs —
-    so IFCA here is pure sketch-assign/re-average rounds.
+    """Generate a K-cluster federation of ``clients`` users, stream the
+    wave-solved local ERMs into an ``AggregationSession``, run the
+    requested federated method over it (default: the session's own
+    streaming one-shot round), and return a summary dict (per-phase wall
+    clock, recovered clustering quality).  Iterative methods run with
+    zero per-round local steps — the shallow clients are already at
+    their local ERMs — so IFCA here is pure sketch-assign/re-average
+    rounds over ``session.state()``.
 
     ``algorithm`` selects the admissible clustering family: the Lloyd
     device loop by default (``init``/``kmeans_iters``/``restarts``
@@ -103,33 +114,39 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
     the true clustering are a host-side driver setup pass over the
     local models; the aggregation round itself stays one jitted device
     program), ``clusterpath``/``clusterpath-device`` the K-free ladder.
+    ``edges``/``knn_k`` select the convex family's fusion graph
+    (``knn`` breaks the complete graph's C=4k edge wall).
     """
     key = jax.random.PRNGKey(seed)
     k_opt, k_data = jax.random.split(key)
     optima = staggered_optima(k_opt, clusters, dim)
     true_labels = jnp.arange(clients, dtype=jnp.int32) % clusters
 
+    session = AggregationSession(clients, sketch_dim=sketch_dim, seed=seed,
+                                 mesh=mesh)
     t0 = time.perf_counter()
-    thetas = []
+    t_ingest = 0.0
     for start in range(0, clients, wave):
         w = min(wave, clients - start)
-        thetas.append(_wave_erm(
+        theta_w = _wave_erm(
             jax.random.fold_in(k_data, start), optima,
             jax.lax.dynamic_slice_in_dim(true_labels, start, w),
-            wave=w, n=samples, d=dim, task=task))
-    thetas = jnp.concatenate(thetas, axis=0)       # (C, d[+1]) on device
-    jax.block_until_ready(thetas)
-    t_erm = time.perf_counter() - t0
+            wave=w, n=samples, d=dim, task=task)
+        ti = time.perf_counter()
+        session.ingest({"theta": theta_w})     # step-1 upload of the wave
+        t_ingest += time.perf_counter() - ti
+    jax.block_until_ready(session.sketches)
+    # disjoint phases: local_erm_s excludes the ingest dispatch measured
+    # inside the same loop, so the columns stay comparable with the
+    # pre-session BENCH_engine.json rows and sum to the loop wall clock
+    t_erm = time.perf_counter() - t0 - t_ingest
 
-    params = {"theta": thetas}
-    state = FederatedState(params=params,
-                           opt_state=jax.vmap(adamw_init)(params),
-                           n_clients=clients)
-
+    convex_family = algorithm.startswith(("convex", "clusterpath"))
     if algorithm.startswith("convex"):
         # paper E.1 exact-lambda selection: recovery bounds (17) on the
         # true clustering (the JL sketch is near-isometric, so the
         # theta-space midpoint lands inside the sketch-space interval)
+        thetas = session.state().params["theta"]
         lo, hi = lambda_interval(np.asarray(thetas), np.asarray(true_labels))
         lam = 0.5 * (lo + hi) if lo < hi else lo
         algo_options = {"lam": lam, "iters": cc_iters}
@@ -138,19 +155,40 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
     else:
         algo_options = {"init": init, "iters": kmeans_iters,
                         "restarts": restarts}
-
-    # C=10k+ states stay wholly on device: ODCL runs the jitted engine
-    # round; iterative methods (ifca/fedavg) loop sketch-space rounds
-    fed_method = build_federated_method(
-        method, algorithm=algorithm, engine="device", k=clusters,
-        algo_options=algo_options,
-        sketch_dim=sketch_dim, seed=seed, local_steps=0, rounds=rounds,
-        assign="sketch", init="clients")
+    if convex_family:
+        algo_options.update({"edges": edges, "knn_k": knn_k})
+    elif edges != "complete":
+        print(f"[warn] --edges {edges} only applies to the convex family; "
+              f"ignored for --algorithm {algorithm}")
 
     t1 = time.perf_counter()
-    res = fed_method.run(jax.random.PRNGKey(seed), state, None, None,
-                         mesh=mesh)
-    jax.block_until_ready(res.state.params)
+    if method == "odcl":
+        # the streaming server round: registered clustering + cluster
+        # mean over the session's accumulated sketch matrix (bit-exact
+        # with one_shot_aggregate(engine="device") on the same clients)
+        new_state, labels, info = session.finalize(
+            algorithm=algorithm, k=clusters, algo_options=algo_options,
+            engine="device")
+        jax.block_until_ready(new_state.params)
+        comm_rounds = 1.0
+        comm_bytes = sketch_round_bytes(
+            clients, sketch_dim, params_bytes_per_client(new_state))
+        n_clusters = info["n_clusters"]
+        meta = {"engine": info["engine"], **info["meta"]}
+    else:
+        # iterative methods loop sketch-space rounds over the streamed-in
+        # federation (C=10k+ states stay wholly on device)
+        fed_method = build_federated_method(
+            method, algorithm=algorithm, engine="device", k=clusters,
+            algo_options=algo_options,
+            sketch_dim=sketch_dim, seed=seed, local_steps=0, rounds=rounds,
+            assign="sketch", init="clients")
+        res = fed_method.run(jax.random.PRNGKey(seed), session.state(),
+                             None, None, mesh=mesh)
+        jax.block_until_ready(res.state.params)
+        labels = res.labels
+        comm_rounds, comm_bytes = res.comm_rounds, res.comm_bytes
+        n_clusters, meta = res.n_clusters, res.meta
     t_agg = time.perf_counter() - t1
 
     return {
@@ -158,19 +196,22 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         "samples": samples, "wave": wave, "task": task,
         "sketch_dim": sketch_dim, "seed": seed, "method": method,
         "algorithm": algorithm, "restarts": restarts,
-        "comm_rounds": res.comm_rounds, "comm_bytes": res.comm_bytes,
-        "phases": {"local_erm_s": t_erm, "aggregate_s": t_agg,
-                   "total_s": t_erm + t_agg},
-        "n_clusters_recovered": res.n_clusters,
-        "purity": cluster_agreement(res.labels, np.asarray(true_labels)),
-        "meta": res.meta,
+        "edges": edges if convex_family else None,
+        "knn_k": knn_k if (convex_family and edges == "knn") else None,
+        "comm_rounds": comm_rounds, "comm_bytes": comm_bytes,
+        "phases": {"local_erm_s": t_erm, "ingest_s": t_ingest,
+                   "aggregate_s": t_agg,
+                   "total_s": t_erm + t_ingest + t_agg},
+        "n_clusters_recovered": n_clusters,
+        "purity": cluster_agreement(labels, np.asarray(true_labels)),
+        "meta": meta,
     }
 
 
 def _device_runnable_algorithms() -> list:
     """Registry names the device engine can actually run: device-capable
     algorithms, names with a registered '-device' twin, and the Lloyd
-    host names ODCLFederated maps onto kmeans-device inits."""
+    host names the shared resolver maps onto kmeans-device inits."""
     lloyd = {"kmeans", "kmeans++", "spectral"}
     return [n for n in list_algorithms()
             if n in lloyd
@@ -186,7 +227,7 @@ def main(argv=None):
     ap.add_argument("--samples", type=int, default=64,
                     help="data points per client (n)")
     ap.add_argument("--wave", type=int, default=4096,
-                    help="clients generated+solved per vmap wave")
+                    help="clients generated+solved+ingested per vmap wave")
     ap.add_argument("--task", choices=("ridge", "logistic"), default="ridge")
     ap.add_argument("--sketch-dim", type=int, default=64)
     ap.add_argument("--algorithm", default="kmeans-device",
@@ -203,10 +244,17 @@ def main(argv=None):
                          "clustering of this many vmapped inits")
     ap.add_argument("--cc-iters", type=int, default=300,
                     help="max AMA iterations for the convex family")
+    ap.add_argument("--edges", default="complete",
+                    choices=list(list_edge_sets()),
+                    help="fusion graph for the convex family: 'complete' "
+                         "(paper default, E=C(C-1)/2) or 'knn' (sparse "
+                         "mutual-kNN, E=C*k — the C >> 4k edge set)")
+    ap.add_argument("--knn-k", type=int, default=8,
+                    help="neighbours per client for --edges knn")
     ap.add_argument("--method", default="odcl",
                     choices=list(list_federated_methods()),
                     help="registered federated method to run over the "
-                         "wave-batched federation")
+                         "streamed-in federation")
     ap.add_argument("--rounds", type=int, default=5,
                     help="communication rounds (ifca / fedavg)")
     ap.add_argument("--seed", type=int, default=0)
@@ -218,14 +266,17 @@ def main(argv=None):
         samples=args.samples, wave=args.wave, task=args.task,
         sketch_dim=args.sketch_dim, algorithm=args.algorithm,
         init=args.init, kmeans_iters=args.kmeans_iters,
-        restarts=args.restarts, cc_iters=args.cc_iters, seed=args.seed,
+        restarts=args.restarts, cc_iters=args.cc_iters,
+        edges=args.edges, knn_k=args.knn_k, seed=args.seed,
         method=args.method, rounds=args.rounds)
     ph = summary["phases"]
     print(f"[simulate] C={summary['clients']} K={summary['clusters']} "
           f"task={summary['task']} wave={summary['wave']} "
           f"algo={summary['algorithm']} "
+          f"edges={summary['edges'] or '-'} "
           f"method={summary['method']} rounds={summary['comm_rounds']:g}")
     print(f"[simulate] local ERMs {ph['local_erm_s']:.2f}s  "
+          f"ingest {ph['ingest_s']:.2f}s  "
           f"server rounds {ph['aggregate_s']:.2f}s "
           f"({summary['comm_bytes'] / 1e6:.2f}MB moved)")
     print(f"[simulate] recovered K'={summary['n_clusters_recovered']} "

@@ -24,9 +24,11 @@ with ``--reduced`` for the end-to-end example.
   PYTHONPATH=src python -m repro.launch.train --reduced \
       --method odcl --engine device --algo convex
 
-  # the iterative baseline the paper compares against (R rounds):
+  # the iterative baseline the paper compares against (R rounds);
+  # --ifca-carry-opt carries per-cluster Adam moments across rounds
   PYTHONPATH=src python -m repro.launch.train --reduced \
-      --method ifca --rounds 5 --local-steps 10 --warmup-steps 40
+      --method ifca --rounds 5 --local-steps 10 --warmup-steps 40 \
+      --ifca-carry-opt
 """
 from __future__ import annotations
 
@@ -70,6 +72,12 @@ def main(argv=None):
     ap.add_argument("--ifca-assign", choices=("loss", "sketch"),
                     default="loss", dest="assign",
                     help="IFCA cluster-estimate rule")
+    ap.add_argument("--ifca-carry-opt", action="store_true",
+                    dest="carry_opt_state",
+                    help="FedOpt-style IFCA: carry per-cluster Adam "
+                         "moments across rounds (averaged server-side "
+                         "with the parameters) instead of re-initializing "
+                         "every client's optimizer each round")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -138,7 +146,8 @@ def main(argv=None):
         algo_options=algo_options or None,
         local_steps=args.local_steps, post_steps=args.post_steps,
         rounds=args.rounds, warmup_steps=args.warmup_steps,
-        assign=args.assign, opt=opt, seed=args.seed)
+        assign=args.assign, carry_opt_state=args.carry_opt_state,
+        opt=opt, seed=args.seed)
 
     t0 = time.time()
     res = method.run(jax.random.PRNGKey(args.seed), state, cfg, it)

@@ -1,0 +1,209 @@
+"""The pluggable fusion-graph registry (core/engine/edges.py) and the
+edge-set-generic device convex solver: complete-graph parity with the
+PR-4 behaviour, the tiled-top-k mutual-kNN builder against a dense
+NumPy oracle, degree-normalized weights, and cluster recovery through
+the sparse graph at fixed lambda and along the clusterpath ladder.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustering import lambda_interval
+from repro.core.engine import (
+    CompleteEdges,
+    Edges,
+    KnnEdges,
+    device_clusterpath,
+    device_convex_cluster,
+    get_edge_set,
+    list_edge_sets,
+    register_edge_set,
+    unregister_edge_set,
+)
+
+from conftest import same_partition
+
+
+def make_blobs(seed, k=3, per=10, d=6, sep=30.0, noise=0.1):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d))
+    dists = np.linalg.norm(centers[:, None] - centers[None], axis=-1)
+    np.fill_diagonal(dists, np.inf)
+    centers *= sep / dists.min()
+    pts = np.concatenate(
+        [c + noise * rng.normal(size=(per, d)) for c in centers])
+    return pts.astype(np.float32), np.repeat(np.arange(k), per)
+
+
+def active_pairs(e: Edges):
+    i = np.asarray(e.i_idx)
+    j = np.asarray(e.j_idx)
+    w = np.asarray(e.weights)
+    return {(int(a), int(b)) for a, b, ww in zip(i, j, w) if ww > 0}
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_prepopulated_and_round_trip():
+    assert {"complete", "knn"} <= set(list_edge_sets())
+    assert isinstance(get_edge_set("complete"), CompleteEdges)
+    assert isinstance(get_edge_set("knn"), KnnEdges)
+    with pytest.raises(KeyError, match="complete"):
+        get_edge_set("not-a-graph")
+
+    @dataclasses.dataclass(frozen=True)
+    class Probe:
+        name: str = "probe-edges"
+
+        def __call__(self, points, **options):
+            return CompleteEdges()(points)
+
+    try:
+        register_edge_set(Probe())
+        assert "probe-edges" in list_edge_sets()
+        with pytest.raises(ValueError, match="already registered"):
+            register_edge_set(Probe())
+    finally:
+        unregister_edge_set("probe-edges")
+    assert "probe-edges" not in list_edge_sets()
+
+
+# --------------------------------------------------------- the builders
+
+def test_complete_edges_match_triu():
+    pts = jnp.asarray(np.random.default_rng(0).normal(size=(7, 3)),
+                      jnp.float32)
+    e = get_edge_set("complete")(pts)
+    iu, ju = np.triu_indices(7, k=1)
+    np.testing.assert_array_equal(np.asarray(e.i_idx), iu)
+    np.testing.assert_array_equal(np.asarray(e.j_idx), ju)
+    np.testing.assert_array_equal(np.asarray(e.weights), np.ones(len(iu)))
+    assert float(e.inv_eta) == 7.0
+
+
+def test_knn_edges_match_dense_oracle():
+    """Active slots must be exactly the union kNN graph the host
+    ``knn_weights`` builds (j in kNN(i) or i in kNN(j)), each unordered
+    pair once."""
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(23, 5)).astype(np.float32)
+    k = 4
+    e = jax.jit(lambda p: get_edge_set("knn")(p, knn_k=k))(jnp.asarray(pts))
+
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    knn_idx = np.argsort(d2, axis=1)[:, :k]
+    mask = np.zeros((23, 23), bool)
+    rows = np.repeat(np.arange(23), k)
+    mask[rows, knn_idx.ravel()] = True
+    mask |= mask.T
+    iu, ju = np.triu_indices(23, k=1)
+    expected = {(int(a), int(b)) for a, b in zip(iu, ju) if mask[a, b]}
+
+    got = active_pairs(e)
+    assert got == expected
+    # every slot is canonicalized i < j and slot count is m*k
+    assert np.all(np.asarray(e.i_idx) < np.asarray(e.j_idx))
+    assert e.n_edges == 23 * k
+    # min_dist is the exact nearest-neighbour distance
+    np.testing.assert_allclose(float(e.min_dist),
+                               float(np.sqrt(d2.min())), rtol=1e-5)
+
+
+def test_knn_weights_are_degree_normalized():
+    rng = np.random.default_rng(4)
+    pts = rng.normal(size=(17, 4)).astype(np.float32)
+    e = jax.jit(lambda p: get_edge_set("knn")(p, knn_k=3))(jnp.asarray(pts))
+    w = np.asarray(e.weights)
+    active = w[w > 0]
+    n_active = len(active)
+    # uniform normalized value: (m-1) / avg_degree, avg_degree = 2E/m
+    expected = (17 - 1) / (2.0 * n_active / 17)
+    np.testing.assert_allclose(active, expected, rtol=1e-5)
+    # inv_eta = 2 * max unweighted degree
+    deg = np.zeros(17)
+    for a, b in active_pairs(e):
+        deg[a] += 1
+        deg[b] += 1
+    np.testing.assert_allclose(float(e.inv_eta), 2.0 * deg.max(), rtol=1e-6)
+
+
+def test_knn_k_clamps_to_m_minus_one():
+    pts = jnp.asarray(np.random.default_rng(5).normal(size=(5, 3)),
+                      jnp.float32)
+    e = jax.jit(lambda p: get_edge_set("knn")(p, knn_k=64))(pts)
+    # k clamps to m-1: the graph is complete, every pair active once
+    assert active_pairs(e) == {(int(a), int(b))
+                               for a, b in zip(*np.triu_indices(5, k=1))}
+
+
+# -------------------------------------------- solver through the edges
+
+def test_complete_edges_keep_pr4_solution_bit_exact():
+    """edges='complete' (the default) must reproduce the pre-EdgeSet
+    solver exactly — same labels, same fused representatives."""
+    pts, true = make_blobs(0)
+    lo, hi = lambda_interval(pts, true)
+    lam = 0.5 * (lo + hi)
+    res = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts),
+                                lam=lam, iters=400)
+    res2 = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts),
+                                 lam=lam, iters=400, edges="complete")
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(res2.labels))
+    np.testing.assert_array_equal(np.asarray(res.u), np.asarray(res2.u))
+    assert int(res.n_clusters) == 3
+
+
+@pytest.mark.parametrize("seed,k", [(0, 3), (1, 2), (2, 4)])
+def test_knn_edges_recover_planted_clusters_at_interval_lambda(seed, k):
+    """Degree-normalized weights keep the complete-graph recovery
+    interval's lambda meaningful on the sparse graph."""
+    pts, true = make_blobs(seed, k=k)
+    lo, hi = lambda_interval(pts, true)
+    lam = 0.5 * (lo + hi)
+    res = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts),
+                                lam=lam, iters=400, edges="knn", knn_k=5)
+    assert int(res.n_clusters) == k
+    assert same_partition(np.asarray(res.labels), true)
+
+
+@pytest.mark.parametrize("seed,k", [(0, 3), (2, 4)])
+def test_knn_clusterpath_recovers_planted_k(seed, k):
+    pts, true = make_blobs(seed, k=k)
+    res = device_clusterpath(jax.random.PRNGKey(0), jnp.asarray(pts),
+                             n_lambdas=10, iters=300, edges="knn", knn_k=5)
+    assert int(res.n_clusters) == k
+    assert same_partition(np.asarray(res.labels), true)
+
+
+def test_knn_rejects_explicit_weights():
+    pts, _ = make_blobs(1)
+    with pytest.raises(ValueError, match="complete"):
+        device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts),
+                              lam=0.1, weights=jnp.ones((5,)), edges="knn")
+
+
+def test_edge_components_match_dense_on_complete_graph():
+    """Min-label propagation over the complete edge list must find the
+    same components as the dense (m, m) propagation."""
+    from repro.core.engine.device_convex import (
+        _fusion_components_dense,
+        _fusion_components_edges,
+    )
+
+    rng = np.random.default_rng(6)
+    # three tight groups of fused u's plus one outlier
+    u = np.concatenate([np.full((4, 3), 0.0), np.full((3, 3), 5.0),
+                        np.full((2, 3), -4.0), [[9.0, 9.0, 9.0]]])
+    u = jnp.asarray(u + 1e-5 * rng.normal(size=u.shape), jnp.float32)
+    iu, ju = np.triu_indices(10, k=1)
+    dense = _fusion_components_dense(u, jnp.float32(0.1))
+    via_edges = _fusion_components_edges(u, jnp.asarray(iu, jnp.int32),
+                                         jnp.asarray(ju, jnp.int32),
+                                         jnp.float32(0.1))
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(via_edges))
+    assert len(np.unique(np.asarray(dense))) == 4

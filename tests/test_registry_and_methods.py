@@ -214,6 +214,39 @@ def test_legacy_shim_convex_family_matches_method_api():
     assert legacy_cp.n_clusters == via_method_cp.n_clusters
 
 
+def test_resolve_device_request_lloyd_mapping_outranks_twin():
+    """The shared device resolver must map host Lloyd names onto
+    kmeans-device with the HOST algorithm's init — in particular
+    'kmeans' (which also has a registered twin) keeps init='random'
+    rather than silently upgrading to the twin's kmeans++ default."""
+    from repro.core.clustering.api import resolve_device_request
+
+    assert resolve_device_request("kmeans") == \
+        ("kmeans-device", {"init": "random"})
+    assert resolve_device_request("kmeans++", {"iters": 5}) == \
+        ("kmeans-device", {"init": "kmeans++", "iters": 5})
+    assert resolve_device_request("spectral") == \
+        ("kmeans-device", {"init": "spectral"})
+    # device-capable names and twin-upgradable names pass through
+    assert resolve_device_request("kmeans-device") == ("kmeans-device", None)
+    assert resolve_device_request("convex", {"lam": 0.1}) == \
+        ("convex", {"lam": 0.1})
+    # caller options override the mapped init
+    assert resolve_device_request("kmeans", {"init": "spectral"}) == \
+        ("kmeans-device", {"init": "spectral"})
+    with pytest.raises(ValueError, match="device-capable"):
+        resolve_device_request("gradient")
+    assert resolve_device_request("gradient", strict=False) == \
+        ("gradient", None)
+
+
+def test_odcl_config_shim_emits_deprecation_warning():
+    """The shim is scheduled for removal: constructing it must warn,
+    pointing migrators at Method.fit."""
+    with pytest.warns(DeprecationWarning, match="Method.fit"):
+        ODCLConfig(algo="kmeans++", k=3)
+
+
 def test_assert_separable_flags_bad_clustering():
     rng = np.random.default_rng(0)
     pts = rng.normal(size=(20, 4)).astype(np.float32)   # no cluster structure

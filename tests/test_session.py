@@ -1,0 +1,277 @@
+"""The streaming AggregationSession (core/engine/session.py).
+
+Pins down the server-API redesign's contracts: wave-partition
+invariance (finalize is bit-exact with the fused
+``one_shot_aggregate(engine="device")`` round no matter how the same
+clients were chunked into ingest waves), sketch-routed serving
+(``route`` sends every ingested client to its own recovered cluster and
+``cluster_model`` hands back that cluster's averaged model), the
+sketch-only ingest mode, and the buffer/mode guard rails.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import AggregationSession
+from repro.core.federated import FederatedState, one_shot_aggregate
+from repro.optim import adamw_init
+
+from conftest import same_partition
+
+
+def make_blobs(seed, sizes, d, sep=25.0, noise=0.25):
+    rng = np.random.default_rng(seed)
+    k = len(sizes)
+    centers = rng.normal(size=(k, d))
+    if k > 1:
+        dists = np.linalg.norm(centers[:, None] - centers[None], axis=-1)
+        np.fill_diagonal(dists, np.inf)
+        centers *= sep / dists.min()
+    pts = np.concatenate([
+        c + noise * rng.normal(size=(n, d)) for c, n in zip(centers, sizes)])
+    labels = np.repeat(np.arange(k), sizes)
+    return pts.astype(np.float32), labels
+
+
+def blob_state(pts):
+    params = {"theta": jnp.asarray(pts)}
+    return FederatedState(params=params,
+                          opt_state=jax.vmap(adamw_init)(params),
+                          n_clients=len(pts))
+
+
+def ingest_in_waves(session, pts, pattern):
+    """Chunk the client stack into waves by cycling ``pattern``."""
+    off, i = 0, 0
+    while off < len(pts):
+        w = min(pattern[i % len(pattern)], len(pts) - off)
+        session.ingest({"theta": jnp.asarray(pts[off:off + w])})
+        off += w
+        i += 1
+    return session
+
+
+# ------------------------------------- streaming ≡ fused one-shot round
+
+def test_session_finalize_bit_exact_with_fused_round():
+    pts, true = make_blobs(0, [9, 7, 11], 8)
+    ref_state, ref_labels, ref_info = one_shot_aggregate(
+        blob_state(pts), None, algorithm="kmeans-device", k=3,
+        sketch_dim=32, seed=3, engine="device")
+
+    sess = AggregationSession(len(pts), sketch_dim=32, seed=3)
+    ingest_in_waves(sess, pts, [5, 9, 2])
+    new_state, labels, info = sess.finalize(algorithm="kmeans-device", k=3)
+
+    np.testing.assert_array_equal(labels, ref_labels)
+    np.testing.assert_array_equal(np.asarray(new_state.params["theta"]),
+                                  np.asarray(ref_state.params["theta"]))
+    assert info["n_clusters"] == ref_info["n_clusters"]
+    assert info["engine"] == "device"
+    assert same_partition(labels, true)
+
+
+def test_session_finalize_convex_family_with_knn_edges():
+    pts, true = make_blobs(1, [10, 8, 9], 6, sep=30.0, noise=0.1)
+    sess = AggregationSession(len(pts), sketch_dim=24, seed=1)
+    ingest_in_waves(sess, pts, [6])
+    _, labels, info = sess.finalize(
+        algorithm="clusterpath-device",
+        algo_options={"edges": "knn", "knn_k": 5, "iters": 300})
+    assert info["n_clusters"] == 3
+    assert same_partition(labels, true)
+
+
+def test_session_resolves_lloyd_host_names():
+    pts, true = make_blobs(2, [8, 8], 5)
+    sess = AggregationSession(len(pts), sketch_dim=16, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts)})
+    _, labels, info = sess.finalize(algorithm="kmeans++", k=2,
+                                    engine="device")
+    assert info["engine"] == "device"
+    assert same_partition(labels, true)
+
+
+def test_session_host_finalize():
+    pts, true = make_blobs(3, [7, 9], 5)
+    sess = AggregationSession(len(pts), sketch_dim=16, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts)})
+    new_state, labels, info = sess.finalize(algorithm="kmeans++", k=2,
+                                            engine="host")
+    assert info["engine"] == "host"
+    assert same_partition(labels, true)
+    theta = np.asarray(new_state.params["theta"])
+    for c in np.unique(labels):
+        members = np.where(labels == c)[0]
+        np.testing.assert_allclose(
+            theta[members],
+            np.broadcast_to(pts[members].mean(0), theta[members].shape),
+            rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------- sketch-routed serving
+
+def test_route_self_consistency_and_cluster_model():
+    pts, _ = make_blobs(4, [8, 6, 7], 8)
+    sess = AggregationSession(len(pts), sketch_dim=32, seed=5)
+    ingest_in_waves(sess, pts, [4, 7])
+    new_state, labels, _ = sess.finalize(algorithm="kmeans-device", k=3)
+    # every ingested client routes to its own recovered cluster
+    routed = sess.route(sess.sketches)
+    np.testing.assert_array_equal(routed, labels)
+    # single-sketch route returns a plain int
+    cid = sess.route(sess.sketches[0])
+    assert cid == int(labels[0])
+    # routing raw parameters sketches them with the session's projection
+    cid_p = sess.route(params={"theta": jnp.asarray(pts[0])})
+    assert cid_p == int(labels[0])
+    # the served cluster model is the routed cluster's averaged model
+    model = sess.cluster_model(cid)
+    np.testing.assert_array_equal(np.asarray(model["theta"]),
+                                  np.asarray(new_state.params["theta"][0]))
+
+
+def test_route_unseen_client_goes_to_nearest_cluster():
+    pts, true = make_blobs(5, [10, 10], 6, sep=30.0, noise=0.2)
+    # hold out the last client of each cluster
+    seen = np.ones(len(pts), bool)
+    seen[[9, 19]] = False
+    sess = AggregationSession(int(seen.sum()), sketch_dim=24, seed=7)
+    sess.ingest({"theta": jnp.asarray(pts[seen])})
+    _, labels, _ = sess.finalize(algorithm="kmeans-device", k=2)
+    for held in (9, 19):
+        cid = sess.route(params={"theta": jnp.asarray(pts[held])})
+        neighbours = labels[true[seen] == true[held]]
+        assert cid == neighbours[0]          # routed with its own blob
+
+
+# ------------------------------------------------ modes and guard rails
+
+def test_sketch_only_session_clusters_and_routes_but_has_no_models():
+    pts, true = make_blobs(6, [8, 9], 5)
+    full = AggregationSession(len(pts), sketch_dim=16, seed=0)
+    full.ingest({"theta": jnp.asarray(pts)})
+    sk = np.asarray(full.sketches)
+
+    sess = AggregationSession(len(pts), sketch_dim=16, seed=0)
+    sess.ingest(sketches=sk[:5])
+    sess.ingest(sketches=sk[5:])
+    state, labels, info = sess.finalize(algorithm="kmeans-device", k=2)
+    assert state is None
+    assert same_partition(labels, true)
+    np.testing.assert_array_equal(sess.route(sess.sketches), labels)
+    with pytest.raises(ValueError, match="sketch-only"):
+        sess.cluster_model(0)
+    with pytest.raises(ValueError, match="parameter waves"):
+        sess.state()
+
+
+def test_session_guard_rails():
+    sess = AggregationSession(8, sketch_dim=16)
+    with pytest.raises(ValueError, match="nothing ingested"):
+        sess.finalize()
+    with pytest.raises(ValueError, match="finalize"):
+        sess.route(np.zeros(16, np.float32))
+    with pytest.raises(ValueError, match="exactly one"):
+        sess.ingest()
+    sess.ingest({"theta": jnp.zeros((3, 4))})
+    with pytest.raises(ValueError, match="cannot mix"):
+        sess.ingest(sketches=np.zeros((2, 16), np.float32))
+    with pytest.raises(ValueError, match="capacity exceeded"):
+        sess.ingest({"theta": jnp.zeros((6, 4))})
+    with pytest.raises(ValueError, match=r"\(w, 16\)"):
+        AggregationSession(8, sketch_dim=16).ingest(
+            sketches=np.zeros((2, 8), np.float32))
+    assert sess.count == 3
+    assert sess.sketches.shape == (3, 16)
+
+
+def test_rejected_wave_does_not_lock_ingest_mode():
+    """A wave that fails validation must leave the session untouched —
+    in particular an invalid sketch wave on a fresh session must not
+    lock out parameter ingestion (and vice versa)."""
+    sess = AggregationSession(8, sketch_dim=16)
+    with pytest.raises(ValueError, match=r"\(w, 16\)"):
+        sess.ingest(sketches=np.zeros((2, 4), np.float32))
+    sess.ingest({"theta": jnp.zeros((2, 4))})      # still allowed
+    assert sess.count == 2
+
+    sess2 = AggregationSession(8, sketch_dim=16)
+    with pytest.raises(ValueError, match="empty parameter wave"):
+        sess2.ingest({})
+    sess2.ingest(sketches=np.zeros((2, 16), np.float32))   # still allowed
+    assert sess2.count == 2
+
+
+def test_ingest_after_finalize_invalidates_round():
+    pts, _ = make_blobs(7, [6, 6], 5)
+    sess = AggregationSession(len(pts), sketch_dim=16, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts[:8])})
+    sess.finalize(algorithm="kmeans-device", k=2)
+    sess.ingest({"theta": jnp.asarray(pts[8:])})
+    with pytest.raises(ValueError, match="finalize"):
+        sess.route(np.zeros(16, np.float32))
+    _, labels, _ = sess.finalize(algorithm="kmeans-device", k=2)
+    assert labels.shape == (len(pts),)
+
+
+def test_session_state_round_trips_into_one_shot():
+    """session.state() is the exact stacked federation — feeding it to
+    the fused round matches finalize (the simulate.py iterative path)."""
+    pts, _ = make_blobs(8, [7, 9], 6)
+    sess = AggregationSession(len(pts), sketch_dim=16, seed=2)
+    ingest_in_waves(sess, pts, [3, 5])
+    st = sess.state()
+    assert st.n_clients == len(pts)
+    np.testing.assert_array_equal(np.asarray(st.params["theta"]), pts)
+    ref_state, ref_labels, _ = one_shot_aggregate(
+        st, None, algorithm="kmeans-device", k=2, sketch_dim=16, seed=2,
+        engine="device")
+    new_state, labels, _ = sess.finalize(algorithm="kmeans-device", k=2)
+    np.testing.assert_array_equal(labels, ref_labels)
+    np.testing.assert_array_equal(np.asarray(new_state.params["theta"]),
+                                  np.asarray(ref_state.params["theta"]))
+
+
+# ------------------------------------------- hypothesis wave partitions
+
+try:
+    import hypothesis  # noqa: F401
+    _HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - env-dependent
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 10_000),
+           sizes=st.lists(st.integers(2, 7), min_size=2, max_size=4),
+           d=st.integers(2, 8),
+           sketch_dim=st.sampled_from([8, 16, 24]),
+           pattern=st.lists(st.integers(1, 7), min_size=1, max_size=5))
+    def test_any_wave_partition_is_bit_exact_with_fused_round(
+            seed, sizes, d, sketch_dim, pattern):
+        """The acceptance property: ANY wave partition of the same
+        clients makes finalize() bit-exact with the fused device round —
+        same labels, same averaged parameters, bit for bit."""
+        pts, _ = make_blobs(seed, sizes, d)
+        k = len(sizes)
+        ref_state, ref_labels, ref_info = one_shot_aggregate(
+            blob_state(pts), None, algorithm="kmeans-device", k=k,
+            sketch_dim=sketch_dim, seed=seed % 97, engine="device")
+
+        sess = AggregationSession(len(pts), sketch_dim=sketch_dim,
+                                  seed=seed % 97)
+        ingest_in_waves(sess, pts, pattern)
+        assert sess.count == len(pts)
+        new_state, labels, info = sess.finalize(algorithm="kmeans-device",
+                                                k=k)
+        np.testing.assert_array_equal(labels, ref_labels)
+        assert info["n_clusters"] == ref_info["n_clusters"]
+        np.testing.assert_array_equal(
+            np.asarray(new_state.params["theta"]),
+            np.asarray(ref_state.params["theta"]))
+        # route() self-consistency rides along on every drawn federation
+        np.testing.assert_array_equal(sess.route(sess.sketches), labels)
