@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.core import ODCLConfig, batched_ridge_erm, odcl, sgd_erm
+from repro.core import batched_ridge_erm, odcl, sgd_erm
 from repro.data import make_linear_regression_federation
 
 T_GRID = (20, 100, 500, 2500)
@@ -26,7 +26,7 @@ def run():
     fed = make_linear_regression_federation(seed=0, m=40, K=4, n=200)
     exact = np.asarray(batched_ridge_erm(
         jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
-    exact_res = odcl(exact, ODCLConfig(algo="kmeans++", k=4))
+    exact_res = odcl(exact, algorithm="kmeans++", k=4)
     exact_err = nmse(exact_res.user_models, fed)
 
     def loss(theta, batch):
@@ -45,7 +45,7 @@ def run():
         solver = jax.jit(jax.vmap(solve_one))
         local, us = timed(solver, keys, jnp.asarray(fed.xs),
                           jnp.asarray(fed.ys), iters=1)
-        res = odcl(np.asarray(local), ODCLConfig(algo="kmeans++", k=4))
+        res = odcl(np.asarray(local), algorithm="kmeans++", k=4)
         pts.append((t_steps, nmse(res.user_models, fed), res.n_clusters))
 
     emit("appendix_d/exact_erm", us, f"nmse={exact_err:.2e}")

@@ -1,7 +1,7 @@
 """Figure 3 (Appendix E.3): exact-lambda ODCL-CC vs the practical
 clusterpath variant — MSE and cluster counts vs n (linear regression,
 K=4).  Drives the unified ``Method.fit`` API (``methods.ODCL``); the
-legacy ``ODCLConfig`` shim keeps its own coverage in
+keyword-argument function API (``odcl(...)``) keeps its own coverage in
 ``tests/test_registry_and_methods.py``."""
 from __future__ import annotations
 

@@ -8,6 +8,7 @@ from benchmarks import (
     appendix_d_inexact,
     appendix_f_merging,
     bench_engine_scale,
+    bench_robustness,
     fig1_mse_vs_n,
     fig2_logistic,
     fig3_clusterpath,
@@ -31,6 +32,7 @@ BENCHES = [
     ("appendix_d", appendix_d_inexact.run),
     ("fig_sep", fig_separability.run),
     ("bench_engine", bench_engine_scale.run),
+    ("bench_robustness", bench_robustness.run),
     ("kernels", kernels_bench.run),
     ("roofline", roofline_report.run),
 ]

@@ -24,7 +24,9 @@ import benchmarks.run  # imports every benchmark module
 from repro.core import ODCL, get_algorithm, list_algorithms, list_methods
 from repro.core.clustering import is_device_algorithm
 from repro.core.engine import AggregationSession, list_edge_sets
+from repro.core.engine import list_aggregators, make_aggregator
 from repro.core.federated_methods import list_federated_methods
+from repro.scenarios import build_scenario, list_scenarios
 
 assert len(list_algorithms()) >= 8, list_algorithms()
 assert "odcl" in list_methods()
@@ -32,14 +34,21 @@ get_algorithm("kmeans++")
 assert is_device_algorithm(get_algorithm("kmeans-device"))
 assert is_device_algorithm(get_algorithm("convex-device"))
 assert is_device_algorithm(get_algorithm("clusterpath-device"))
+assert is_device_algorithm(get_algorithm("gradient-device"))
 assert {"complete", "knn"} <= set(list_edge_sets())
 assert callable(AggregationSession)
 assert {"odcl", "ifca", "fedavg", "local-only"} <= set(list_federated_methods())
+assert {"mean", "trimmed_mean", "median"} <= set(list_aggregators())
+assert make_aggregator("trimmed_mean", beta=0.2).beta == 0.2
+assert {"drift", "longtail", "byzantine", "dp"} <= set(list_scenarios())
+assert build_scenario("longtail+byzantine", frac=0.1).transforms_sketches is False
 print("benchmark driver imports OK;",
       f"{len(list_algorithms())} clustering algorithms,",
       f"{len(list_methods())} federated methods,",
       f"{len(list_federated_methods())} LM-scale federated methods,",
-      f"{len(list_edge_sets())} edge sets registered")
+      f"{len(list_edge_sets())} edge sets,",
+      f"{len(list_aggregators())} aggregators,",
+      f"{len(list_scenarios())} scenarios registered")
 PY
 
 # reduced large-C simulation: the device aggregation engine end-to-end
@@ -47,6 +56,15 @@ PY
 # cluster mean, one jitted program)
 PYTHONPATH=src python -m repro.launch.simulate \
     --clients 512 --clusters 8 --wave 256 --samples 32 --init spectral
+
+# adversity gate: 10% sign-flip Byzantine clients survived by the
+# trimmed-mean aggregator (robust center update + step-3 reduction +
+# trimmed-objective restart selection, all inside the jitted round)
+PYTHONPATH=src python -m repro.launch.simulate \
+    --clients 256 --clusters 4 --wave 128 --samples 32 \
+    --init random --restarts 4 \
+    --scenario byzantine --byzantine-frac 0.1 \
+    --aggregator trimmed_mean --trim-beta 0.25
 
 # same federation through the iterative baseline (sketch-assign rounds)
 PYTHONPATH=src python -m repro.launch.simulate \
@@ -91,3 +109,17 @@ PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
 PYTHONPATH=src python -m repro.launch.serve --reduced --batch 2 \
     --prompt-len 8 --gen 4 --ckpt-dir "$SMOKE_CKPT" --route-by-sketch \
     --clusters 2 --client 3 --route-sketch-dim 32
+
+# reduced robustness bench: Byzantine x aggregator + DP-epsilon sweeps
+# end-to-end, written to a throwaway path (the committed
+# BENCH_robustness.json comes from the full-size run)
+PYTHONPATH=src python -m benchmarks.bench_robustness --reduced \
+    --out "$SMOKE_CKPT/BENCH_robustness.json"
+python - "$SMOKE_CKPT/BENCH_robustness.json" <<'PY'
+import json, sys
+report = json.load(open(sys.argv[1]))
+assert report["bench"] == "robustness" and report["rows"]
+for row in report["rows"]:
+    assert {"scenario", "aggregator", "purity"} <= set(row), sorted(row)
+print(f"bench_robustness --reduced OK ({len(report['rows'])} rows)")
+PY

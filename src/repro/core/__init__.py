@@ -19,8 +19,8 @@ Two plugin layers sit at the center of the package:
 Around them:
 
   odcl.py       — Algorithm 1 primitives (registry-backed step 2 via
-                  ``run_clustering``/``cluster_models``, cluster-wise
-                  ``aggregate``) + the legacy ``ODCLConfig`` shim
+                  ``run_clustering``, aggregator-registry-backed
+                  cluster-wise ``aggregate``)
   clustering/   — the admissible algorithm implementations +
                   admissibility theory (Lemmas 1-2, condition (4))
   erm.py        — local ERM solvers (closed-form ridge, Newton logistic,
@@ -45,10 +45,8 @@ Around them:
                   model/launch stack)
 """
 from repro.core.odcl import (
-    ODCLConfig,
     ODCLResult,
     odcl,
-    cluster_models,
     aggregate,
     run_clustering,
 )
@@ -88,10 +86,8 @@ from repro.core.methods import (
 )
 
 __all__ = [
-    "ODCLConfig",
     "ODCLResult",
     "odcl",
-    "cluster_models",
     "aggregate",
     "run_clustering",
     "ridge_erm",

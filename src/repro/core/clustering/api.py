@@ -14,7 +14,7 @@ makes that set first-class:
     n_clusters, meta) replacing the ad-hoc per-algorithm tuples.
   * ``register_algorithm`` / ``get_algorithm`` / ``list_algorithms`` —
     the registry.  A newly registered algorithm is immediately usable
-    by ``methods.ODCL``, the legacy ``ODCLConfig`` shim, the LM-scale
+    by ``methods.ODCL``, the ``odcl`` entrypoint, the LM-scale
     ``federated.one_shot_aggregate`` path, and every benchmark.
 
 The six paper algorithms (kmeans, kmeans++, spectral, gradient, convex,
@@ -28,6 +28,7 @@ from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine.aggregators import get_aggregator
 from repro.core.engine.device_convex import (
     device_clusterpath,
     device_convex_cluster,
@@ -217,14 +218,25 @@ class DeviceLloydFamily:
     name: str = "kmeans-device"
     requires_k: bool = True
 
+    @staticmethod
+    def _resolve_aggregator(aggregator):
+        """None / 'mean' keep the fused-kernel accumulator path (the
+        bit-exact host-parity update); anything else resolves through
+        the aggregator registry to a robust center update."""
+        if aggregator is None:
+            return None
+        agg = get_aggregator(aggregator)
+        return None if agg.name == "mean" else agg
+
     def device_call(self, key, points, *, k: Optional[int] = None,
                     iters: int = 100, init: str = "kmeans++",
                     restarts: int = 1, batch_m: Optional[int] = None,
-                    **_: Any) -> DeviceClusteringResult:
+                    aggregator=None, **_: Any) -> DeviceClusteringResult:
         if k is None:
             raise ValueError(f"{self.name!r} requires k")
         res = device_kmeans(key, points, k, iters=iters, init=init,
-                            restarts=restarts, batch_m=batch_m)
+                            restarts=restarts, batch_m=batch_m,
+                            aggregator=self._resolve_aggregator(aggregator))
         # report the EFFECTIVE restart count: full-batch spectral seeding
         # is deterministic, so device_kmeans collapses its restarts to 1
         full_batch = batch_m is None or batch_m >= points.shape[0]
@@ -237,10 +249,10 @@ class DeviceLloydFamily:
     def __call__(self, key, points, *, k: Optional[int] = None,
                  iters: int = 100, init: str = "kmeans++",
                  restarts: int = 1, batch_m: Optional[int] = None,
-                 **_: Any) -> ClusteringResult:
+                 aggregator=None, **_: Any) -> ClusteringResult:
         res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
                                iters=iters, init=init, restarts=restarts,
-                               batch_m=batch_m)
+                               batch_m=batch_m, aggregator=aggregator)
         return _as_result(res.labels, res.centers,
                           {"inertia": float(res.meta["inertia"]),
                            "n_iter": int(res.meta["n_iter"]),
@@ -350,6 +362,38 @@ class GradientClustering:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceGradientClustering:
+    """Device twin of ``"gradient"`` — the damped center update loop is
+    already all-jnp (``clustering/gradient.py`` scans the fused assign),
+    so the twin just exposes it through ``device_call``.  It was the
+    last host-only family: with it registered, ``engine='auto'`` covers
+    the whole admissible registry on device."""
+    name: str = "gradient-device"
+    requires_k: bool = True
+
+    def device_call(self, key, points, *, k: Optional[int] = None,
+                    iters: int = 100, alpha: float = 0.5,
+                    **_: Any) -> DeviceClusteringResult:
+        if k is None:
+            raise ValueError("gradient clustering requires k")
+        res = gradient_clustering(key, points.astype(jnp.float32), k,
+                                  alpha=alpha, iters=iters)
+        return DeviceClusteringResult(labels=res.labels, centers=res.centers,
+                                      meta={"inertia": res.inertia})
+
+    def __call__(self, key, points, *, k: Optional[int] = None,
+                 iters: int = 100, alpha: float = 0.5,
+                 **_: Any) -> ClusteringResult:
+        res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
+                               iters=iters, alpha=alpha)
+        return _as_result(res.labels, res.centers,
+                          {"inertia": float(res.meta["inertia"])})
+
+    def admissibility_alpha(self, m: int, c_min: int) -> float:
+        return alpha_kmeans(m, c_min)
+
+
+@dataclasses.dataclass(frozen=True)
 class ConvexClustering:
     """Sum-of-norms clustering at a fixed lambda (ODCL-CC, Lemma 1)."""
     name: str = "convex"
@@ -439,6 +483,7 @@ for _algo in (
     LloydFamily(name="spectral", init="spectral"),
     DeviceLloydFamily(),
     GradientClustering(),
+    DeviceGradientClustering(),
     ConvexClustering(),
     Clusterpath(),
     DeviceConvexClustering(),

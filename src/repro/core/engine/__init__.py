@@ -29,8 +29,12 @@ in this subsystem:
           ``"clusterpath"`` auto-upgrade to their twins under
           ``engine='auto'|'device'``.
   step 3  (the server averages models within each recovered cluster)
-          — the masked one-hot mean inside ``one_shot_aggregate_device``,
-          fused into the same jitted program as steps 1-2.
+          — the pluggable per-cluster reduction of
+          ``engine/aggregators.py`` (``mean`` | coordinate-wise
+          ``trimmed_mean(beta)`` | ``median``, a registry mirroring the
+          clustering one), fused into the same jitted program as steps
+          1-2; the robust variants run as a static-shape segment sort
+          per cluster, no host transfer.
   step 4  (each user receives its cluster's model) — the gather-back
           ``onehot @ means``; under a mesh both 3 and 4 lower to psums
           over the ``data``-sharded client axis.
@@ -60,6 +64,19 @@ traceable, like ``device_convex_cluster`` — and ``register_algorithm``
 it; register it under ``"<host-name>-device"`` and the host name
 auto-upgrades too.
 """
+from repro.core.engine.aggregators import (
+    Aggregator,
+    MeanAggregator,
+    MedianAggregator,
+    TrimmedMeanAggregator,
+    cluster_aggregate_tree,
+    cluster_reduce_tree,
+    get_aggregator,
+    list_aggregators,
+    make_aggregator,
+    register_aggregator,
+    unregister_aggregator,
+)
 from repro.core.engine.device_convex import (
     DeviceConvexResult,
     device_clusterpath,
@@ -79,19 +96,28 @@ from repro.core.engine.edges import (
 
 __all__ = [
     "AggregationSession",
+    "Aggregator",
     "CompleteEdges",
     "DeviceConvexResult",
     "DeviceKMeansResult",
     "Edges",
     "EdgeSet",
     "KnnEdges",
+    "MeanAggregator",
+    "MedianAggregator",
+    "TrimmedMeanAggregator",
+    "cluster_aggregate_tree",
+    "cluster_reduce_tree",
     "device_clusterpath",
     "device_convex_cluster",
     "device_kmeans",
-    "get_edge_set",
-    "list_edge_sets",
+    "get_aggregator",
+    "list_aggregators",
+    "make_aggregator",
     "one_shot_aggregate_device",
+    "register_aggregator",
     "register_edge_set",
+    "unregister_aggregator",
     "unregister_edge_set",
 ]
 

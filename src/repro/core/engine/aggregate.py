@@ -35,11 +35,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.clustering.api import get_algorithm, is_device_algorithm
-from repro.core.federated import (
-    FederatedState,
-    _router_invariant_filter,
-    cluster_average_tree,
+from repro.core.engine.aggregators import (
+    cluster_aggregate_tree,
+    get_aggregator,
 )
+from repro.core.federated import FederatedState, _router_invariant_filter
 from repro.core.sketch import sketch_tree
 from repro.optim import adamw_init
 
@@ -55,30 +55,36 @@ def _constrainer(mesh, client_axis):
 
 
 def _cluster_and_average(algo, options, k, constrain, cluster_key,
-                         sketches, params):
+                         sketches, params, aggregator="mean"):
     """Steps 2-4 on an already-materialized sketch matrix (traceable).
 
     The single source of truth for the server's cluster->average stage:
     both the fused one-shot round below and the streaming session's
     ``finalize`` trace this exact body, which is what keeps the two
-    bit-exact on identical inputs.
+    bit-exact on identical inputs.  ``aggregator`` selects the
+    per-cluster reduction from the registry (``engine/aggregators.py``);
+    the default ``mean`` traces the identical contraction as before the
+    registry existed.
     """
     res = algo.device_call(cluster_key, sketches, k=k, **options)
     kk = res.centers.shape[0]
     onehot = jax.nn.one_hot(res.labels, kk, dtype=jnp.float32)  # (C, K)
-    counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)          # (K,)
+    counts = jnp.sum(onehot, axis=0)                            # (K,) raw
     new_params = jax.tree_util.tree_map(
-        constrain, cluster_average_tree(params, onehot, counts))
+        constrain, cluster_aggregate_tree(params, res.labels, onehot,
+                                          counts, aggregator))
     return new_params, res
 
 
 @functools.lru_cache(maxsize=16)
-def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis):
+def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis,
+                   aggregator="mean"):
     """Build the jitted end-to-end round for one static configuration.
 
-    Cached on the static pieces so repeated rounds (sweeps, parity
-    tests, multi-round drivers) reuse the compiled program instead of
-    retracing a fresh closure every call.
+    Cached on the static pieces (``aggregator`` resolves to a frozen
+    registry instance, so it joins the key) so repeated rounds (sweeps,
+    parity tests, multi-round drivers) reuse the compiled program
+    instead of retracing a fresh closure every call.
     """
     options = dict(opts)
     constrain = _constrainer(mesh, client_axis)
@@ -91,14 +97,15 @@ def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis):
         )(params)                                        # (C, sketch_dim)
         sketches = constrain(sketches)
         new_params, res = _cluster_and_average(
-            algo, options, k, constrain, cluster_key, sketches, params)
+            algo, options, k, constrain, cluster_key, sketches, params,
+            aggregator)
         return new_params, res, sketches
 
     return round_fn
 
 
 @functools.lru_cache(maxsize=16)
-def _finalize_program(algo, k, opts, mesh, client_axis):
+def _finalize_program(algo, k, opts, mesh, client_axis, aggregator="mean"):
     """Steps 2-4 alone, jitted — the streaming session's finalize.
 
     Identical trace body to the fused round's tail, fed the sketch
@@ -110,7 +117,8 @@ def _finalize_program(algo, k, opts, mesh, client_axis):
     @jax.jit
     def finalize_fn(cluster_key, sketches, params):
         return _cluster_and_average(algo, options, k, constrain,
-                                    cluster_key, sketches, params)
+                                    cluster_key, sketches, params,
+                                    aggregator)
 
     return finalize_fn
 
@@ -160,6 +168,7 @@ def one_shot_aggregate_device(state: FederatedState, cfg=None, *,
                               sketch_dim: int = 256, seed: int = 0,
                               cluster_seed: Optional[int] = None,
                               mesh=None, client_axis: str = "data",
+                              aggregator="mean",
                               return_sketches: bool = False):
     """Device-resident one-shot aggregation. Returns (state, labels, info).
 
@@ -168,22 +177,26 @@ def one_shot_aggregate_device(state: FederatedState, cfg=None, *,
     only consulted for the MoE router-invariant sketch filter — pass
     ``None`` for shallow per-client models (``launch/simulate.py``).
     ``seed`` drives the JL sketch; ``cluster_seed`` (default: ``seed``)
-    drives the clustering init, mirroring the host path's legacy
-    ``odcl_cfg.seed`` split.  With ``mesh`` given, the client axis of
+    drives the clustering init, mirroring the host path's seed split.
+    ``aggregator`` names a registered per-cluster reduction (or passes
+    an ``Aggregator`` instance) — the robust step-3 variants run inside
+    the same jitted program.  With ``mesh`` given, the client axis of
     sketches and parameters is constrained to ``client_axis`` and XLA
     shards the round over it.
     """
     algo = resolve_device_algorithm(algorithm)
+    aggregator = get_aggregator(aggregator)
     leaf_filter = (_router_invariant_filter
                    if cfg is not None and getattr(cfg, "is_moe", False)
                    else None)
     opts = tuple(sorted((algo_options or {}).items()))
     try:
         round_fn = _round_program(algo, k, opts, sketch_dim, leaf_filter,
-                                  mesh, client_axis)
+                                  mesh, client_axis, aggregator)
     except TypeError:  # unhashable algorithm/options/mesh: build uncached
         round_fn = _round_program.__wrapped__(algo, k, opts, sketch_dim,
-                                              leaf_filter, mesh, client_axis)
+                                              leaf_filter, mesh, client_axis,
+                                              aggregator)
 
     sketch_key = jax.random.PRNGKey(seed)
     cluster_key = jax.random.PRNGKey(

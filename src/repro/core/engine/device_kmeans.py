@@ -64,10 +64,15 @@ def _init_centers(key, points, k: int, init: str):
 
 
 def _lloyd(key, points, k: int, iters: int, init: str, tol: float,
-           batch_m: Optional[int]) -> DeviceKMeansResult:
+           batch_m: Optional[int],
+           aggregator=None) -> DeviceKMeansResult:
     """One Lloyd run.  ``batch_m=None`` is the full (PR-2 bit-exact)
     path; otherwise each iteration updates from a fresh without-
-    replacement sample of ``batch_m`` rows."""
+    replacement sample of ``batch_m`` rows.  ``aggregator`` (a registry
+    ``Aggregator`` instance, or ``None`` for the fused-kernel mean)
+    replaces the center update with a robust per-cluster reduction —
+    sign-flip Byzantine sketch rows then stop dragging the centers,
+    which is what keeps the recovered partition honest under attack."""
     m, d = points.shape
     centers = _init_centers(key, points, k, init)
     # the init consumes ``key`` exactly as the full path always did;
@@ -81,8 +86,12 @@ def _lloyd(key, points, k: int, iters: int, init: str, tol: float,
         else:
             sel = jax.random.choice(it_key, m, (batch_m,), replace=False)
             batch = points[sel]
-        _, sums, counts = kops.kmeans_assign(batch, centers)
-        means = sums / jnp.maximum(counts, 1.0)[:, None]
+        labels_b, sums, counts = kops.kmeans_assign(batch, centers)
+        if aggregator is None:
+            means = sums / jnp.maximum(counts, 1.0)[:, None]
+        else:
+            onehot = jax.nn.one_hot(labels_b, k, dtype=jnp.float32)
+            means = aggregator(batch, labels_b, onehot, counts)
         new_centers = jnp.where(counts[:, None] > 0, means, centers)
         moved = jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1))
         new_done = done | (moved < tol)
@@ -94,23 +103,42 @@ def _lloyd(key, points, k: int, iters: int, init: str, tol: float,
         iter_keys)
 
     labels, sums, counts = kops.kmeans_assign(points, centers)
-    # inertia from the accumulator instead of an (m, k) distance matrix:
-    # sum_i ||x_i - c_{l(i)}||^2
-    #   = sum ||x||^2 - 2 sum_k <sums_k, c_k> + sum_k counts_k ||c_k||^2
-    inertia = (jnp.sum(points * points)
-               - 2.0 * jnp.sum(sums * centers)
-               + jnp.sum(counts * jnp.sum(centers * centers, axis=1)))
+    trim = min(float(getattr(aggregator, "breakdown", 0.0) or 0.0), 0.45)
+    t = int(trim * m)
+    if t == 0:
+        # inertia from the accumulator instead of an (m, k) distance
+        # matrix: sum_i ||x_i - c_{l(i)}||^2
+        #   = sum ||x||^2 - 2 sum_k <sums_k,c_k> + sum_k counts_k ||c_k||^2
+        inertia = (jnp.sum(points * points)
+                   - 2.0 * jnp.sum(sums * centers)
+                   + jnp.sum(counts * jnp.sum(centers * centers, axis=1)))
+    else:
+        # robust aggregator -> robust restart SELECTION: score the run by
+        # the trimmed k-means objective (drop the floor(breakdown * m)
+        # farthest rows).  Plain inertia rewards spending a center on a
+        # coherent far attacker blob (capturing it removes huge distance
+        # terms), so under a Byzantine fraction the best-"inertia"
+        # restart is exactly the poisoned partition; the trimmed
+        # objective never pays for attacker rows in the first place.
+        assigned = centers[labels]                               # (m, d)
+        row_d2 = jnp.maximum(
+            jnp.sum(points * points, axis=1)
+            - 2.0 * jnp.sum(points * assigned, axis=1)
+            + jnp.sum(assigned * assigned, axis=1), 0.0)
+        inertia = jnp.sum(jnp.sort(row_d2)[: m - t])
     return DeviceKMeansResult(labels=labels, centers=centers,
                               inertia=jnp.maximum(inertia, 0.0),
                               n_iter=n_iter)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "init",
-                                             "restarts", "batch_m"))
+                                             "restarts", "batch_m",
+                                             "aggregator"))
 def device_kmeans(key, points, k: int, iters: int = 50,
                   init: str = "kmeans++", tol: float = 1e-8,
                   restarts: int = 1,
-                  batch_m: Optional[int] = None) -> DeviceKMeansResult:
+                  batch_m: Optional[int] = None,
+                  aggregator=None) -> DeviceKMeansResult:
     """Lloyd's algorithm with the fused assign+accumulate kernel.
 
     With ``restarts=1`` and full batches this mirrors
@@ -120,7 +148,10 @@ def device_kmeans(key, points, k: int, iters: int = 50,
     ``restarts=r`` vmaps r inits (the caller's key first, then r-1
     splits) and selects the lowest final inertia; ``batch_m`` samples
     that many rows per update (values >= m reduce to full Lloyd
-    bit-exactly).
+    bit-exactly).  ``aggregator`` (static: a frozen registry
+    ``Aggregator``, e.g. ``make_aggregator("trimmed_mean", beta=0.2)``)
+    swaps the center update for a robust per-cluster reduction; ``None``
+    keeps the fused-kernel mean path bit-exact with the host oracle.
     """
     points = points.astype(jnp.float32)
     m, d = points.shape
@@ -130,7 +161,8 @@ def device_kmeans(key, points, k: int, iters: int = 50,
         restarts = 1    # spectral seeding ignores the key: every restart
         #                 would be the identical run, pure wasted compute
     run = functools.partial(_lloyd, points=points, k=k, iters=iters,
-                            init=init, tol=tol, batch_m=batch_m)
+                            init=init, tol=tol, batch_m=batch_m,
+                            aggregator=aggregator)
     if restarts <= 1:
         return run(key)
     keys = jnp.concatenate([key[None], jax.random.split(key, restarts - 1)])

@@ -55,7 +55,11 @@ from repro.core.engine.aggregate import (
     compact_labels,
     materialize_round,
 )
-from repro.core.federated import FederatedState, cluster_average_tree
+from repro.core.engine.aggregators import (
+    cluster_aggregate_tree,
+    get_aggregator,
+)
+from repro.core.federated import FederatedState
 from repro.core.sketch import sketch_tree
 from repro.kernels import ops as kops
 from repro.optim import adamw_init
@@ -73,11 +77,17 @@ class AggregationSession:
         ``one_shot_aggregate``.
       seed / cluster_seed: drive the shared JL projection and the
         clustering init (same split as the fused round).
+      sketch_transform: optional traceable ``(sk, offset) -> sk`` hook
+        applied to every wave's (w, sketch_dim) rows INSIDE the jitted
+        ingest — the scenario subsystem's sketch-channel hooks (DP
+        Gaussian release, colluding spoof) run here, so the transformed
+        rows are the only sketches that ever exist, on device or off.
       mesh / client_axis: shard the client axis of the buffers.
     """
 
     def __init__(self, capacity: int, *, sketch_dim: int = 256, cfg=None,
                  seed: int = 0, cluster_seed: Optional[int] = None,
+                 sketch_transform=None,
                  mesh=None, client_axis: str = "data"):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -105,6 +115,8 @@ class AggregationSession:
             sk = jax.vmap(
                 lambda p: sketch_tree(self._sketch_key, p, self.sketch_dim,
                                       leaf_filter=self._leaf_filter))(wave)
+            if sketch_transform is not None:
+                sk = sketch_transform(sk, offset)
             sk_buf = self._constrain(
                 jax.lax.dynamic_update_slice_in_dim(sk_buf, sk, offset, 0))
             p_buf = jax.tree_util.tree_map(
@@ -114,6 +126,8 @@ class AggregationSession:
             return sk_buf, p_buf
 
         def _ingest_sk(sk_buf, sk, offset):
+            if sketch_transform is not None:
+                sk = sketch_transform(sk, offset)
             return self._constrain(
                 jax.lax.dynamic_update_slice_in_dim(sk_buf, sk, offset, 0))
 
@@ -214,7 +228,7 @@ class AggregationSession:
 
     def finalize(self, *, algorithm="kmeans-device", k: Optional[int] = None,
                  algo_options: Optional[dict] = None,
-                 engine: str = "device"):
+                 engine: str = "device", aggregator="mean"):
         """Steps 2-4 over everything ingested: cluster the accumulated
         sketch matrix, average parameters per recovered cluster.
 
@@ -223,6 +237,9 @@ class AggregationSession:
         sessions, which have nothing to average — labels/centers still
         come back and routing becomes available).  The device path is
         bit-exact with the fused round on the same clients.
+        ``aggregator`` selects the per-cluster parameter reduction from
+        the registry (``mean`` | ``trimmed_mean`` | ``median`` | an
+        ``Aggregator`` instance) on both engines.
         """
         if engine not in ("auto", "host", "device"):
             raise ValueError(f"engine must be auto|host|device, got "
@@ -247,15 +264,17 @@ class AggregationSession:
                                          self._params))
         if use_device:
             out = self._finalize_device(algo, k_eff, algo_options, sketches,
-                                        params)
+                                        params, aggregator)
         else:
             out = self._finalize_host(algo, k_eff, algo_options, sketches,
-                                      params)
+                                      params, aggregator)
         self._final = out
         return out
 
-    def _finalize_device(self, algo, k, algo_options, sketches, params):
+    def _finalize_device(self, algo, k, algo_options, sketches, params,
+                         aggregator="mean"):
         cluster_key = jax.random.PRNGKey(self.cluster_seed)
+        aggregator = get_aggregator(aggregator)
         opts = tuple(sorted((algo_options or {}).items()))
         if params is None:
             res = algo.device_call(cluster_key, sketches, k=k,
@@ -268,10 +287,10 @@ class AggregationSession:
             return None, labels, info
         try:
             fin = _finalize_program(algo, k, opts, self.mesh,
-                                    self.client_axis)
+                                    self.client_axis, aggregator)
         except TypeError:          # unhashable algorithm/options/mesh
             fin = _finalize_program.__wrapped__(algo, k, opts, self.mesh,
-                                               self.client_axis)
+                                               self.client_axis, aggregator)
         new_params, res = fin(cluster_key, sketches, params)
         state = FederatedState(params=params, opt_state=None,
                                n_clients=self._count, step=0)
@@ -281,7 +300,8 @@ class AggregationSession:
         self._set_routing(res.centers[jnp.asarray(uniq)], first)
         return new_state, labels, info
 
-    def _finalize_host(self, algo, k, algo_options, sketches, params):
+    def _finalize_host(self, algo, k, algo_options, sketches, params,
+                       aggregator="mean"):
         from repro.core.odcl import run_clustering
 
         result = run_clustering(jax.random.PRNGKey(self.cluster_seed),
@@ -296,8 +316,9 @@ class AggregationSession:
         labels_j = jnp.asarray(labels)
         onehot = jax.nn.one_hot(labels_j, result.n_clusters,
                                 dtype=jnp.float32)
-        counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)
-        new_params = cluster_average_tree(params, onehot, counts)
+        counts = jnp.sum(onehot, axis=0)
+        new_params = cluster_aggregate_tree(params, labels_j, onehot, counts,
+                                            aggregator)
         new_state = FederatedState(
             params=new_params, opt_state=jax.vmap(adamw_init)(new_params),
             n_clients=self._count, step=0)

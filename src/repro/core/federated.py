@@ -31,7 +31,8 @@ from repro.core.clustering.api import (
     get_algorithm,
     is_device_algorithm,
 )
-from repro.core.odcl import ODCLConfig, run_clustering
+from repro.core.engine.aggregators import cluster_aggregate_tree
+from repro.core.odcl import run_clustering
 from repro.core.sketch import sketch_tree
 from repro.launch.steps import make_local_train_step
 from repro.models import init_params
@@ -131,41 +132,40 @@ def cluster_average_tree(params, onehot, counts):
 
 
 def one_shot_aggregate(state: FederatedState, cfg: Optional[ModelConfig],
-                       odcl_cfg: Optional[ODCLConfig] = None, *,
-                       algorithm=None, k: Optional[int] = None,
+                       *,
+                       algorithm="kmeans++", k: Optional[int] = None,
                        algo_options: Optional[dict] = None,
                        assert_separable: bool = False,
                        sketch_dim: int = 256, seed: int = 0,
+                       cluster_seed: Optional[int] = None,
                        engine: str = "auto", mesh=None,
+                       aggregator="mean",
                        return_sketches: bool = False):
     """The single communication round of Algorithm 1 at LM scale.
 
-    Step 2 goes through the admissible-clustering registry: pass either
-    a legacy ``odcl_cfg`` (its ``algo`` name is resolved by the
-    registry) or ``algorithm=`` (a registered name or a
-    ``ClusteringAlgorithm`` instance) with ``k``/``algo_options``.
+    Step 2 goes through the admissible-clustering registry:
+    ``algorithm=`` is a registered name or a ``ClusteringAlgorithm``
+    instance, with ``k``/``algo_options`` forwarded to it.  ``seed``
+    drives the JL sketch; ``cluster_seed`` (default: ``seed``) drives
+    the clustering init.
 
     ``engine`` selects the execution path: ``"auto"`` (default) runs the
     whole round on device via ``engine.one_shot_aggregate_device``
     whenever the resolved algorithm is device-capable — including
     host-only names with a registered ``"<name>-device"`` twin
-    (``"convex"`` / ``"clusterpath"`` upgrade to their device ports) —
-    and falls back to the host path otherwise; ``"host"``/``"device"``
-    force one path.  ``info["sketches"]`` (the full (C, sketch_dim)
-    host copy) is only populated with ``return_sketches=True`` so
-    large-C runs don't pay the transfer.  Returns (new_state, labels,
-    info).
+    (``"convex"`` / ``"clusterpath"`` / ``"gradient"`` upgrade to their
+    device ports) — and falls back to the host path otherwise;
+    ``"host"``/``"device"`` force one path.  ``aggregator`` names the
+    per-cluster step-3 reduction (``mean`` | ``trimmed_mean`` |
+    ``median`` | an ``Aggregator`` instance), identical on both paths.
+    ``info["sketches"]`` (the full (C, sketch_dim) host copy) is only
+    populated with ``return_sketches=True`` so large-C runs don't pay
+    the transfer.  Returns (new_state, labels, info).
     """
     if engine not in ("auto", "host", "device"):
         raise ValueError(f"engine must be auto|host|device, got {engine!r}")
-    cluster_seed = seed
-    if algorithm is None:
-        if odcl_cfg is None:
-            raise ValueError("pass odcl_cfg or algorithm=")
-        algorithm, k = odcl_cfg.algo, odcl_cfg.k
-        algo_options = odcl_cfg.algorithm_options()
-        assert_separable = odcl_cfg.assert_separable
-        cluster_seed = odcl_cfg.seed
+    if cluster_seed is None:
+        cluster_seed = seed
     algo = get_algorithm(algorithm)
     dev_algo = algo if is_device_algorithm(algo) else device_twin(algo)
     if engine == "device" and dev_algo is None:
@@ -185,7 +185,8 @@ def one_shot_aggregate(state: FederatedState, cfg: Optional[ModelConfig],
         return one_shot_aggregate_device(
             state, cfg, algorithm=dev_algo, k=k, algo_options=algo_options,
             sketch_dim=sketch_dim, seed=seed, cluster_seed=cluster_seed,
-            mesh=mesh, return_sketches=return_sketches)
+            mesh=mesh, aggregator=aggregator,
+            return_sketches=return_sketches)
 
     key = jax.random.PRNGKey(seed)
     leaf_filter = (_router_invariant_filter
@@ -202,12 +203,13 @@ def one_shot_aggregate(state: FederatedState, cfg: Optional[ModelConfig],
                             **(algo_options or {}))
     labels, meta = result.labels, result.meta
 
-    # cluster-wise mean of the full parameters
+    # cluster-wise reduction of the full parameters (step 3) + gather-back
     labels_j = jnp.asarray(labels)
     n_clusters = int(labels.max()) + 1
     onehot = jax.nn.one_hot(labels_j, n_clusters, dtype=jnp.float32)  # (C,K')
-    counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)                # (K',)
-    new_params = cluster_average_tree(state.params, onehot, counts)
+    counts = jnp.sum(onehot, axis=0)                                  # (K',)
+    new_params = cluster_aggregate_tree(state.params, labels_j, onehot,
+                                        counts, aggregator)
     new_state = FederatedState(params=new_params,
                                opt_state=jax.vmap(adamw_init)(new_params),
                                n_clients=state.n_clients, step=state.step)

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.clustering.api import get_algorithm, resolve_device_request
+from repro.core.engine.aggregators import cluster_reduce_tree, get_aggregator
 from repro.core.federated import (
     FederatedState,
     _router_invariant_filter,
@@ -135,6 +136,9 @@ class ODCLFederated:
     steps.  ``engine='device'`` maps the host Lloyd-family names onto
     ``kmeans-device`` init options exactly as the legacy train.py flow
     did; any registered ``DeviceClusteringAlgorithm`` passes through.
+    ``aggregator`` names the step-3 per-cluster reduction from the
+    aggregator registry (``mean`` | ``trimmed_mean`` | ``median``) —
+    the robust variants are the Byzantine-resilient server.
     """
     algorithm: str = "kmeans++"
     k: Optional[int] = None
@@ -145,6 +149,7 @@ class ODCLFederated:
     post_steps: int = 0
     opt: Optional[AdamWConfig] = None
     seed: int = 0
+    aggregator: Any = "mean"
     name: str = "odcl"
 
     def _resolve(self):
@@ -178,7 +183,7 @@ class ODCLFederated:
         state, labels, info = one_shot_aggregate(
             state, cfg, algorithm=algorithm, k=k, algo_options=options,
             engine=self.engine, sketch_dim=self.sketch_dim, seed=self.seed,
-            mesh=mesh)
+            aggregator=self.aggregator, mesh=mesh)
         rounds.append({"phase": "aggregate", "engine": info["engine"],
                        "n_clusters": info["n_clusters"]})
 
@@ -236,6 +241,8 @@ class IFCAFederated:
     carry_opt_state: bool = False
     opt: Optional[AdamWConfig] = None
     seed: int = 0
+    aggregator: Any = "mean"           # round-averaging reduction (params
+    #                                    only; carried opt moments stay mean)
     name: str = "ifca"
 
     def _theta0(self, key, state: FederatedState):
@@ -344,8 +351,8 @@ class IFCAFederated:
 
             onehot = jax.nn.one_hot(new_labels, self.k, dtype=jnp.float32)
             counts = jnp.sum(onehot, axis=0)                       # (k,)
-            means = cluster_mean_tree(params, onehot,
-                                      jnp.maximum(counts, 1.0))
+            means = cluster_reduce_tree(params, new_labels, onehot, counts,
+                                        self.aggregator)
             hit = counts > 0
 
             def keep(mean, prev):

@@ -96,12 +96,15 @@ class ODCL:
     ``ODCL(algorithm="kmeans++", k=10)`` reproduces ODCL-KM++;
     ``ODCL(algorithm="clusterpath")`` the k-free ODCL-CC variant; any
     algorithm registered via ``register_algorithm`` works by name.
-    ``options`` are forwarded to the algorithm's ``__call__``.
+    ``options`` are forwarded to the algorithm's ``__call__``;
+    ``aggregator`` names the step-3 reduction from the aggregator
+    registry (``mean`` | ``trimmed_mean`` | ``median``).
     """
     algorithm: Union[str, ClusteringAlgorithm] = "kmeans++"
     k: Optional[int] = None
     options: dict = dataclasses.field(default_factory=dict)
     assert_separable: bool = False
+    aggregator: Any = "mean"
 
     COMM_ROUNDS = 1   # one uplink of local ERMs + one downlink, always
 
@@ -114,7 +117,8 @@ class ODCL:
         res = run_clustering(key, local, self.algorithm, k=self.k,
                              assert_separable=self.assert_separable,
                              **self.options)
-        cluster_avg, user_models = aggregate(local, res.labels)
+        cluster_avg, user_models = aggregate(local, res.labels,
+                                             aggregator=self.aggregator)
         return MethodResult(user_models=user_models, labels=res.labels,
                             cluster_models=cluster_avg,
                             n_clusters=cluster_avg.shape[0],

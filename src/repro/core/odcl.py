@@ -9,16 +9,16 @@
 paper algorithm (used by the paper-scale experiments and benchmarks).
 Step 2 dispatches through the admissible-clustering registry
 (``clustering.api``): any registered ``ClusteringAlgorithm`` is usable
-here by name, and ``ODCLConfig`` remains as the thin legacy shim over
-that registry.  The object-style server API (``methods.ODCL``) wraps
-this module; the multi-pod deep-learning integration lives in
-``federated.py`` and reuses the same server step on sketched
-parameters.
+here by name; step 3 dispatches through the aggregator registry
+(``engine.aggregators``), so the robust variants (``trimmed_mean`` /
+``median``) drop in by name too.  The object-style server API
+(``methods.ODCL``) wraps this module; the multi-pod deep-learning
+integration lives in ``federated.py`` and reuses the same server step
+on sketched parameters.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional, Union
 
 import jax
@@ -31,43 +31,6 @@ from repro.core.clustering.api import (
     ClusteringResult,
     get_algorithm,
 )
-
-
-@dataclasses.dataclass(frozen=True)
-class ODCLConfig:
-    """Server-side configuration of Algorithm 1's step 2.
-
-    Legacy shim: ``algo`` is resolved through the clustering registry,
-    so any name accepted by ``get_algorithm`` works — including
-    algorithms registered after import.  New code should prefer
-    ``methods.ODCL(algorithm=...)``.
-    """
-    algo: str = "kmeans++"
-    k: Optional[int] = None          # required by kmeans/gradient variants
-    lam: Optional[float] = None      # required by 'convex'; None -> interval mid
-    kmeans_iters: int = 100
-    cc_iters: int = 400
-    n_lambdas: int = 10              # clusterpath sweep size
-    seed: int = 0
-    assert_separable: bool = False   # raise if condition (4) fails vs Lemma alpha
-
-    def __post_init__(self):
-        warnings.warn(
-            "ODCLConfig is a legacy shim scheduled for removal; use "
-            "methods.Method.fit (e.g. ODCL(algorithm=...).fit(...)) or "
-            "one_shot_aggregate(algorithm=..., k=..., algo_options=...) "
-            "instead", DeprecationWarning, stacklevel=2)
-
-    def algorithm_options(self) -> dict:
-        """Map the legacy flat fields onto registry-call options."""
-        if self.algo in ("kmeans", "kmeans++", "spectral", "gradient",
-                         "kmeans-device"):
-            return {"iters": self.kmeans_iters}
-        if self.algo in ("convex", "convex-device"):
-            return {"lam": self.lam, "iters": self.cc_iters}
-        if self.algo in ("clusterpath", "clusterpath-device"):
-            return {"n_lambdas": self.n_lambdas, "iters": self.cc_iters}
-        return {}                    # externally registered algorithms
 
 
 @dataclasses.dataclass
@@ -110,34 +73,45 @@ def run_clustering(key, points,
     return dataclasses.replace(result, meta=meta)
 
 
-def cluster_models(local_models, cfg: ODCLConfig):
-    """Step 2 — legacy entrypoint; dispatches through the registry."""
-    key = jax.random.PRNGKey(cfg.seed)
-    result = run_clustering(key, local_models, cfg.algo, k=cfg.k,
-                            assert_separable=cfg.assert_separable,
-                            **cfg.algorithm_options())
-    return result.labels, result.meta
+def aggregate(local_models, labels, aggregator="mean"):
+    """Steps 3-4 — per-cluster reduction + per-user model assignment.
 
+    ``aggregator`` resolves through the registry
+    (``engine.aggregators``); the default ``mean`` reproduces the
+    paper's within-cluster average exactly.
+    """
+    from repro.core.engine.aggregators import cluster_reduce_tree
 
-def aggregate(local_models, labels):
-    """Steps 3-4 — cluster-wise averaging + per-user model assignment."""
-    local_models = np.asarray(local_models, np.float32)
+    local = jnp.asarray(local_models, jnp.float32)
     labels = np.asarray(labels)
     n_clusters = int(labels.max()) + 1
-    cluster_avg = np.stack([
-        local_models[labels == c].mean(axis=0) for c in range(n_clusters)
-    ])
+    labels_j = jnp.asarray(labels, jnp.int32)
+    onehot = jax.nn.one_hot(labels_j, n_clusters, dtype=jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    cluster_avg = np.asarray(
+        cluster_reduce_tree(local, labels_j, onehot, counts, aggregator))
     return cluster_avg, cluster_avg[labels]
 
 
-def odcl(local_models, cfg: ODCLConfig) -> ODCLResult:
-    """Run the full server side of Algorithm 1 on an (m, d) model stack."""
-    labels, meta = cluster_models(local_models, cfg)
-    cluster_avg, user_models = aggregate(local_models, labels)
+def odcl(local_models, *, algorithm: Union[str, ClusteringAlgorithm]
+         = "kmeans++", k: Optional[int] = None, seed: int = 0,
+         assert_separable: bool = False, aggregator="mean",
+         **options) -> ODCLResult:
+    """Run the full server side of Algorithm 1 on an (m, d) model stack.
+
+    ``algorithm`` and ``aggregator`` resolve through their registries;
+    remaining keyword ``options`` go to the clustering algorithm
+    (``iters=``, ``lam=``, ...).
+    """
+    result = run_clustering(jax.random.PRNGKey(seed), local_models,
+                            algorithm, k=k,
+                            assert_separable=assert_separable, **options)
+    cluster_avg, user_models = aggregate(local_models, result.labels,
+                                         aggregator=aggregator)
     return ODCLResult(
-        labels=labels,
+        labels=result.labels,
         cluster_models=cluster_avg,
         user_models=user_models,
         n_clusters=cluster_avg.shape[0],
-        meta=meta,
+        meta=result.meta,
     )

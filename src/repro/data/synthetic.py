@@ -29,6 +29,7 @@ class Federation:
     D: float                  # min pairwise separation of the optima
     xs_test: np.ndarray | None = None
     ys_test: np.ndarray | None = None
+    honest: np.ndarray | None = None   # (m,) bool; None = all honest
 
     @property
     def m(self) -> int:
@@ -72,8 +73,20 @@ def min_separation(optima: np.ndarray) -> float:
 def make_linear_regression_federation(
     seed: int, m: int = 100, K: int = 10, n: int = 100, d: int = 20,
     noise_std: float = 1.0, optima: np.ndarray | None = None,
+    scenario=None,
 ) -> Federation:
-    """Section 5 synthetic setup. Balanced clusters |C_k| = m/K."""
+    """Section 5 synthetic setup. Balanced clusters |C_k| = m/K.
+
+    ``scenario`` (a name, '+'-composed spec, or ``Scenario`` instance
+    from ``repro.scenarios``) reshapes the federation adversarially:
+    its ``population``/``wave_labels`` hooks replace the balanced
+    round-robin occupancy (longtail Zipf, mid-stream drift — the
+    effective labels ARE the recorded truth), ``honest_mask`` is stored
+    on ``Federation.honest``, and ``corrupt_uploads`` is applied to the
+    (m, n) response matrix — the ridge ERM is linear in y, so the
+    sign-flip attack on responses produces exactly the sign-flipped
+    model upload (the noise attack becomes response poisoning).
+    """
     rng = np.random.default_rng(seed)
     if optima is None:
         if K == 10:
@@ -83,9 +96,23 @@ def make_linear_regression_federation(
             lows = np.array([(k // 2 + k % 2) * (1 if k % 2 == 0 else -1) - (1 if k % 2 else 0)
                              for k in range(K)], float)
             optima = rng.uniform(lows[:, None], lows[:, None] + 1.0, size=(K, d))
-    assert m % K == 0, "balanced clustering requires K | m"
-    per = m // K
-    true_labels = np.repeat(np.arange(K), per)
+    honest = None
+    scen = None
+    if scenario is None:
+        assert m % K == 0, "balanced clustering requires K | m"
+        per = m // K
+        true_labels = np.repeat(np.arange(K), per)
+    else:
+        import jax.numpy as jnp
+        from jax.random import PRNGKey
+        from repro.scenarios import build_scenario
+
+        scen = build_scenario(scenario)
+        skey = PRNGKey(seed)
+        labels = jnp.asarray(scen.population(skey, m, K), jnp.int32)
+        labels = scen.wave_labels(skey, labels, 0, m, K)
+        true_labels = np.asarray(labels, np.int64)
+        honest = np.asarray(scen.honest_mask(skey, m), bool)
     xs = np.zeros((m, n, d), np.float32)
     ys = np.zeros((m, n), np.float32)
     for i in range(m):
@@ -94,9 +121,16 @@ def make_linear_regression_federation(
         eps = rng.normal(scale=noise_std, size=n)
         xs[i] = x
         ys[i] = x @ optima[k] + eps
+    if scen is not None:
+        import jax.numpy as jnp
+        from jax.random import PRNGKey
+
+        ys = np.asarray(scen.corrupt_uploads(
+            PRNGKey(seed), jnp.asarray(ys), jnp.asarray(true_labels), 0, m),
+            np.float32)
     return Federation(xs=xs, ys=ys, true_labels=true_labels,
                       optima=optima.astype(np.float32),
-                      D=min_separation(optima))
+                      D=min_separation(optima), honest=honest)
 
 
 def make_logistic_federation(

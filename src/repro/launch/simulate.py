@@ -44,6 +44,7 @@ from repro.core.clustering import (
     list_algorithms,
 )
 from repro.core.engine import list_edge_sets
+from repro.core.engine.aggregators import list_aggregators, make_aggregator
 from repro.core.engine.session import AggregationSession
 from repro.core.erm import batched_ridge_erm, logistic_erm
 from repro.core.federated_methods import (
@@ -53,6 +54,7 @@ from repro.core.federated_methods import (
     params_bytes_per_client,
     sketch_round_bytes,
 )
+from repro.scenarios import build_scenario, list_scenarios
 
 
 def staggered_optima(key, K: int, d: int):
@@ -96,6 +98,8 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
              algorithm: str = "kmeans-device", init: str = "kmeans++",
              kmeans_iters: int = 50, restarts: int = 1, cc_iters: int = 300,
              edges: str = "complete", knn_k: int = 8,
+             scenario=None, scenario_options: dict | None = None,
+             aggregator: str = "mean", trim_beta: float = 0.1,
              seed: int = 0, method: str = "odcl", rounds: int = 5,
              mesh=None) -> dict:
     """Generate a K-cluster federation of ``clients`` users, stream the
@@ -116,22 +120,55 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
     program), ``clusterpath``/``clusterpath-device`` the K-free ladder.
     ``edges``/``knn_k`` select the convex family's fusion graph
     (``knn`` breaks the complete graph's C=4k edge wall).
+
+    ``scenario`` runs the federation through an adversity scenario
+    (``repro.scenarios``): its population/drift hooks reshape the
+    effective cluster labels (which become the scored truth), its
+    ``corrupt_uploads`` hook attacks the wave ERMs before upload, and
+    its sketch-channel hooks (DP release, colluding spoof) run inside
+    the session's jitted ingest.  ``aggregator`` selects the robust
+    step-3 reduction (``trim_beta`` specializes ``trimmed_mean``); a
+    non-mean aggregator also drives the device Lloyd center update, so
+    Byzantine rows stop dragging the recovered partition.
     """
     key = jax.random.PRNGKey(seed)
     k_opt, k_data = jax.random.split(key)
     optima = staggered_optima(k_opt, clusters, dim)
-    true_labels = jnp.arange(clients, dtype=jnp.int32) % clusters
+
+    scen = (build_scenario(scenario, **(scenario_options or {}))
+            if scenario is not None else None)
+    scen_key = jax.random.fold_in(key, 0x5ce0)
+    if scen is not None:
+        base_labels = jnp.asarray(scen.population(scen_key, clients, clusters),
+                                  jnp.int32)
+        # drift hooks are per-global-index deterministic, so applying
+        # them to the full index range once equals the per-wave calls
+        true_labels = jnp.asarray(scen.wave_labels(
+            scen_key, base_labels, 0, clients, clusters), jnp.int32)
+        honest = np.asarray(scen.honest_mask(scen_key, clients), bool)
+    else:
+        true_labels = jnp.arange(clients, dtype=jnp.int32) % clusters
+        honest = np.ones(clients, bool)
+
+    agg = make_aggregator(aggregator, beta=trim_beta)
+    sketch_hook = (
+        (lambda sk, off: scen.sketch_transform(scen_key, sk, off))
+        if scen is not None and scen.transforms_sketches else None)
 
     session = AggregationSession(clients, sketch_dim=sketch_dim, seed=seed,
-                                 mesh=mesh)
+                                 sketch_transform=sketch_hook, mesh=mesh)
     t0 = time.perf_counter()
     t_ingest = 0.0
     for start in range(0, clients, wave):
         w = min(wave, clients - start)
+        lab_w = jax.lax.dynamic_slice_in_dim(true_labels, start, w)
         theta_w = _wave_erm(
-            jax.random.fold_in(k_data, start), optima,
-            jax.lax.dynamic_slice_in_dim(true_labels, start, w),
+            jax.random.fold_in(k_data, start), optima, lab_w,
             wave=w, n=samples, d=dim, task=task)
+        if scen is not None:
+            # step-1 attack: Byzantine clients replace their upload
+            theta_w = scen.corrupt_uploads(scen_key, theta_w, lab_w,
+                                           start, clients)
         ti = time.perf_counter()
         session.ingest({"theta": theta_w})     # step-1 upload of the wave
         t_ingest += time.perf_counter() - ti
@@ -155,6 +192,13 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
     else:
         algo_options = {"init": init, "iters": kmeans_iters,
                         "restarts": restarts}
+        if agg.name != "mean":
+            # robust Lloyd: the same aggregator replaces the center
+            # update inside device_kmeans — sign-flip sketch rows stop
+            # dragging the centers, which is what keeps purity under
+            # Byzantine fractions (post-hoc robust averaging alone
+            # cannot fix an already-poisoned partition)
+            algo_options["aggregator"] = agg
     if convex_family:
         algo_options.update({"edges": edges, "knn_k": knn_k})
     elif edges != "complete":
@@ -168,7 +212,7 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         # with one_shot_aggregate(engine="device") on the same clients)
         new_state, labels, info = session.finalize(
             algorithm=algorithm, k=clusters, algo_options=algo_options,
-            engine="device")
+            engine="device", aggregator=agg)
         jax.block_until_ready(new_state.params)
         comm_rounds = 1.0
         comm_bytes = sketch_round_bytes(
@@ -180,16 +224,32 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         # federation (C=10k+ states stay wholly on device)
         fed_method = build_federated_method(
             method, algorithm=algorithm, engine="device", k=clusters,
-            algo_options=algo_options,
+            algo_options=algo_options, aggregator=agg,
             sketch_dim=sketch_dim, seed=seed, local_steps=0, rounds=rounds,
             assign="sketch", init="clients")
         res = fed_method.run(jax.random.PRNGKey(seed), session.state(),
                              None, None, mesh=mesh)
         jax.block_until_ready(res.state.params)
+        new_state = res.state
         labels = res.labels
         comm_rounds, comm_bytes = res.comm_rounds, res.comm_bytes
         n_clusters, meta = res.n_clusters, res.meta
     t_agg = time.perf_counter() - t1
+
+    truth = np.asarray(true_labels)
+    labels_np = np.asarray(labels)
+    purity_all = cluster_agreement(labels_np, truth)
+    # the score that matters under attack: agreement on the honest
+    # clients only (attackers have no "right" cluster)
+    purity = (cluster_agreement(labels_np[honest], truth[honest])
+              if honest.any() else purity_all)
+    mse = None
+    if task == "ridge":
+        # personalization error of the served models on honest clients:
+        # per-coordinate MSE against each client's population optimum
+        served = np.asarray(new_state.params["theta"])
+        target = np.asarray(optima)[truth]
+        mse = float(np.mean((served[honest] - target[honest]) ** 2))
 
     return {
         "clients": clients, "clusters": clusters, "dim": dim,
@@ -198,12 +258,18 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         "algorithm": algorithm, "restarts": restarts,
         "edges": edges if convex_family else None,
         "knn_k": knn_k if (convex_family and edges == "knn") else None,
+        "scenario": getattr(scen, "name", None),
+        "scenario_options": scenario_options or None,
+        "aggregator": agg.name,
+        "honest_frac": float(np.mean(honest)),
         "comm_rounds": comm_rounds, "comm_bytes": comm_bytes,
         "phases": {"local_erm_s": t_erm, "ingest_s": t_ingest,
                    "aggregate_s": t_agg,
                    "total_s": t_erm + t_ingest + t_agg},
         "n_clusters_recovered": n_clusters,
-        "purity": cluster_agreement(labels, np.asarray(true_labels)),
+        "purity": purity,
+        "purity_all": purity_all,
+        "mse": mse,
         "meta": meta,
     }
 
@@ -251,6 +317,33 @@ def main(argv=None):
                          "mutual-kNN, E=C*k — the C >> 4k edge set)")
     ap.add_argument("--knn-k", type=int, default=8,
                     help="neighbours per client for --edges knn")
+    ap.add_argument("--scenario", default=None,
+                    help="adversity scenario over the client population: "
+                         f"one of {list(list_scenarios())} or a "
+                         "'+'-composed spec (e.g. 'longtail+byzantine')")
+    ap.add_argument("--byzantine-frac", type=float, default=None,
+                    help="attacker fraction for --scenario byzantine")
+    ap.add_argument("--byzantine-attack", default=None,
+                    choices=("sign_flip", "noise", "spoof"),
+                    help="attack mode for --scenario byzantine")
+    ap.add_argument("--byzantine-scale", type=float, default=None,
+                    help="noise/spoof magnitude for --scenario byzantine")
+    ap.add_argument("--dp-epsilon", type=float, default=None,
+                    help="privacy budget for --scenario dp")
+    ap.add_argument("--dp-delta", type=float, default=None,
+                    help="delta for --scenario dp")
+    ap.add_argument("--dp-clip", type=float, default=None,
+                    help="sketch L2 clip (sensitivity) for --scenario dp")
+    ap.add_argument("--drift-frac", type=float, default=None,
+                    help="migrating-client fraction for --scenario drift")
+    ap.add_argument("--zipf-a", type=float, default=None,
+                    help="Zipf exponent for --scenario longtail")
+    ap.add_argument("--aggregator", default="mean",
+                    choices=list(list_aggregators()),
+                    help="per-cluster step-3 reduction (robust variants "
+                         "also drive the device Lloyd center update)")
+    ap.add_argument("--trim-beta", type=float, default=0.1,
+                    help="trim fraction for --aggregator trimmed_mean")
     ap.add_argument("--method", default="odcl",
                     choices=list(list_federated_methods()),
                     help="registered federated method to run over the "
@@ -261,26 +354,43 @@ def main(argv=None):
     ap.add_argument("--out", default=None, help="write the summary JSON here")
     args = ap.parse_args(argv)
 
+    # flat option superset -> per-scenario dataclass fields, filtered by
+    # build_scenario exactly like build_federated_method filters methods
+    scenario_options = {k: v for k, v in {
+        "frac": args.byzantine_frac, "attack": args.byzantine_attack,
+        "scale": args.byzantine_scale, "epsilon": args.dp_epsilon,
+        "delta": args.dp_delta, "clip": args.dp_clip,
+        "drift_frac": args.drift_frac, "zipf_a": args.zipf_a,
+    }.items() if v is not None}
+
     summary = simulate(
         clients=args.clients, clusters=args.clusters, dim=args.dim,
         samples=args.samples, wave=args.wave, task=args.task,
         sketch_dim=args.sketch_dim, algorithm=args.algorithm,
         init=args.init, kmeans_iters=args.kmeans_iters,
         restarts=args.restarts, cc_iters=args.cc_iters,
-        edges=args.edges, knn_k=args.knn_k, seed=args.seed,
-        method=args.method, rounds=args.rounds)
+        edges=args.edges, knn_k=args.knn_k,
+        scenario=args.scenario, scenario_options=scenario_options or None,
+        aggregator=args.aggregator, trim_beta=args.trim_beta,
+        seed=args.seed, method=args.method, rounds=args.rounds)
     ph = summary["phases"]
     print(f"[simulate] C={summary['clients']} K={summary['clusters']} "
           f"task={summary['task']} wave={summary['wave']} "
           f"algo={summary['algorithm']} "
           f"edges={summary['edges'] or '-'} "
+          f"scenario={summary['scenario'] or '-'} "
+          f"agg={summary['aggregator']} "
           f"method={summary['method']} rounds={summary['comm_rounds']:g}")
     print(f"[simulate] local ERMs {ph['local_erm_s']:.2f}s  "
           f"ingest {ph['ingest_s']:.2f}s  "
           f"server rounds {ph['aggregate_s']:.2f}s "
           f"({summary['comm_bytes'] / 1e6:.2f}MB moved)")
+    mse = summary["mse"]
     print(f"[simulate] recovered K'={summary['n_clusters_recovered']} "
           f"purity={summary['purity']:.3f} "
+          f"(all={summary['purity_all']:.3f}, "
+          f"honest={summary['honest_frac']:.2f}) "
+          f"mse={mse if mse is None else format(mse, '.3g')} "
           f"inertia={summary['meta'].get('inertia', float('nan')):.3g}")
     if args.out:
         with open(args.out, "w") as f:

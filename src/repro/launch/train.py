@@ -47,6 +47,7 @@ from repro.core.federated_methods import (
     list_federated_methods,
 )
 from repro.core.clustering import list_algorithms
+from repro.core.engine.aggregators import list_aggregators
 from repro.data import ClusteredTokenStream, make_lm_batch_iterator
 from repro.launch.steps import make_eval_batch
 from repro.optim import AdamWConfig
@@ -98,6 +99,10 @@ def main(argv=None):
                          "per iteration (device kmeans family; >= C runs "
                          "full Lloyd bit-exactly)")
     ap.add_argument("--sketch-dim", type=int, default=128)
+    ap.add_argument("--aggregator", default="mean",
+                    choices=list(list_aggregators()),
+                    help="per-cluster step-3 reduction (odcl / ifca round "
+                         "averaging): mean, or a robust registry variant")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -147,7 +152,7 @@ def main(argv=None):
         local_steps=args.local_steps, post_steps=args.post_steps,
         rounds=args.rounds, warmup_steps=args.warmup_steps,
         assign=args.assign, carry_opt_state=args.carry_opt_state,
-        opt=opt, seed=args.seed)
+        aggregator=args.aggregator, opt=opt, seed=args.seed)
 
     t0 = time.time()
     res = method.run(jax.random.PRNGKey(args.seed), state, cfg, it)

@@ -1,0 +1,51 @@
+"""Adversity scenarios over the synthetic client population.
+
+Public surface of the subsystem:
+
+  * ``Scenario`` — the hook protocol (population / wave_labels /
+    corrupt_uploads / sketch_transform / honest_mask); the base class is
+    the identity scenario ``"none"``.
+  * Built-ins: ``drift`` (mid-stream distribution migration),
+    ``longtail`` (Zipf occupancy), ``byzantine`` (sign-flip /
+    scaled-noise / colluding sketch-spoof attackers), ``dp``
+    ((eps, delta)-Gaussian sketch release).
+  * Registry: ``register_scenario`` / ``get_scenario`` /
+    ``list_scenarios`` / ``unregister_scenario``; ``build_scenario``
+    resolves '+'-composed specs from one flat driver-option superset.
+
+Wired through ``data/synthetic.py`` (scenario-shaped flat federations),
+``launch/simulate.py`` (``--scenario``/``--byzantine-frac``/
+``--dp-epsilon``), ``engine/session.py`` (``sketch_transform=`` inside
+the jitted ingest), and ``benchmarks/bench_robustness.py``.
+"""
+from repro.scenarios.api import (
+    ComposedScenario,
+    Scenario,
+    ScenarioLike,
+    build_scenario,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+    unregister_scenario,
+)
+from repro.scenarios.library import (
+    ByzantineScenario,
+    DPScenario,
+    DriftScenario,
+    LongtailScenario,
+)
+
+__all__ = [
+    "ByzantineScenario",
+    "ComposedScenario",
+    "DPScenario",
+    "DriftScenario",
+    "LongtailScenario",
+    "Scenario",
+    "ScenarioLike",
+    "build_scenario",
+    "get_scenario",
+    "list_scenarios",
+    "register_scenario",
+    "unregister_scenario",
+]

@@ -1,0 +1,226 @@
+"""The Scenario registry — adversity as composable population transforms.
+
+Every benchmark so far ran planted, balanced, honest clusters; the
+paper's guarantees are only interesting when heterogeneity is hostile.
+A ``Scenario`` is a bundle of hooks over the synthetic client
+population, each bound to one stage of the pipeline:
+
+  ``population(key, clients, clusters)``
+      the (C,) true cluster occupancy (host-side, before any data is
+      drawn) — ``longtail`` replaces the balanced round-robin with a
+      Zipf law here.
+  ``wave_labels(key, labels, offset, clients, clusters)``
+      per-wave relabeling BEFORE data generation — ``drift`` migrates
+      late-stream clients to a shifted source distribution (pairing
+      with ``AggregationSession``'s wave ingest: the stream position is
+      the wave offset).
+  ``corrupt_uploads(key, theta, labels, offset, clients)``
+      the step-1 upload attack surface, applied to the (w, d) stack of
+      local ERMs after solving — ``byzantine`` sign-flips or noises the
+      attackers' models.  Traceable (jnp in, jnp out).
+  ``sketch_transform(key, sketches, offset)``
+      applied to the (w, sketch_dim) JL sketch rows INSIDE the
+      session's jitted ingest — ``dp`` clips + noises here (the sketch
+      is all the server ever sees), ``byzantine``'s colluding
+      sketch-spoof forges rows here.  Traceable; must not move data to
+      host.
+  ``honest_mask(key, clients)``
+      which clients count toward quality metrics (Byzantine attackers
+      are excluded from purity/MSE — they have no honest model to
+      recover).
+
+All hooks are deterministic in ``key``: a scenario derives per-role
+streams by folding role tags into the one key the driver passes, so an
+attacker flagged in ``corrupt_uploads`` is the same client flagged in
+``honest_mask``.  The base class is the identity scenario ("none");
+implementations override only the hooks they bend.
+
+Registry + composition mirror ``clustering/api.py`` / ``engine/edges.py``:
+``register_scenario`` / ``get_scenario`` / ``list_scenarios`` /
+``unregister_scenario``, plus ``build_scenario("byzantine+dp",
+frac=0.1, epsilon=2.0)`` which resolves a '+'-chain into a
+``ComposedScenario`` and specializes each member's dataclass fields
+from one flat option superset (unknown keys skip, like
+``build_federated_method``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class ScenarioLike(Protocol):
+    """Anything with the five population hooks (see module docstring)."""
+    name: str
+
+    def population(self, key, clients: int, clusters: int): ...
+    def wave_labels(self, key, labels, offset, clients: int,
+                    clusters: int): ...
+    def corrupt_uploads(self, key, theta, labels, offset, clients: int): ...
+    def sketch_transform(self, key, sketches, offset): ...
+    def honest_mask(self, key, clients: int): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """The identity client population — every hook is a passthrough.
+
+    Subclass and override the hooks the scenario bends; frozen
+    dataclasses keep instances hashable (scenario options can ride in
+    jit cache keys next to the aggregator).
+    """
+    name: str = "none"
+
+    def population(self, key, clients: int, clusters: int) -> jnp.ndarray:
+        """(C,) int32 true cluster per client (balanced round-robin)."""
+        del key
+        return jnp.arange(clients, dtype=jnp.int32) % clusters
+
+    def wave_labels(self, key, labels, offset, clients: int,
+                    clusters: int) -> jnp.ndarray:
+        del key, offset, clients, clusters
+        return labels
+
+    def corrupt_uploads(self, key, theta, labels, offset,
+                        clients: int) -> jnp.ndarray:
+        del key, labels, offset, clients
+        return theta
+
+    def sketch_transform(self, key, sketches, offset) -> jnp.ndarray:
+        del key, offset
+        return sketches
+
+    def honest_mask(self, key, clients: int) -> jnp.ndarray:
+        del key
+        return jnp.ones((clients,), bool)
+
+    @property
+    def transforms_sketches(self) -> bool:
+        """Whether the session needs this scenario's sketch hook wired
+        into its jitted ingest (identity hooks skip the closure)."""
+        return type(self).sketch_transform is not Scenario.sketch_transform
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedScenario(Scenario):
+    """Hooks applied left-to-right over member scenarios.
+
+    ``population`` takes the LAST member that overrides it (occupancy
+    is a choice, not a transform); every other hook chains.
+    """
+    name: str = "composed"
+    members: tuple = ()
+
+    def population(self, key, clients, clusters):
+        labels = Scenario.population(self, key, clients, clusters)
+        for i, s in enumerate(self.members):
+            if type(s).population is not Scenario.population:
+                labels = s.population(jax.random.fold_in(key, i),
+                                      clients, clusters)
+        return labels
+
+    def wave_labels(self, key, labels, offset, clients, clusters):
+        for i, s in enumerate(self.members):
+            labels = s.wave_labels(jax.random.fold_in(key, i), labels,
+                                   offset, clients, clusters)
+        return labels
+
+    def corrupt_uploads(self, key, theta, labels, offset, clients):
+        for i, s in enumerate(self.members):
+            theta = s.corrupt_uploads(jax.random.fold_in(key, i), theta,
+                                      labels, offset, clients)
+        return theta
+
+    def sketch_transform(self, key, sketches, offset):
+        for i, s in enumerate(self.members):
+            sketches = s.sketch_transform(jax.random.fold_in(key, i),
+                                          sketches, offset)
+        return sketches
+
+    def honest_mask(self, key, clients):
+        mask = jnp.ones((clients,), bool)
+        for i, s in enumerate(self.members):
+            mask &= s.honest_mask(jax.random.fold_in(key, i), clients)
+        return mask
+
+    @property
+    def transforms_sketches(self) -> bool:
+        return any(s.transforms_sketches for s in self.members)
+
+
+# ------------------------------------------------------------- registry
+
+_SCENARIOS: dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario, *, name: Optional[str] = None,
+                      overwrite: bool = False) -> Scenario:
+    """Register a scenario under a name. Returns it (decorator-safe)."""
+    key = name if name is not None else scenario.name
+    if not key:
+        raise ValueError("scenario needs a non-empty name")
+    if key in _SCENARIOS and not overwrite:
+        raise ValueError(f"scenario {key!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _SCENARIOS[key] = scenario
+    return scenario
+
+
+def unregister_scenario(name: str) -> None:
+    """Remove a registered scenario (used by tests/plugins)."""
+    _SCENARIOS.pop(name, None)
+
+
+def get_scenario(name) -> Scenario:
+    """Resolve a name (or pass through an instance) to a scenario."""
+    if not isinstance(name, str):
+        return name
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {sorted(_SCENARIOS)}") from None
+
+
+def list_scenarios() -> tuple[str, ...]:
+    """Names of every registered scenario."""
+    return tuple(sorted(_SCENARIOS))
+
+
+def build_scenario(spec, **options: Any) -> Scenario:
+    """Resolve a scenario spec from driver flags.
+
+    ``spec`` is a registered name, a '+'-chain of names (composed
+    left-to-right, e.g. ``"longtail+byzantine"``), a ``Scenario``
+    instance, or ``None`` (the identity).  ``options`` is one flat
+    superset; each member keeps only the dataclass fields it declares.
+    """
+    if spec is None:
+        spec = "none"
+    if not isinstance(spec, str):
+        return spec
+    members = []
+    for part in spec.split("+"):
+        part = part.strip()
+        if not part:
+            continue
+        s = get_scenario(part)
+        if options and dataclasses.is_dataclass(s):
+            fields = {f.name for f in dataclasses.fields(s) if f.init}
+            kept = {k: v for k, v in options.items()
+                    if k in fields and k != "name" and v is not None}
+            if kept:
+                s = dataclasses.replace(s, **kept)
+        members.append(s)
+    if not members:
+        raise ValueError(f"empty scenario spec {spec!r}")
+    if len(members) == 1:
+        return members[0]
+    return ComposedScenario(name=spec, members=tuple(members))
+
+
+register_scenario(Scenario())

@@ -1,0 +1,194 @@
+"""The built-in adversity scenarios: drift, longtail, byzantine, dp.
+
+Each is a frozen dataclass over the ``Scenario`` hook protocol
+(``scenarios/api.py``); registration at import time mirrors the
+clustering registry.  Role randomness folds fixed tags into the
+driver's scenario key so the same client is e.g. an attacker in
+``corrupt_uploads``, ``sketch_transform``, and ``honest_mask``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.scenarios.api import Scenario, register_scenario
+
+# role tags folded into the scenario key per hook — constants, so every
+# hook that needs the same role (the Byzantine mask) derives the same
+# stream regardless of which pipeline stage calls it
+_TAG_ROLE = 0x0b1e
+_TAG_NOISE = 0x6e01
+_TAG_SPOOF = 0x5f00
+_TAG_DRIFT = 0xd41f
+_TAG_DP = 0xd9a0
+
+
+def _mask_by_index(key, idx, frac):
+    """(|idx|,) bool Bernoulli(frac) mask, deterministic per GLOBAL
+    client index (wave-partition invariant: the same client draws the
+    same coin whatever wave it arrives in)."""
+    return jax.vmap(
+        lambda i: jax.random.bernoulli(jax.random.fold_in(key, i), frac)
+    )(idx.astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftScenario(Scenario):
+    """Clients migrate source distribution mid-stream.
+
+    Streams arrive in waves (``AggregationSession.ingest``); clients at
+    stream position >= ``drift_at * clients`` belong to the drifted
+    regime, where a ``drift_frac`` Bernoulli subset draws from its
+    cluster shifted by ``shift`` (mod K).  The effective labels ARE the
+    truth for those clients — the driver scores purity against the
+    drifted labels, so a server that clusters well under drift still
+    scores 1.0.
+    """
+    name: str = "drift"
+    drift_frac: float = 0.5
+    drift_at: float = 0.5
+    shift: int = 1
+
+    def wave_labels(self, key, labels, offset, clients, clusters):
+        w = labels.shape[0]
+        idx = offset + jnp.arange(w, dtype=jnp.int32)
+        migrate = _mask_by_index(jax.random.fold_in(key, _TAG_DRIFT), idx,
+                                 self.drift_frac)
+        drifted = migrate & (idx >= jnp.int32(self.drift_at * clients))
+        return jnp.where(drifted, (labels + self.shift) % clusters, labels)
+
+
+@dataclasses.dataclass(frozen=True)
+class LongtailScenario(Scenario):
+    """Zipf cluster occupancy: cluster k holds ~ k^-a of the clients.
+
+    Replaces the balanced round-robin population; largest-remainder
+    rounding keeps the occupancy deterministic and every cluster
+    nonempty (the admissibility bounds need c_min >= 1).
+    """
+    name: str = "longtail"
+    zipf_a: float = 1.2
+
+    def population(self, key, clients, clusters):
+        del key
+        if clients < clusters:
+            raise ValueError(
+                f"longtail occupancy needs clients >= clusters "
+                f"({clients} < {clusters})")
+        ranks = np.arange(1, clusters + 1, dtype=np.float64)
+        p = ranks ** -float(self.zipf_a)
+        p /= p.sum()
+        counts = np.maximum(np.floor(p * clients).astype(np.int64), 1)
+        # largest-remainder: hand leftover slots to the largest shares,
+        # trim overshoot from the head (which can spare them)
+        rem = clients - int(counts.sum())
+        order = np.argsort(-(p * clients - np.floor(p * clients)))
+        i = 0
+        while rem > 0:
+            counts[order[i % clusters]] += 1
+            rem -= 1
+            i += 1
+        while rem < 0:
+            j = int(np.argmax(counts))
+            take = min(int(counts[j]) - 1, -rem)
+            counts[j] -= take
+            rem += take
+        labels = np.repeat(np.arange(clusters), counts)
+        return jnp.asarray(labels, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineScenario(Scenario):
+    """A Bernoulli(``frac``) subset of clients uploads adversarially.
+
+    ``attack='sign_flip'``: attackers upload -theta — the JL sketch is
+    linear, so the attack lands in sketch space as the mirrored point
+    and drags its cluster's Lloyd center toward the reflection (the
+    hardest mean-breaking direction at magnitude ||theta||).
+    ``attack='noise'``: theta + scale * N(0, I).
+    ``attack='spoof'``: colluding sketch-channel forgery — params are
+    untouched but every attacker's sketch row is replaced with one
+    shared crafted vector (a fake zero-variance cluster), exercising
+    servers that only ever see sketches.
+    Attackers are excluded from ``honest_mask``.
+    """
+    name: str = "byzantine"
+    frac: float = 0.1
+    attack: str = "sign_flip"          # sign_flip | noise | spoof
+    scale: float = 10.0
+
+    def _role(self, key, idx):
+        return _mask_by_index(jax.random.fold_in(key, _TAG_ROLE), idx,
+                              self.frac)
+
+    def honest_mask(self, key, clients):
+        return ~self._role(key, jnp.arange(clients, dtype=jnp.int32))
+
+    def corrupt_uploads(self, key, theta, labels, offset, clients):
+        del labels, clients
+        w = theta.shape[0]
+        idx = offset + jnp.arange(w, dtype=jnp.int32)
+        bad = self._role(key, idx)[:, None]
+        if self.attack == "sign_flip":
+            return jnp.where(bad, -theta, theta)
+        if self.attack == "noise":
+            noise = self.scale * jax.random.normal(
+                jax.random.fold_in(jax.random.fold_in(key, _TAG_NOISE),
+                                   offset), theta.shape, theta.dtype)
+            return jnp.where(bad, theta + noise, theta)
+        if self.attack == "spoof":
+            return theta               # spoof forges the sketch channel
+        raise ValueError(f"unknown byzantine attack {self.attack!r}")
+
+    def sketch_transform(self, key, sketches, offset):
+        if self.attack != "spoof":
+            return sketches
+        w, s = sketches.shape
+        idx = offset + jnp.arange(w, dtype=jnp.int32)
+        bad = self._role(key, idx)[:, None]
+        forged = self.scale * jax.random.normal(
+            jax.random.fold_in(key, _TAG_SPOOF), (s,), sketches.dtype)
+        return jnp.where(bad, forged[None, :], sketches)
+
+    @property
+    def transforms_sketches(self) -> bool:
+        return self.attack == "spoof"
+
+
+@dataclasses.dataclass(frozen=True)
+class DPScenario(Scenario):
+    """(epsilon, delta)-DP release of the sketch uploads.
+
+    The sketch is all the server ever sees, so local DP is one Gaussian
+    mechanism on the JL rows: L2-clip each client's sketch to ``clip``
+    (the sensitivity bound) and add N(0, sigma^2 I) with
+    ``sigma = clip * sqrt(2 ln(1.25 / delta)) / epsilon`` — applied
+    inside the session's jitted ingest, so the noised rows never exist
+    on host either.  Clipping preserves direction; separability then
+    degrades purely with 1/epsilon, which is the trade-off curve
+    ``bench_robustness.py`` sweeps.
+    """
+    name: str = "dp"
+    epsilon: float = 1.0
+    delta: float = 1e-5
+    clip: float = 1.0
+
+    def sketch_transform(self, key, sketches, offset):
+        norms = jnp.linalg.norm(sketches, axis=1, keepdims=True)
+        clipped = sketches * jnp.minimum(
+            1.0, self.clip / jnp.maximum(norms, 1e-12))
+        sigma = (self.clip * jnp.sqrt(2.0 * jnp.log(1.25 / self.delta))
+                 / self.epsilon)
+        noise = sigma * jax.random.normal(
+            jax.random.fold_in(jax.random.fold_in(key, _TAG_DP), offset),
+            sketches.shape, sketches.dtype)
+        return clipped + noise
+
+
+for _s in (DriftScenario(), LongtailScenario(), ByzantineScenario(),
+           DPScenario()):
+    register_scenario(_s)
+del _s

@@ -1,0 +1,278 @@
+"""Properties of the robust per-cluster aggregator registry
+(``core/engine/aggregators.py``): bit-exactness at zero trim, breakdown
+boundedness, degenerate clusters, and registry plumbing."""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # the properties still run without the optional dev dependency:
+    # sweep a fixed sample grid (bounds + interior) per strategy
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(lo, hi):
+            return [lo, hi, (lo + hi) // 2, lo + 31]
+
+        @staticmethod
+        def floats(lo, hi):
+            return [lo, lo + 0.999 * (hi - lo), 0.5 * (lo + hi)]
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**params):
+        names = sorted(params)
+        combos = list(itertools.product(*(params[n] for n in names)))
+        return pytest.mark.parametrize(",".join(names), combos)
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    MeanAggregator,
+    MedianAggregator,
+    TrimmedMeanAggregator,
+    cluster_aggregate_tree,
+    device_kmeans,
+    get_aggregator,
+    list_aggregators,
+    make_aggregator,
+    register_aggregator,
+    unregister_aggregator,
+)
+
+
+def _inputs(flat, labels, k):
+    labels = jnp.asarray(labels, jnp.int32)
+    onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    return jnp.asarray(flat, jnp.float32), labels, onehot, counts
+
+
+def _random_problem(seed, c=24, n=5, k=4):
+    rng = np.random.default_rng(seed)
+    flat = rng.normal(size=(c, n)).astype(np.float32)
+    labels = rng.integers(0, k, size=c).astype(np.int32)
+    return _inputs(flat, labels, k)
+
+
+# ------------------------------------------------------------ bit-exactness
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_trimmed_beta0_bit_exact_with_mean(seed):
+    """beta=0 keeps every row: the trimmed reduction IS the mean."""
+    flat, labels, onehot, counts = _random_problem(seed)
+    ref = MeanAggregator()(flat, labels, onehot, counts)
+    out = TrimmedMeanAggregator(beta=0.0)(flat, labels, onehot, counts)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_median_matches_numpy_per_cluster(seed):
+    flat, labels, onehot, counts = _random_problem(seed)
+    out = np.asarray(MedianAggregator()(flat, labels, onehot, counts))
+    flat_np, labels_np = np.asarray(flat), np.asarray(labels)
+    for j in range(onehot.shape[1]):
+        rows = flat_np[labels_np == j]
+        if rows.size == 0:
+            np.testing.assert_array_equal(out[j], 0.0)
+        else:
+            np.testing.assert_allclose(out[j], np.median(rows, axis=0),
+                                       rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------- breakdown boundedness
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       beta=st.floats(0.1, 0.45),
+       spike=st.floats(1e3, 1e8))
+def test_trimmed_mean_breakdown_boundedness(seed, beta, spike):
+    """With <= floor(beta * cnt) corrupted rows per cluster, the trimmed
+    mean stays inside the honest rows' per-coordinate [min, max] hull —
+    the corrupted values cannot leak into the output at all."""
+    rng = np.random.default_rng(seed)
+    k, per = 3, 12
+    flat = rng.normal(size=(k * per, 4)).astype(np.float32)
+    labels = np.repeat(np.arange(k), per).astype(np.int32)
+    honest = np.ones(k * per, bool)
+    t = int(np.floor(beta * per))
+    for j in range(k):
+        idx = np.where(labels == j)[0][:t]
+        flat[idx] = spike * rng.choice([-1.0, 1.0], size=(t, 4))
+        honest[idx] = False
+    out = np.asarray(TrimmedMeanAggregator(beta=beta)(
+        *_inputs(flat, labels, k)))
+    for j in range(k):
+        rows = flat[(labels == j) & honest]
+        assert np.all(out[j] >= rows.min(axis=0) - 1e-5)
+        assert np.all(out[j] <= rows.max(axis=0) + 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), spike=st.floats(1e3, 1e8))
+def test_median_breakdown_boundedness(seed, spike):
+    """Corrupting a minority of each cluster leaves the coordinate-wise
+    median inside the honest hull (breakdown point 1/2)."""
+    rng = np.random.default_rng(seed)
+    k, per, bad = 3, 11, 5                    # bad < per / 2
+    flat = rng.normal(size=(k * per, 4)).astype(np.float32)
+    labels = np.repeat(np.arange(k), per).astype(np.int32)
+    honest = np.ones(k * per, bool)
+    for j in range(k):
+        idx = np.where(labels == j)[0][:bad]
+        flat[idx] = spike * rng.choice([-1.0, 1.0], size=(bad, 4))
+        honest[idx] = False
+    out = np.asarray(MedianAggregator()(*_inputs(flat, labels, k)))
+    for j in range(k):
+        rows = flat[(labels == j) & honest]
+        assert np.all(out[j] >= rows.min(axis=0) - 1e-5)
+        assert np.all(out[j] <= rows.max(axis=0) + 1e-5)
+
+
+def test_mean_has_no_breakdown():
+    """One spiked row moves the mean arbitrarily far — breakdown 0."""
+    flat = np.zeros((8, 3), np.float32)
+    flat[0] = 1e6
+    labels = np.zeros(8, np.int32)
+    out = np.asarray(MeanAggregator()(*_inputs(flat, labels, 1)))
+    assert out[0, 0] == pytest.approx(1e6 / 8)
+
+
+# ---------------------------------------------------------------- degenerate
+
+def test_degenerate_clusters_survive_trimming():
+    """Size-1 / size-2 clusters clamp the trim window: at least one
+    value survives and the output is the plain mean of the segment."""
+    flat = np.array([[5.0], [1.0], [3.0], [100.0], [0.0], [2.0], [4.0]],
+                    np.float32)
+    labels = np.array([0, 1, 1, 2, 2, 2, 2], np.int32)
+    out = np.asarray(TrimmedMeanAggregator(beta=0.4)(
+        *_inputs(flat, labels, 4)))
+    assert out[0, 0] == pytest.approx(5.0)            # size 1: the row
+    assert out[1, 0] == pytest.approx(2.0)            # size 2: t=0 mean
+    # size 4, t = min(floor(0.4*4), 1) = 1: drop 100 and 0, keep {2, 4}
+    assert out[2, 0] == pytest.approx(3.0)
+    assert out[3, 0] == 0.0                           # empty cluster -> 0
+
+
+def test_median_small_clusters_match_mean():
+    flat = np.array([[7.0], [1.0], [3.0]], np.float32)
+    labels = np.array([0, 1, 1], np.int32)
+    out = np.asarray(MedianAggregator()(*_inputs(flat, labels, 2)))
+    assert out[0, 0] == pytest.approx(7.0)
+    assert out[1, 0] == pytest.approx(2.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_empty_clusters_aggregate_to_zero(seed):
+    """The masked-matmul convention: clusters nobody joined emit 0."""
+    flat, labels, onehot, counts = _random_problem(seed, c=10, k=6)
+    for agg in (MeanAggregator(), TrimmedMeanAggregator(beta=0.2),
+                MedianAggregator()):
+        out = np.asarray(agg(flat, labels, onehot, counts))
+        empty = np.asarray(counts) == 0
+        if empty.any():
+            np.testing.assert_array_equal(out[empty], 0.0)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_round_trip():
+    assert set(list_aggregators()) >= {"mean", "trimmed_mean", "median"}
+    probe = MeanAggregator(name="probe-agg")
+    register_aggregator(probe)
+    try:
+        assert get_aggregator("probe-agg") is probe
+        assert "probe-agg" in list_aggregators()
+        with pytest.raises(ValueError, match="already registered"):
+            register_aggregator(MeanAggregator(name="probe-agg"))
+    finally:
+        unregister_aggregator("probe-agg")
+    assert "probe-agg" not in list_aggregators()
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        get_aggregator("probe-agg")
+
+
+def test_make_aggregator_specializes_fields():
+    agg = make_aggregator("trimmed_mean", beta=0.25, frac=0.3, eps=None)
+    assert isinstance(agg, TrimmedMeanAggregator)
+    assert agg.beta == 0.25                   # unknown keys ignored
+    assert make_aggregator("mean") is get_aggregator("mean")
+    inst = TrimmedMeanAggregator(beta=0.3)
+    assert make_aggregator(inst) is inst      # instances pass through
+
+
+def test_breakdown_attributes():
+    assert MeanAggregator().breakdown == 0.0
+    assert TrimmedMeanAggregator(beta=0.2).breakdown == 0.2
+    assert MedianAggregator().breakdown == 0.5
+    with pytest.raises(ValueError, match="beta"):
+        TrimmedMeanAggregator(beta=0.5)
+
+
+def test_aggregators_are_hashable_jit_keys():
+    """Frozen dataclasses: usable as static jit arguments."""
+    assert hash(TrimmedMeanAggregator(beta=0.2)) == hash(
+        TrimmedMeanAggregator(beta=0.2))
+    assert dataclasses.is_dataclass(MedianAggregator())
+
+
+# ----------------------------------------------------------- jit + device use
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_aggregators_jit_traceable(seed):
+    """Every registered reduction runs inside jit, bit-equal to eager."""
+    flat, labels, onehot, counts = _random_problem(seed)
+    for name in ("mean", "trimmed_mean", "median"):
+        agg = get_aggregator(name)
+        eager = agg(flat, labels, onehot, counts)
+        jitted = jax.jit(agg)(flat, labels, onehot, counts)
+        np.testing.assert_array_equal(np.asarray(jitted), np.asarray(eager))
+
+
+def test_cluster_aggregate_tree_mean_matches_manual():
+    flat, labels, onehot, counts = _random_problem(3, c=12, n=4, k=3)
+    tree = {"w": flat.reshape(12, 2, 2)}
+    out = cluster_aggregate_tree(tree, labels, onehot, counts, "mean")
+    means = np.asarray(MeanAggregator()(flat, labels, onehot, counts))
+    expect = means[np.asarray(labels)].reshape(12, 2, 2)
+    np.testing.assert_allclose(np.asarray(out["w"]), expect,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_device_kmeans_trimmed_restart_selection_objective():
+    """A robust aggregator makes restart *selection* robust too: the
+    reported inertia is the trimmed k-means objective — the sum of the
+    m - floor(breakdown * m) smallest squared row distances."""
+    rng = np.random.default_rng(0)
+    pts = np.concatenate([
+        rng.normal(size=(40, 4)).astype(np.float32) + 20.0 * np.eye(4)[j]
+        for j in range(3)])
+    agg = make_aggregator("trimmed_mean", beta=0.2)
+    res = device_kmeans(jax.random.PRNGKey(0), jnp.asarray(pts), 3,
+                        restarts=3, init="random", aggregator=agg)
+    labels = np.asarray(res.labels)
+    centers = np.asarray(res.centers)
+    d2 = np.sum((pts - centers[labels]) ** 2, axis=1)
+    t = int(0.2 * len(pts))
+    expect = np.sort(d2)[: len(pts) - t].sum()
+    assert float(res.inertia) == pytest.approx(expect, rel=1e-4)
+    # beta=0 keeps the accumulator-identity (untrimmed) inertia path
+    res0 = device_kmeans(jax.random.PRNGKey(0), jnp.asarray(pts), 3,
+                         aggregator=make_aggregator("trimmed_mean",
+                                                    beta=0.0))
+    ref = device_kmeans(jax.random.PRNGKey(0), jnp.asarray(pts), 3,
+                        aggregator=make_aggregator("mean"))
+    np.testing.assert_array_equal(np.asarray(res0.labels),
+                                  np.asarray(ref.labels))
+    np.testing.assert_array_equal(np.asarray(res0.centers),
+                                  np.asarray(ref.centers))

@@ -161,30 +161,31 @@ def test_host_engine_sketches_are_opt_in_too():
     assert info["sketches"].shape == (state.n_clients, 32)
 
 
-def test_odcl_cfg_seed_reaches_device_engine():
-    from repro.core.odcl import ODCLConfig
-
+def test_cluster_seed_reaches_device_engine():
     state, true = blob_state()
-    cfg = ODCLConfig(algo="kmeans-device", k=3, seed=11)
-    _, lab_dev, info_dev = one_shot_aggregate(state, None, cfg, sketch_dim=32)
-    _, lab_host, _ = one_shot_aggregate(state, None, cfg, sketch_dim=32,
-                                        engine="host")
+    _, lab_dev, info_dev = one_shot_aggregate(
+        state, None, algorithm="kmeans-device", k=3, cluster_seed=11,
+        sketch_dim=32)
+    _, lab_host, _ = one_shot_aggregate(
+        state, None, algorithm="kmeans-device", k=3, cluster_seed=11,
+        sketch_dim=32, engine="host")
     assert info_dev["engine"] == "device"
     assert same_partition(lab_dev, lab_host)
     assert same_partition(lab_dev, true)
 
 
 def test_auto_engine_assert_separable_falls_back_to_host():
-    from repro.core.odcl import ODCLConfig
-
     state, true = blob_state()
-    cfg = ODCLConfig(algo="kmeans-device", k=3, assert_separable=True)
-    _, labels, info = one_shot_aggregate(state, None, cfg, sketch_dim=32)
+    _, labels, info = one_shot_aggregate(
+        state, None, algorithm="kmeans-device", k=3, assert_separable=True,
+        sketch_dim=32)
     assert info["engine"] == "host"          # auto fell back, no raise
     assert "separability_alpha" in info["meta"]
     assert same_partition(labels, true)
     with pytest.raises(ValueError, match="assert_separable"):
-        one_shot_aggregate(state, None, cfg, sketch_dim=32, engine="device")
+        one_shot_aggregate(state, None, algorithm="kmeans-device", k=3,
+                           assert_separable=True, sketch_dim=32,
+                           engine="device")
 
 
 def test_device_engine_rejects_host_only_algorithm():

@@ -11,7 +11,6 @@ from repro.core.federated import (
     local_training,
     one_shot_aggregate,
 )
-from repro.core.odcl import ODCLConfig
 from repro.data import ClusteredTokenStream, make_lm_batch_iterator
 from repro.optim import AdamWConfig
 import jax
@@ -55,7 +54,7 @@ def test_local_training_reduces_loss(setup):
 def test_one_shot_aggregate_recovers_clusters(setup):
     cfg, stream, state, _, _ = setup
     new_state, labels, info = one_shot_aggregate(
-        state, cfg, ODCLConfig(algo="kmeans++", k=2), sketch_dim=64)
+        state, cfg, algorithm="kmeans++", k=2, sketch_dim=64)
     # recovered clusters must match the hidden client clustering exactly
     from collections import Counter
 
@@ -68,7 +67,7 @@ def test_one_shot_aggregate_recovers_clusters(setup):
 def test_aggregation_improves_or_matches_local(setup):
     cfg, stream, state, _, batch_fn = setup
     new_state, labels, _ = one_shot_aggregate(
-        state, cfg, ODCLConfig(algo="kmeans++", k=2), sketch_dim=64)
+        state, cfg, algorithm="kmeans++", k=2, sketch_dim=64)
     eval_batch = batch_fn()
     local_losses = evaluate_per_client(state, cfg, eval_batch)
     agg_losses = evaluate_per_client(new_state, cfg, eval_batch)
@@ -80,7 +79,7 @@ def test_aggregation_improves_or_matches_local(setup):
 def test_clients_in_same_cluster_share_model(setup):
     cfg, stream, state, _, _ = setup
     new_state, labels, _ = one_shot_aggregate(
-        state, cfg, ODCLConfig(algo="kmeans++", k=2), sketch_dim=64)
+        state, cfg, algorithm="kmeans++", k=2, sketch_dim=64)
     embed = np.asarray(new_state.params["embed"], np.float32)
     for c in np.unique(labels):
         members = np.where(labels == c)[0]
@@ -92,7 +91,7 @@ def test_clients_in_same_cluster_share_model(setup):
 def test_different_clusters_differ(setup):
     cfg, stream, state, _, _ = setup
     new_state, labels, _ = one_shot_aggregate(
-        state, cfg, ODCLConfig(algo="kmeans++", k=2), sketch_dim=64)
+        state, cfg, algorithm="kmeans++", k=2, sketch_dim=64)
     embed = np.asarray(new_state.params["embed"], np.float32)
     a = np.where(labels == 0)[0][0]
     b = np.where(labels == 1)[0][0]

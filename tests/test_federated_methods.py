@@ -34,7 +34,6 @@ from repro.core.federated_methods import (
     register_federated_method,
     unregister_federated_method,
 )
-from repro.core.odcl import ODCLConfig
 from repro.data import ClusteredTokenStream, make_lm_batch_iterator
 from repro.optim import AdamWConfig, adamw_init
 
@@ -130,8 +129,8 @@ def test_prepopulated_methods_are_protocol_instances():
 
 def test_odcl_federated_matches_legacy_train_flow_bit_exact():
     """The exact pre-refactor launch/train.py sequence — local_training
-    then one_shot_aggregate(ODCLConfig) — must be reproduced bit-for-bit
-    by ODCLFederated.run on the same batch stream."""
+    then one_shot_aggregate(algorithm=...) — must be reproduced
+    bit-for-bit by ODCLFederated.run on the same batch stream."""
     cfg = tiny_cfg()
     opt = AdamWConfig(lr=1e-3, weight_decay=0.0)
     steps = 6
@@ -142,7 +141,7 @@ def test_odcl_federated_matches_legacy_train_flow_bit_exact():
     state = init_federation(jax.random.PRNGKey(0), cfg, N_CLIENTS)
     state, _ = local_training(state, cfg, it, steps, opt)
     legacy_state, legacy_labels, _ = one_shot_aggregate(
-        state, cfg, ODCLConfig(algo="kmeans++", k=K), sketch_dim=32, seed=0)
+        state, cfg, algorithm="kmeans++", k=K, sketch_dim=32, seed=0)
 
     # registry flow
     stream2 = make_stream(cfg)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ODCLConfig, batched_ridge_erm, odcl, oracles
+from repro.core import batched_ridge_erm, odcl, oracles
 from repro.core.erm import ridge_erm
 from repro.data import make_linear_regression_federation
 
@@ -27,22 +27,22 @@ def local_models(fed):
 
 
 def test_odcl_km_matches_oracle_averaging(fed, local_models):
-    res = odcl(local_models, ODCLConfig(algo="kmeans++", k=10))
+    res = odcl(local_models, algorithm="kmeans++", k=10)
     oa = oracles.oracle_averaging(local_models, fed.true_labels)
     assert res.n_clusters == 10
     assert nmse(res.user_models, fed) == pytest.approx(nmse(oa, fed), rel=1e-5)
 
 
 def test_odcl_cc_matches_oracle_averaging(fed, local_models):
-    res = odcl(local_models, ODCLConfig(algo="clusterpath", n_lambdas=8,
-                                        cc_iters=300))
+    res = odcl(local_models, algorithm="clusterpath", n_lambdas=8,
+               iters=300)
     oa = oracles.oracle_averaging(local_models, fed.true_labels)
     assert res.n_clusters == 10
     assert nmse(res.user_models, fed) == pytest.approx(nmse(oa, fed), rel=1e-5)
 
 
 def test_odcl_beats_local_and_naive(fed, local_models):
-    res = odcl(local_models, ODCLConfig(algo="kmeans++", k=10))
+    res = odcl(local_models, algorithm="kmeans++", k=10)
     assert nmse(res.user_models, fed) < 0.5 * nmse(
         oracles.local_erm(local_models), fed)
     assert nmse(res.user_models, fed) < 0.01 * nmse(
@@ -52,13 +52,13 @@ def test_odcl_beats_local_and_naive(fed, local_models):
 def test_cluster_oracle_is_best(fed, local_models):
     co = oracles.cluster_oracle(lambda x, y: ridge_erm(
         jnp.asarray(x), jnp.asarray(y), 1e-8), fed.xs, fed.ys, fed.true_labels)
-    res = odcl(local_models, ODCLConfig(algo="kmeans++", k=10))
+    res = odcl(local_models, algorithm="kmeans++", k=10)
     # ODCL approaches but does not beat pooled-data training
     assert nmse(co, fed) <= nmse(res.user_models, fed) * 1.5
 
 
 def test_gradient_clustering_variant(fed, local_models):
-    res = odcl(local_models, ODCLConfig(algo="gradient", k=10))
+    res = odcl(local_models, algorithm="gradient", k=10)
     oa = oracles.oracle_averaging(local_models, fed.true_labels)
     assert nmse(res.user_models, fed) == pytest.approx(nmse(oa, fed), rel=1e-4)
 
@@ -70,7 +70,7 @@ def test_sample_size_phase_transition():
         fed = make_linear_regression_federation(seed=1, n=n)
         local = np.asarray(batched_ridge_erm(
             jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
-        res = odcl(local, ODCLConfig(algo="kmeans++", k=10))
+        res = odcl(local, algorithm="kmeans++", k=10)
         errs.append(nmse(res.user_models, fed))
         oracle_errs.append(nmse(
             oracles.oracle_averaging(local, fed.true_labels), fed))
@@ -81,7 +81,7 @@ def test_sample_size_phase_transition():
 def test_odcl_perfect_recovery_labels(fed, local_models):
     from collections import Counter
 
-    res = odcl(local_models, ODCLConfig(algo="kmeans++", k=10))
+    res = odcl(local_models, algorithm="kmeans++", k=10)
     for c in range(res.n_clusters):
         members = fed.true_labels[res.labels == c]
         assert len(Counter(members)) == 1, "recovered clusters must be pure"

@@ -5,7 +5,9 @@ import pytest
 pytest.importorskip("hypothesis", reason="optional dev dependency")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import ODCLConfig, aggregate, odcl
+import functools
+
+from repro.core import aggregate, odcl
 from repro.core.clustering import convex_clustering, knn_weights
 
 
@@ -26,9 +28,9 @@ def test_permutation_equivariance(seed):
     pts, _ = blobs(seed)
     rng = np.random.default_rng(seed + 1)
     perm = rng.permutation(len(pts))
-    cfg = ODCLConfig(algo="kmeans++", k=3, seed=0)
-    r1 = odcl(pts, cfg)
-    r2 = odcl(pts[perm], cfg)
+    run = functools.partial(odcl, algorithm="kmeans++", k=3, seed=0)
+    r1 = run(pts)
+    r2 = run(pts[perm])
     np.testing.assert_allclose(r2.user_models, r1.user_models[perm],
                                rtol=1e-5, atol=1e-5)
 
@@ -38,9 +40,9 @@ def test_permutation_equivariance(seed):
 def test_aggregation_idempotent(seed):
     """Aggregating the aggregated models changes nothing."""
     pts, _ = blobs(seed)
-    cfg = ODCLConfig(algo="kmeans++", k=3, seed=0)
-    r1 = odcl(pts, cfg)
-    r2 = odcl(r1.user_models, cfg)
+    run = functools.partial(odcl, algorithm="kmeans++", k=3, seed=0)
+    r1 = run(pts)
+    r2 = run(r1.user_models)
     np.testing.assert_allclose(r2.user_models, r1.user_models,
                                rtol=1e-5, atol=1e-5)
 
@@ -50,9 +52,9 @@ def test_aggregation_idempotent(seed):
 def test_scale_equivariance(seed, scale):
     """odcl(c*models) == c*odcl(models) for K-means variants."""
     pts, _ = blobs(seed)
-    cfg = ODCLConfig(algo="kmeans++", k=3, seed=0)
-    r1 = odcl(pts, cfg)
-    r2 = odcl(pts * scale, cfg)
+    run = functools.partial(odcl, algorithm="kmeans++", k=3, seed=0)
+    r1 = run(pts)
+    r2 = run(pts * scale)
     np.testing.assert_allclose(r2.user_models, r1.user_models * scale,
                                rtol=1e-3, atol=1e-3)
 

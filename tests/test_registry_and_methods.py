@@ -1,6 +1,6 @@
 """The pluggable-clustering registry and the unified Method API:
 round-trip registration, ClusteringResult invariants for every seed
-algorithm, legacy-shim parity, and drop-in use of a new algorithm."""
+algorithm, function-API parity, and drop-in use of a new algorithm."""
 import dataclasses
 
 import jax
@@ -12,7 +12,6 @@ from repro.core import (
     GlobalERM,
     LocalOnly,
     ODCL,
-    ODCLConfig,
     OracleAveraging,
     batched_ridge_erm,
     get_algorithm,
@@ -135,9 +134,9 @@ def test_method_registry_lists_core_methods():
         get_method("nope")
 
 
-def test_odcl_method_matches_legacy_config_bit_for_bit(fed):
+def test_odcl_method_matches_function_api_bit_for_bit(fed):
     local = np.asarray(ridge_solver(fed.xs, fed.ys))
-    legacy = odcl(local, ODCLConfig(algo="kmeans++", k=10, seed=0))
+    legacy = odcl(local, algorithm="kmeans++", k=10, seed=0)
     res = ODCL(algorithm="kmeans++", k=10).fit(
         jax.random.PRNGKey(0), fed.xs, fed.ys, ridge_solver)
     assert np.array_equal(res.labels, legacy.labels)
@@ -166,7 +165,7 @@ def test_baseline_methods_match_oracle_functions(fed):
         ge.nmse(fed.optima, fed.true_labels)
 
 
-def test_new_algorithm_usable_via_method_and_legacy_shim():
+def test_new_algorithm_usable_via_method_and_function_api():
     pts, _ = blobs(seed=1, k=2, per=10, d=4, sep=30.0)
     # center the first coordinate so the sign split is the 2-cluster truth
     pts[:, 0] -= pts[:, 0].mean()
@@ -174,21 +173,20 @@ def test_new_algorithm_usable_via_method_and_legacy_shim():
         register_algorithm(TrueKSplit())
         via_method = ODCL(algorithm="first-coord-sign").fit(
             jax.random.PRNGKey(0), None, None, erm=lambda xs, ys: pts)
-        via_shim = odcl(pts, ODCLConfig(algo="first-coord-sign"))
-        assert via_method.n_clusters == via_shim.n_clusters == 2
-        np.testing.assert_array_equal(via_method.labels, via_shim.labels)
+        via_fn = odcl(pts, algorithm="first-coord-sign")
+        assert via_method.n_clusters == via_fn.n_clusters == 2
+        np.testing.assert_array_equal(via_method.labels, via_fn.labels)
         np.testing.assert_array_equal(via_method.user_models,
-                                      via_shim.user_models)
-        assert "separability_alpha" in via_shim.meta
+                                      via_fn.user_models)
+        assert "separability_alpha" in via_fn.meta
     finally:
         unregister_algorithm("first-coord-sign")
 
 
-def test_legacy_shim_convex_family_matches_method_api():
-    """Shim-coverage for the convex-family option mapping
-    (``ODCLConfig.algorithm_options``: lam/cc_iters/n_lambdas) now that
-    ``benchmarks/fig3_clusterpath.py`` drives ``Method.fit`` directly —
-    the deprecation path must stay exercised until the shim is removed."""
+def test_odcl_function_convex_family_matches_method_api():
+    """The function API's convex-family option passthrough (lam / iters /
+    n_lambdas forwarded as ``**options``) must agree with ``Method.fit``
+    driving the same registered algorithm."""
     pts, true = blobs(seed=2, k=3, per=8, d=5, sep=40.0)
     from repro.core.clustering import lambda_interval
 
@@ -197,21 +195,20 @@ def test_legacy_shim_convex_family_matches_method_api():
     key = jax.random.PRNGKey(0)
     erm = lambda xs, ys: pts    # noqa: E731 - the "local models" stack
 
-    legacy = odcl(pts, ODCLConfig(algo="convex", lam=lam, cc_iters=250))
+    via_fn = odcl(pts, algorithm="convex", lam=lam, iters=250)
     via_method = ODCL(algorithm="convex",
                       options={"lam": lam, "iters": 250}).fit(
         key, None, None, erm)
-    np.testing.assert_array_equal(legacy.labels, via_method.labels)
-    np.testing.assert_array_equal(legacy.user_models, via_method.user_models)
-    assert legacy.n_clusters == via_method.n_clusters == 3
+    np.testing.assert_array_equal(via_fn.labels, via_method.labels)
+    np.testing.assert_array_equal(via_fn.user_models, via_method.user_models)
+    assert via_fn.n_clusters == via_method.n_clusters == 3
 
-    legacy_cp = odcl(pts, ODCLConfig(algo="clusterpath", n_lambdas=6,
-                                     cc_iters=200))
+    via_fn_cp = odcl(pts, algorithm="clusterpath", n_lambdas=6, iters=200)
     via_method_cp = ODCL(algorithm="clusterpath",
                          options={"n_lambdas": 6, "iters": 200}).fit(
         key, None, None, erm)
-    np.testing.assert_array_equal(legacy_cp.labels, via_method_cp.labels)
-    assert legacy_cp.n_clusters == via_method_cp.n_clusters
+    np.testing.assert_array_equal(via_fn_cp.labels, via_method_cp.labels)
+    assert via_fn_cp.n_clusters == via_method_cp.n_clusters
 
 
 def test_resolve_device_request_lloyd_mapping_outranks_twin():
@@ -227,24 +224,37 @@ def test_resolve_device_request_lloyd_mapping_outranks_twin():
         ("kmeans-device", {"init": "kmeans++", "iters": 5})
     assert resolve_device_request("spectral") == \
         ("kmeans-device", {"init": "spectral"})
-    # device-capable names and twin-upgradable names pass through
+    # device-capable names and twin-upgradable names pass through —
+    # including "gradient", whose gradient-device twin makes engine=auto
+    # cover the whole registry
     assert resolve_device_request("kmeans-device") == ("kmeans-device", None)
     assert resolve_device_request("convex", {"lam": 0.1}) == \
         ("convex", {"lam": 0.1})
+    assert resolve_device_request("gradient") == ("gradient", None)
     # caller options override the mapped init
     assert resolve_device_request("kmeans", {"init": "spectral"}) == \
         ("kmeans-device", {"init": "spectral"})
-    with pytest.raises(ValueError, match="device-capable"):
-        resolve_device_request("gradient")
-    assert resolve_device_request("gradient", strict=False) == \
-        ("gradient", None)
+    # truly host-only plugins (no twin, not Lloyd) still raise loudly
+    try:
+        register_algorithm(TrueKSplit(name="host-only-probe"))
+        with pytest.raises(ValueError, match="device-capable"):
+            resolve_device_request("host-only-probe")
+        assert resolve_device_request("host-only-probe", strict=False) == \
+            ("host-only-probe", None)
+    finally:
+        unregister_algorithm("host-only-probe")
 
 
-def test_odcl_config_shim_emits_deprecation_warning():
-    """The shim is scheduled for removal: constructing it must warn,
-    pointing migrators at Method.fit."""
-    with pytest.warns(DeprecationWarning, match="Method.fit"):
-        ODCLConfig(algo="kmeans++", k=3)
+def test_odcl_config_shim_is_gone():
+    """The deprecated ``ODCLConfig`` shim was removed: the name must not
+    resurface in the public core namespace (migrators use ``odcl(...)``
+    keyword arguments or ``Method.fit``)."""
+    import repro.core
+    import repro.core.odcl
+
+    assert not hasattr(repro.core, "ODCLConfig")
+    assert not hasattr(repro.core.odcl, "ODCLConfig")
+    assert "ODCLConfig" not in getattr(repro.core, "__all__", ())
 
 
 def test_assert_separable_flags_bad_clustering():

@@ -1,0 +1,222 @@
+"""The adversity-scenario subsystem (``repro.scenarios``): registry
+round-trips, '+'-composition, hook invariants (wave-partition
+invariance, DP clipping), data-layer wiring, and the
+``BENCH_robustness.json`` schema the robustness bench emits."""
+import dataclasses
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import make_linear_regression_federation
+from repro.scenarios import (
+    ByzantineScenario,
+    ComposedScenario,
+    DPScenario,
+    DriftScenario,
+    LongtailScenario,
+    Scenario,
+    build_scenario,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+    unregister_scenario,
+)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_round_trip():
+    assert set(list_scenarios()) >= {"none", "drift", "longtail",
+                                     "byzantine", "dp"}
+    probe = ByzantineScenario(name="probe-scen", frac=0.3)
+    register_scenario(probe)
+    try:
+        assert get_scenario("probe-scen") is probe
+        with pytest.raises(ValueError, match="already registered"):
+            register_scenario(ByzantineScenario(name="probe-scen"))
+    finally:
+        unregister_scenario("probe-scen")
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("probe-scen")
+
+
+def test_build_scenario_specializes_and_composes():
+    s = build_scenario("byzantine", frac=0.25, attack="noise", epsilon=4.0)
+    assert isinstance(s, ByzantineScenario)
+    assert (s.frac, s.attack) == (0.25, "noise")   # epsilon ignored
+    assert build_scenario(None).name == "none"
+    inst = DPScenario(epsilon=2.0)
+    assert build_scenario(inst) is inst            # instances pass through
+
+    comp = build_scenario("longtail+byzantine+dp", frac=0.2, epsilon=8.0,
+                          zipf_a=1.5)
+    assert isinstance(comp, ComposedScenario)
+    lt, byz, dp = comp.members
+    assert isinstance(lt, LongtailScenario) and lt.zipf_a == 1.5
+    assert isinstance(byz, ByzantineScenario) and byz.frac == 0.2
+    assert isinstance(dp, DPScenario) and dp.epsilon == 8.0
+    # each flat option lands only on the member that declares the field
+    assert comp.transforms_sketches            # dp noises the sketch rows
+    mask = comp.honest_mask(jax.random.PRNGKey(0), 64)
+    assert mask.dtype == jnp.bool_ and not bool(jnp.all(mask))
+
+
+def test_scenarios_are_frozen_and_hashable():
+    """Scenario instances key jitted-program caches: must be hashable."""
+    for s in (Scenario(), DriftScenario(), LongtailScenario(),
+              ByzantineScenario(), DPScenario()):
+        assert dataclasses.is_dataclass(s)
+        assert hash(s) == hash(dataclasses.replace(s))
+
+
+def test_identity_scenario_hooks_are_noops():
+    key = jax.random.PRNGKey(0)
+    s = build_scenario(None)
+    labels = s.population(key, 12, 4)
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.arange(12) % 4)
+    theta = jnp.ones((6, 3))
+    assert s.corrupt_uploads(key, theta, labels[:6], 0, 12) is theta
+    assert s.sketch_transform(key, theta, 0) is theta
+    assert not s.transforms_sketches
+    assert bool(jnp.all(s.honest_mask(key, 12)))
+
+
+# ----------------------------------------------------------------- byzantine
+
+def test_byzantine_wave_partition_invariance():
+    """Corrupting the full population in one call == corrupting it wave
+    by wave: the Bernoulli role coin is keyed on the GLOBAL client
+    index, not the wave-local row."""
+    key = jax.random.PRNGKey(7)
+    s = ByzantineScenario(frac=0.3)
+    theta = jax.random.normal(jax.random.fold_in(key, 1), (64, 5))
+    full = s.corrupt_uploads(key, theta, None, 0, 64)
+    waved = jnp.concatenate([
+        s.corrupt_uploads(key, theta[:24], None, 0, 64),
+        s.corrupt_uploads(key, theta[24:], None, 24, 64)])
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(waved))
+    # the honest mask names exactly the sign-flipped rows
+    mask = np.asarray(s.honest_mask(key, 64))
+    flipped = ~np.all(np.asarray(full) == np.asarray(theta), axis=1)
+    np.testing.assert_array_equal(~mask, flipped)
+    assert 0.0 < flipped.mean() < 0.6
+
+
+def test_byzantine_spoof_forges_sketch_channel_only():
+    key = jax.random.PRNGKey(3)
+    s = ByzantineScenario(frac=0.4, attack="spoof")
+    assert s.transforms_sketches
+    theta = jnp.ones((32, 5))
+    assert s.corrupt_uploads(key, theta, None, 0, 32) is theta
+    sk = jax.random.normal(key, (32, 8))
+    out = np.asarray(s.sketch_transform(key, sk, 0))
+    bad = ~np.asarray(s.honest_mask(key, 32))
+    assert bad.any()
+    # every attacker uploads the SAME forged row (a fake cluster)
+    assert np.ptp(out[bad], axis=0).max() == 0.0
+    np.testing.assert_array_equal(out[~bad], np.asarray(sk)[~bad])
+
+
+# ------------------------------------------------------------------------ dp
+
+def test_dp_sketch_transform_clips_then_noises():
+    key = jax.random.PRNGKey(5)
+    sk = 50.0 * jax.random.normal(key, (128, 16))
+    # eps -> huge: sigma -> 0, so the output is just the L2 clip
+    out = np.asarray(DPScenario(epsilon=1e9, clip=1.0).sketch_transform(
+        key, sk, 0))
+    norms = np.linalg.norm(out, axis=1)
+    assert np.all(norms <= 1.0 + 1e-4)
+    # clipping preserves direction
+    cos = np.sum(out * np.asarray(sk), axis=1) / np.maximum(
+        norms * np.linalg.norm(np.asarray(sk), axis=1), 1e-12)
+    assert np.all(cos > 1.0 - 1e-5)
+    # tighter budget -> more noise (monotone in 1/eps)
+    def spread(eps):
+        o = np.asarray(DPScenario(epsilon=eps, clip=1.0).sketch_transform(
+            key, jnp.zeros((128, 16)), 0))
+        return np.std(o)
+    assert spread(1.0) > 4.0 * spread(16.0)
+
+
+# ---------------------------------------------------------- drift / longtail
+
+def test_drift_shifts_only_late_stream_clients():
+    key = jax.random.PRNGKey(2)
+    s = DriftScenario(drift_frac=1.0, drift_at=0.5, shift=2)
+    labels = jnp.arange(64, dtype=jnp.int32) % 4
+    out = np.asarray(s.wave_labels(key, labels, 0, 64, 4))
+    np.testing.assert_array_equal(out[:32], np.asarray(labels)[:32])
+    np.testing.assert_array_equal(out[32:], (np.asarray(labels)[32:] + 2) % 4)
+
+
+def test_longtail_population_is_zipf_occupancy():
+    s = LongtailScenario(zipf_a=1.2)
+    labels = np.asarray(s.population(jax.random.PRNGKey(0), 100, 8))
+    counts = np.bincount(labels, minlength=8)
+    assert counts.sum() == 100
+    assert counts.min() >= 1                  # admissibility needs c_min >= 1
+    assert np.all(np.diff(counts) <= 0)       # head-heavy
+    assert counts[0] > counts[-1]
+    with pytest.raises(ValueError, match="clients >= clusters"):
+        s.population(jax.random.PRNGKey(0), 4, 8)
+
+
+# ------------------------------------------------------------- data wiring
+
+def test_synthetic_federation_applies_scenario():
+    fed = make_linear_regression_federation(
+        seed=0, m=40, K=4, n=8, d=6,
+        scenario=ByzantineScenario(frac=0.25))
+    assert fed.honest is not None and fed.honest.shape == (40,)
+    assert 0 < (~fed.honest).sum() < 40
+    assert make_linear_regression_federation(
+        seed=0, m=40, K=4, n=8, d=6).honest is None
+    # same draw under the identity scenario (same round-robin population,
+    # nobody corrupted): the sign-flip lands as exactly -y on attackers —
+    # the ridge ERM is linear in y
+    clean = make_linear_regression_federation(seed=0, m=40, K=4, n=8, d=6,
+                                              scenario="none")
+    assert clean.honest is not None and clean.honest.all()
+    np.testing.assert_array_equal(fed.true_labels, clean.true_labels)
+    np.testing.assert_allclose(fed.ys[~fed.honest],
+                               -clean.ys[~fed.honest], rtol=1e-6)
+    np.testing.assert_allclose(fed.ys[fed.honest],
+                               clean.ys[fed.honest], rtol=1e-6)
+
+
+# --------------------------------------------------------- bench schema gate
+
+def test_bench_robustness_schema(tmp_path):
+    """Every BENCH_robustness.json row carries the pinned schema keys
+    (``scenario`` / ``aggregator`` / ``purity``) in both sweeps."""
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks import bench_robustness
+
+    out = tmp_path / "BENCH_robustness.json"
+    report = bench_robustness.run(
+        base=dict(clients=128, wave=128, samples=32),
+        byz=dict(restarts=2),
+        aggregators=("mean", "trimmed_mean"),
+        byz_fracs=(0.1,), seeds=(0,), dp_epsilons=(32.0,),
+        out=str(out))
+    on_disk = json.loads(out.read_text())
+    assert on_disk["bench"] == "robustness"
+    assert len(on_disk["rows"]) == len(report["rows"]) == 4
+    for row in on_disk["rows"]:
+        for key in ("sweep", "scenario", "aggregator", "purity", "mse"):
+            assert key in row, f"row missing {key!r}: {sorted(row)}"
+        assert 0.0 <= row["purity"] <= 1.0
+    byz = [r for r in on_disk["rows"] if r["sweep"] == "byzantine"]
+    assert {r["aggregator"] for r in byz} == {"mean", "trimmed_mean"}
+    assert all(r["scenario"] == "byzantine" for r in byz)
+    dp = [r for r in on_disk["rows"] if r["sweep"] == "dp"]
+    assert all(r["scenario"] == "dp" for r in dp)
+    assert all("achieved_alpha" in r and "predicted_alpha" in r for r in dp)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ODCLConfig, batched_ridge_erm, odcl, oracles
+from repro.core import batched_ridge_erm, odcl, oracles
 from repro.data import make_linear_regression_federation
 
 
@@ -16,7 +16,7 @@ def test_full_paper_pipeline_one_shot():
     local = np.asarray(batched_ridge_erm(
         jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
     # steps 2-4: the server's single round
-    result = odcl(local, ODCLConfig(algo="kmeans++", k=fed.K))
+    result = odcl(local, algorithm="kmeans++", k=fed.K)
 
     opt = fed.optima[fed.true_labels]
     def mse(models):

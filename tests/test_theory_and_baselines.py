@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import IFCAConfig, ifca, ifca_init_annulus, theory
 from repro.core.erm import batched_ridge_erm
-from repro.core.odcl import ODCLConfig, odcl
+from repro.core.odcl import odcl
 from repro.data import make_linear_regression_federation
 
 
@@ -76,7 +76,7 @@ def test_ifca_needs_many_rounds_where_odcl_needs_one():
     fed = make_linear_regression_federation(seed=4, m=40, K=4, n=200)
     local = np.asarray(batched_ridge_erm(
         jnp.asarray(fed.xs), jnp.asarray(fed.ys), 1e-8))
-    res = odcl(local, ODCLConfig(algo="kmeans++", k=4))
+    res = odcl(local, algorithm="kmeans++", k=4)
     opt = fed.optima[fed.true_labels]
     odcl_err = float(np.mean(np.sum((res.user_models - opt) ** 2, 1)))
 
