@@ -12,6 +12,26 @@ the next optimization PRs measure against.  The phases are disjoint:
 ``local_erm_s`` the wave ERMs without it (comparable with pre-session
 rows), ``aggregate_s`` the finalize round.
 
+Each row now also carries (schema_version 2):
+
+  * serving columns — ``route_p50_ms`` / ``route_p99_ms`` /
+    ``routes_per_s`` from 256 fresh probe clients routed through the
+    session, ``finalize_p50_ms`` / ``finalize_p99_ms`` from warm
+    re-finalizes, and the session ``drift`` gauge.  The serving
+    exercise runs OUTSIDE the phase timings, so ``total_s`` stays
+    comparable with schema-1 rows.
+  * ``kernels`` — achieved-vs-peak roofline rows
+    (``roofline.engine_costs``): ``programs`` pairs each AOT program's
+    XLA cost analysis with its measured warm p50 (captured by the obs
+    layer at the run's own compiles, zero extra compiles); ``probes``
+    AOT-times the per-iteration kernel at the row's shapes.
+  * ``device_peak_bytes`` — the backend allocator's peak when it
+    reports one (TPU/GPU ``memory_stats``), else the peak-RSS delta
+    over the bench's start (the CPU backend allocates from RSS);
+    ``device_peak_bytes_source`` says which.  The RSS delta is a
+    process-wide high-water mark, so later rows upper-bound earlier
+    peaks rather than resetting per row.
+
 The kmeans family sweeps to C=16k.  The convex family's complete fusion
 graph is E = C(C-1)/2 edges (the AMA state is O(E * sketch_dim)), which
 walls at C=4k — the ``edges=knn`` rows swap in the sparse mutual-kNN
@@ -27,35 +47,58 @@ import jax
 
 from benchmarks.common import emit
 from repro.launch.simulate import simulate
+from repro.roofline.engine_costs import (
+    detect_hardware,
+    engine_kernel_report,
+    hardware_info,
+    program_rows_from_snapshot,
+)
 
 CLUSTERS = 8
 OUT = "BENCH_engine.json"
+SCHEMA_VERSION = 2
 # (algorithm, C grid, simulate overrides)
 SWEEPS = (
-    ("kmeans-device", (256, 1024, 4096, 16384), {}),
-    ("convex-device", (256, 1024, 4096),
-     {"sketch_dim": 32, "cc_iters": 200}),
+    ("kmeans-device", (256, 1024, 4096, 16384),
+     {"finalize_repeats": 5, "route_probes": 256}),
+    ("convex-device", (256, 1024),
+     {"sketch_dim": 32, "cc_iters": 200,
+      "finalize_repeats": 3, "route_probes": 256}),
+    # the complete-graph wall row: one finalize is already ~15 min, so
+    # its finalize histogram is the single (compile-heavy) run
+    ("convex-device", (4096,),
+     {"sketch_dim": 32, "cc_iters": 200,
+      "finalize_repeats": 1, "route_probes": 256}),
     # sparse kNN fusion graph: past the complete-graph C=4k edge wall
     ("convex-device", (4096, 16384),
-     {"sketch_dim": 32, "cc_iters": 200, "edges": "knn", "knn_k": 8}),
+     {"sketch_dim": 32, "cc_iters": 200, "edges": "knn", "knn_k": 8,
+      "finalize_repeats": 2, "route_probes": 256}),
 )
 
 
-def _peak_bytes() -> dict:
+def _peak_bytes(rss_baseline: int) -> dict:
     """Device allocator peak when the backend reports it (TPU/GPU), else
-    None; host peak RSS always (the CPU backend allocates from RSS)."""
+    the peak-RSS delta over the bench baseline; the source is recorded
+    so consumers know which estimate they are reading."""
     stats = {}
     try:
         stats = jax.local_devices()[0].memory_stats() or {}
     except Exception:  # noqa: BLE001 - CPU backends may not implement it
         pass
-    return {
-        "device_peak_bytes": stats.get("peak_bytes_in_use"),
-        "peak_rss_bytes": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024,
-    }
+    peak_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+    dev = stats.get("peak_bytes_in_use")
+    source = "memory_stats"
+    if dev is None:
+        dev = max(peak_rss - rss_baseline, 0)
+        source = "rss_delta"
+    return {"device_peak_bytes": int(dev),
+            "device_peak_bytes_source": source,
+            "peak_rss_bytes": peak_rss}
 
 
 def run(sweeps=SWEEPS, out: str = OUT):
+    hw = detect_hardware()
+    rss_baseline = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
     rows = []
     for algorithm, c_grid, overrides in sweeps:
         tag = algorithm
@@ -64,16 +107,27 @@ def run(sweeps=SWEEPS, out: str = OUT):
         for c in c_grid:
             summary = simulate(clients=c, clusters=CLUSTERS, wave=4096,
                                algorithm=algorithm, **overrides)
-            row = {**summary, **_peak_bytes()}
+            snap = summary.pop("obs")
+            serving = summary.pop("serving") or {}
+            probes = engine_kernel_report(
+                c, summary["sketch_dim"], CLUSTERS, algorithm,
+                edges=summary.get("edges") or "complete",
+                knn_k=summary.get("knn_k") or 8, hw=hw)
+            row = {**summary, **serving, **_peak_bytes(rss_baseline),
+                   "kernels": {
+                       "programs": program_rows_from_snapshot(snap, hw),
+                       "probes": probes}}
             rows.append(row)
             ph = summary["phases"]
             emit(f"bench_engine/{tag}/C{c}", ph["aggregate_s"] * 1e6,
                  f"erm_s={ph['local_erm_s']:.2f};"
                  f"ingest_s={ph['ingest_s']:.2f};"
                  f"purity={summary['purity']:.3f};"
+                 f"route_p50_ms={serving.get('route_p50_ms')};"
                  f"rss={row['peak_rss_bytes']}")
-    report = {"bench": "engine_scale", "backend": jax.default_backend(),
-              "clusters": CLUSTERS, "rows": rows}
+    report = {"bench": "engine_scale", "schema_version": SCHEMA_VERSION,
+              "backend": jax.default_backend(), "clusters": CLUSTERS,
+              "hw": hardware_info(hw), "rows": rows}
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
     emit("bench_engine/report", 0.0, out)

@@ -49,6 +49,7 @@ from repro.launch.simulate import _wave_erm, simulate, staggered_optima
 from repro.scenarios import build_scenario
 
 OUT = "BENCH_robustness.json"
+SCHEMA_VERSION = 1
 
 BYZ_FRACS = (0.0, 0.05, 0.1, 0.15, 0.2)
 AGGREGATORS = ("mean", "trimmed_mean", "median")
@@ -103,6 +104,9 @@ def run(*, base=None, byz=None, dp=None, byz_fracs=BYZ_FRACS,
                              scenario="byzantine",
                              scenario_options={"frac": f,
                                                "attack": "sign_flip"})
+                # the per-run obs snapshot / serving block are engine-
+                # bench concerns; robustness rows track quality only
+                s.pop("obs", None), s.pop("serving", None)
                 rows.append({"sweep": "byzantine", "frac": f, **s})
                 emit(f"bench_rob/byz/f{f:g}/s{seed}/{agg}", 0.0,
                      f"purity={s['purity']:.3f}:mse={s['mse']:.3g}")
@@ -112,6 +116,7 @@ def run(*, base=None, byz=None, dp=None, byz_fracs=BYZ_FRACS,
         s = simulate(**base, **dp, seed=seeds[0],
                      scenario="dp" if eps is not None else None,
                      scenario_options=opts)
+        s.pop("obs", None), s.pop("serving", None)
         ach, pred = _dp_separability(eps, seed=seeds[0], **base)
         row = {"sweep": "dp", "epsilon": eps, **s,
                "achieved_alpha": ach, "predicted_alpha": pred,
@@ -149,7 +154,8 @@ def run(*, base=None, byz=None, dp=None, byz_fracs=BYZ_FRACS,
              f"trim_purity={crit['trimmed_purity_min']:.3f}:"
              f"mean_mse_x={crit['mean_mse_degradation_x']:.3g}")
 
-    report = {"bench": "robustness", "backend": jax.default_backend(),
+    report = {"bench": "robustness", "schema_version": SCHEMA_VERSION,
+              "backend": jax.default_backend(),
               "config": {"base": base, "byzantine": byz, "dp": dp,
                          "seeds": list(seeds)},
               "criterion": crit, "rows": rows}

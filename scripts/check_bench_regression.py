@@ -1,0 +1,177 @@
+#!/usr/bin/env python
+"""Benchmark regression gate.
+
+Two layers, both exiting non-zero on violation so CI/smoke can gate on
+them:
+
+  * schema validation (always): ``BENCH_engine.json`` must be
+    schema_version 2 with the serving / roofline / peak-memory columns
+    present in every row; ``BENCH_robustness.json`` must be
+    schema_version 1 with the robustness row keys.
+  * ``--quick``: re-run the cheapest engine row (kmeans-device, C=256)
+    through the real ``bench_engine_scale`` path into a temp file and
+    compare it against the committed baseline row under per-metric
+    tolerances — exact for protocol invariants (comm bytes, recovered
+    K'), a small slack for quality (purity), and generous multipliers
+    for wall clock / memory (CI containers are noisy; the gate exists
+    to catch order-of-magnitude regressions and schema drift, not 10%
+    jitter).
+
+Run from anywhere:  python scripts/check_bench_regression.py --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
+ROBUSTNESS_JSON = os.path.join(ROOT, "BENCH_robustness.json")
+
+ENGINE_SCHEMA_VERSION = 2
+ROBUSTNESS_SCHEMA_VERSION = 1
+
+ENGINE_ROW_KEYS = {
+    "clients", "algorithm", "phases", "purity", "n_clusters_recovered",
+    "comm_bytes", "device_peak_bytes", "device_peak_bytes_source",
+    "route_probes", "route_p50_ms", "route_p99_ms", "routes_per_s",
+    "finalize_repeats", "finalize_p50_ms", "finalize_p99_ms", "kernels",
+}
+ROBUSTNESS_ROW_KEYS = {"sweep", "scenario", "aggregator", "purity"}
+
+# --quick tolerances vs the committed baseline row
+PURITY_SLACK = 0.02          # absolute purity drop allowed
+TIME_MULT, TIME_SLACK_S = 2.5, 2.0
+MEM_MULT, MEM_SLACK_B = 4.0, 2 << 30
+ROUTE_MULT, ROUTE_SLACK_MS = 4.0, 10.0
+
+
+def _load(path: str) -> dict:
+    if not os.path.exists(path):
+        print(f"[bench-gate] FAIL: missing {path}")
+        raise SystemExit(1)
+    with open(path) as f:
+        return json.load(f)
+
+
+def _check(failures: list, ok: bool, msg: str) -> None:
+    print(f"[bench-gate] {'ok  ' if ok else 'FAIL'} {msg}")
+    if not ok:
+        failures.append(msg)
+
+
+def validate_engine(report: dict, failures: list) -> None:
+    _check(failures,
+           report.get("schema_version") == ENGINE_SCHEMA_VERSION,
+           f"engine schema_version == {ENGINE_SCHEMA_VERSION} "
+           f"(got {report.get('schema_version')})")
+    rows = report.get("rows") or []
+    _check(failures, bool(rows), "engine report has rows")
+    for i, row in enumerate(rows):
+        missing = ENGINE_ROW_KEYS - set(row)
+        _check(failures, not missing,
+               f"engine row {i} ({row.get('algorithm')}/C{row.get('clients')})"
+               f" has required keys" + (f"; missing {sorted(missing)}"
+                                        if missing else ""))
+        if missing:
+            continue
+        _check(failures, row["device_peak_bytes"] is not None
+               and row["device_peak_bytes"] > 0,
+               f"engine row {i} device_peak_bytes non-null "
+               f"({row['device_peak_bytes']}, "
+               f"source={row.get('device_peak_bytes_source')})")
+
+
+def validate_robustness(report: dict, failures: list) -> None:
+    _check(failures,
+           report.get("schema_version") == ROBUSTNESS_SCHEMA_VERSION,
+           f"robustness schema_version == {ROBUSTNESS_SCHEMA_VERSION} "
+           f"(got {report.get('schema_version')})")
+    rows = report.get("rows") or []
+    _check(failures, bool(rows), "robustness report has rows")
+    for i, row in enumerate(rows):
+        missing = ROBUSTNESS_ROW_KEYS - set(row)
+        _check(failures, not missing,
+               f"robustness row {i} has required keys"
+               + (f"; missing {sorted(missing)}" if missing else ""))
+
+
+def _row_key(row: dict):
+    return (row["algorithm"], row.get("edges") or "complete", row["clients"])
+
+
+def quick_check(baseline: dict, failures: list) -> None:
+    """Re-run the C=256 kmeans-device row and compare against baseline."""
+    from benchmarks.bench_engine_scale import run
+
+    sweeps = (("kmeans-device", (256,),
+               {"finalize_repeats": 5, "route_probes": 256}),)
+    with tempfile.TemporaryDirectory() as td:
+        report = run(sweeps=sweeps, out=os.path.join(td, "quick.json"))
+    row = report["rows"][0]
+    base_rows = {_row_key(r): r for r in baseline.get("rows", [])}
+    base = base_rows.get(_row_key(row))
+    if base is None:
+        _check(failures, False,
+               f"baseline row {_row_key(row)} present in BENCH_engine.json")
+        return
+
+    _check(failures, row["purity"] >= base["purity"] - PURITY_SLACK,
+           f"purity {row['purity']:.3f} >= "
+           f"{base['purity']:.3f} - {PURITY_SLACK}")
+    _check(failures,
+           row["n_clusters_recovered"] == base["n_clusters_recovered"],
+           f"n_clusters_recovered {row['n_clusters_recovered']} == "
+           f"{base['n_clusters_recovered']}")
+    _check(failures, row["comm_bytes"] == base["comm_bytes"],
+           f"comm_bytes {row['comm_bytes']:g} == {base['comm_bytes']:g}")
+    for phase in ("aggregate_s", "total_s"):
+        cap = base["phases"][phase] * TIME_MULT + TIME_SLACK_S
+        _check(failures, row["phases"][phase] <= cap,
+               f"{phase} {row['phases'][phase]:.2f}s <= {cap:.2f}s "
+               f"(baseline {base['phases'][phase]:.2f}s)")
+    if base.get("device_peak_bytes"):
+        cap = base["device_peak_bytes"] * MEM_MULT + MEM_SLACK_B
+        _check(failures, row["device_peak_bytes"] <= cap,
+               f"device_peak_bytes {row['device_peak_bytes']} <= {cap:.0f}")
+    if base.get("route_p50_ms"):
+        cap = base["route_p50_ms"] * ROUTE_MULT + ROUTE_SLACK_MS
+        _check(failures, row["route_p50_ms"] <= cap,
+               f"route_p50_ms {row['route_p50_ms']:.3f} <= {cap:.3f}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="re-run the kmeans-device C=256 row and compare "
+                         "against the committed baseline")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="schema validation only (explicit alias of the "
+                         "no-flag default)")
+    ap.add_argument("--engine-json", default=ENGINE_JSON)
+    ap.add_argument("--robustness-json", default=ROBUSTNESS_JSON)
+    args = ap.parse_args(argv)
+
+    failures: list = []
+    engine = _load(args.engine_json)
+    validate_engine(engine, failures)
+    validate_robustness(_load(args.robustness_json), failures)
+    if args.quick and not args.validate_only:
+        quick_check(engine, failures)
+
+    if failures:
+        print(f"[bench-gate] {len(failures)} check(s) failed")
+        return 1
+    print("[bench-gate] all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -123,3 +123,7 @@ for row in report["rows"]:
     assert {"scenario", "aggregator", "purity"} <= set(row), sorted(row)
 print(f"bench_robustness --reduced OK ({len(report['rows'])} rows)")
 PY
+
+# benchmark regression gate: BENCH_*.json schema validation + a re-run
+# of the cheapest engine row compared against the committed baseline
+PYTHONPATH=src python scripts/check_bench_regression.py --quick

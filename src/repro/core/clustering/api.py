@@ -81,7 +81,57 @@ class DeviceClusteringResult(NamedTuple):
     can flow out of a jitted aggregation round without a host copy."""
     labels: jnp.ndarray       # (m,) int32 cluster id per point
     centers: jnp.ndarray      # (k, d) cluster representatives
-    meta: dict                # str -> jnp scalar diagnostics
+    meta: dict                # the DEVICE_META_KEYS schema, jnp scalars
+
+
+# the uniform device meta contract: every DeviceClusteringAlgorithm
+# reports exactly these keys (jnp scalars inside the jitted round); a
+# fixed dict structure keeps every algorithm's result the same pytree
+# shape, and downstream consumers (benchmarks, the obs snapshot, the
+# session) never branch on which family produced the round
+DEVICE_META_KEYS = ("inertia", "n_iter", "restarts", "n_clusters", "lam",
+                    "restart_spread")
+
+
+def device_meta(*, inertia, n_iter, n_clusters, restarts=1, lam=None,
+                restart_spread=None) -> dict:
+    """Build the uniform device meta dict (``DEVICE_META_KEYS``).
+
+    ``inertia`` is the family's common quality scalar (sum of squared
+    distances to the assigned representative — the convex adapters
+    compute it from their fusion centers so the key means the same
+    thing everywhere); ``n_iter`` the iterations actually run (Lloyd
+    steps, AMA fixed-point iterations-to-converge); fields a family has
+    no notion of (``lam`` for Lloyd, ``restart_spread`` for the convex
+    path) are NaN-valued scalars so the pytree structure stays fixed —
+    ``meta_to_host`` turns them back into ``None``.
+    """
+    nan = jnp.asarray(jnp.nan, jnp.float32)
+    return {
+        "inertia": jnp.asarray(inertia, jnp.float32),
+        "n_iter": jnp.asarray(n_iter, jnp.int32),
+        "restarts": jnp.asarray(restarts, jnp.int32),
+        "n_clusters": jnp.asarray(n_clusters, jnp.int32),
+        "lam": nan if lam is None else jnp.asarray(lam, jnp.float32),
+        "restart_spread": (nan if restart_spread is None
+                           else jnp.asarray(restart_spread, jnp.float32)),
+    }
+
+
+def meta_to_host(meta: dict) -> dict:
+    """Device meta -> host meta: ints for the count-valued keys, floats
+    elsewhere, NaN sentinels back to ``None``.  Passes through extra
+    (non-schema) keys as floats so plugin algorithms can extend."""
+    out = {}
+    for name, v in meta.items():
+        x = np.asarray(v)
+        if name in ("n_iter", "restarts", "n_clusters"):
+            out[name] = int(x)
+        elif name in ("lam", "restart_spread") and np.isnan(x):
+            out[name] = None
+        else:
+            out[name] = float(x)
+    return out
 
 
 @runtime_checkable
@@ -243,8 +293,12 @@ class DeviceLloydFamily:
         eff_restarts = 1 if (init == "spectral" and full_batch) else restarts
         return DeviceClusteringResult(
             labels=res.labels, centers=res.centers,
-            meta={"inertia": res.inertia, "n_iter": res.n_iter,
-                  "restarts": jnp.asarray(eff_restarts, jnp.int32)})
+            meta=device_meta(
+                inertia=res.inertia, n_iter=res.n_iter,
+                restarts=eff_restarts,
+                n_clusters=jnp.sum(
+                    jnp.bincount(res.labels, length=k) > 0),
+                restart_spread=res.restart_spread))
 
     def __call__(self, key, points, *, k: Optional[int] = None,
                  iters: int = 100, init: str = "kmeans++",
@@ -253,20 +307,23 @@ class DeviceLloydFamily:
         res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
                                iters=iters, init=init, restarts=restarts,
                                batch_m=batch_m, aggregator=aggregator)
-        return _as_result(res.labels, res.centers,
-                          {"inertia": float(res.meta["inertia"]),
-                           "n_iter": int(res.meta["n_iter"]),
-                           "restarts": int(res.meta["restarts"])})
+        return _as_result(res.labels, res.centers, meta_to_host(res.meta))
 
     def admissibility_alpha(self, m: int, c_min: int) -> float:
         return alpha_kmeans(m, c_min)
 
 
-def _device_convex_result(res) -> DeviceClusteringResult:
+def _device_convex_result(points, res) -> DeviceClusteringResult:
+    # inertia against the fusion centers puts the convex family on the
+    # same quality scalar as the Lloyd family (centers are root-indexed
+    # (m, d), so the label gather works directly); n_iter is the AMA
+    # fixed point's iterations-to-converge (the early-exit while_loop
+    # count, not the iters budget)
+    inertia = jnp.sum((points - res.centers[res.labels]) ** 2)
     return DeviceClusteringResult(
         labels=res.labels, centers=res.centers,
-        meta={"lam": res.lam, "n_clusters": res.n_clusters,
-              "ama_iters": res.n_iter})
+        meta=device_meta(inertia=inertia, n_iter=res.n_iter,
+                         n_clusters=res.n_clusters, lam=res.lam))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -287,7 +344,7 @@ class DeviceConvexClustering:
                     weights=None, merge_tol=None, edges: str = "complete",
                     knn_k: int = 8, **_: Any) -> DeviceClusteringResult:
         del k
-        return _device_convex_result(device_convex_cluster(
+        return _device_convex_result(points, device_convex_cluster(
             key, points, lam=lam, iters=iters, weights=weights,
             merge_tol=merge_tol, edges=edges, knn_k=knn_k))
 
@@ -298,9 +355,7 @@ class DeviceConvexClustering:
         res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
                                lam=lam, iters=iters, weights=weights,
                                merge_tol=merge_tol, edges=edges, knn_k=knn_k)
-        return _as_result(res.labels, res.centers,
-                          {"lam": float(res.meta["lam"]),
-                           "n_clusters": int(res.meta["n_clusters"])})
+        return _as_result(res.labels, res.centers, meta_to_host(res.meta))
 
     def admissibility_alpha(self, m: int, c_min: int) -> float:
         return alpha_convex_clustering(m, c_min)
@@ -321,7 +376,7 @@ class DeviceClusterpath:
                     merge_tol=None, edges: str = "complete",
                     knn_k: int = 8, **_: Any) -> DeviceClusteringResult:
         del k
-        return _device_convex_result(device_clusterpath(
+        return _device_convex_result(points, device_clusterpath(
             key, points, n_lambdas=n_lambdas, iters=iters,
             merge_tol=merge_tol, edges=edges, knn_k=knn_k))
 
@@ -333,9 +388,7 @@ class DeviceClusterpath:
                                n_lambdas=n_lambdas, iters=iters,
                                merge_tol=merge_tol, edges=edges,
                                knn_k=knn_k)
-        return _as_result(res.labels, res.centers,
-                          {"lam": float(res.meta["lam"]),
-                           "n_clusters": int(res.meta["n_clusters"])})
+        return _as_result(res.labels, res.centers, meta_to_host(res.meta))
 
     def admissibility_alpha(self, m: int, c_min: int) -> float:
         return alpha_convex_clustering(m, c_min)
@@ -378,16 +431,19 @@ class DeviceGradientClustering:
             raise ValueError("gradient clustering requires k")
         res = gradient_clustering(key, points.astype(jnp.float32), k,
                                   alpha=alpha, iters=iters)
-        return DeviceClusteringResult(labels=res.labels, centers=res.centers,
-                                      meta={"inertia": res.inertia})
+        return DeviceClusteringResult(
+            labels=res.labels, centers=res.centers,
+            meta=device_meta(
+                inertia=res.inertia, n_iter=res.n_iter,
+                n_clusters=jnp.sum(
+                    jnp.bincount(res.labels, length=k) > 0)))
 
     def __call__(self, key, points, *, k: Optional[int] = None,
                  iters: int = 100, alpha: float = 0.5,
                  **_: Any) -> ClusteringResult:
         res = self.device_call(key, jnp.asarray(points, jnp.float32), k=k,
                                iters=iters, alpha=alpha)
-        return _as_result(res.labels, res.centers,
-                          {"inertia": float(res.meta["inertia"])})
+        return _as_result(res.labels, res.centers, meta_to_host(res.meta))
 
     def admissibility_alpha(self, m: int, c_min: int) -> float:
         return alpha_kmeans(m, c_min)

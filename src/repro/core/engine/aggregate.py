@@ -13,10 +13,15 @@ parameters never cross the host boundary; the only host outputs are the
 (small-C debugging only — large-C runs must not pay that transfer).
 
 The cluster->average stage is shared with the streaming server API
-(``engine/session.py``): ``_finalize_program`` is the same program
-minus the sketch vmap, run on a sketch matrix that was accumulated
-wave-by-wave — the two paths stay bit-exact because they trace the
-identical ``_cluster_and_average`` body.
+(``engine/session.py``): the session's finalize runs the same stage as
+two AOT programs (``_cluster_program`` + ``_mean_program``, split so
+the obs layer can time the cluster vs mean phases separately) over the
+sketch matrix it accumulated wave-by-wave — the paths stay bit-exact
+because both trace the identical ``device_call`` /
+``_average_clusters`` bodies (pinned by ``tests/test_session.py``).
+Every program here is a ``_Program``: AOT ``lower().compile()`` per
+input shape with compile-vs-execute spans and XLA cost-analysis
+(flops / bytes) gauges recorded to ``repro.obs``.
 
 Under a mesh the client axis shards over ``data`` (the same stacked
 layout as ``federated.py``): the label/center reductions inside the
@@ -34,7 +39,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.clustering.api import get_algorithm, is_device_algorithm
+from repro import obs
+from repro.core.clustering.api import (
+    get_algorithm,
+    is_device_algorithm,
+    meta_to_host,
+)
 from repro.core.engine.aggregators import (
     cluster_aggregate_tree,
     get_aggregator,
@@ -54,42 +64,94 @@ def _constrainer(mesh, client_axis):
     return constrain
 
 
+def _average_clusters(constrain, labels, centers, params, aggregator):
+    """Steps 3-4: the per-cluster parameter reduction (traceable).
+
+    The single source of truth for the averaging stage: the fused round
+    traces it through ``_cluster_and_average`` and the session's split
+    finalize traces it alone (``_mean_program``) — same body, which is
+    what keeps the two bit-exact on identical inputs."""
+    kk = centers.shape[0]
+    onehot = jax.nn.one_hot(labels, kk, dtype=jnp.float32)      # (C, K)
+    counts = jnp.sum(onehot, axis=0)                            # (K,) raw
+    return jax.tree_util.tree_map(
+        constrain, cluster_aggregate_tree(params, labels, onehot,
+                                          counts, aggregator))
+
+
 def _cluster_and_average(algo, options, k, constrain, cluster_key,
                          sketches, params, aggregator="mean"):
     """Steps 2-4 on an already-materialized sketch matrix (traceable).
 
-    The single source of truth for the server's cluster->average stage:
-    both the fused one-shot round below and the streaming session's
-    ``finalize`` trace this exact body, which is what keeps the two
-    bit-exact on identical inputs.  ``aggregator`` selects the
-    per-cluster reduction from the registry (``engine/aggregators.py``);
-    the default ``mean`` traces the identical contraction as before the
-    registry existed.
+    ``aggregator`` selects the per-cluster reduction from the registry
+    (``engine/aggregators.py``); the default ``mean`` traces the
+    identical contraction as before the registry existed.
     """
     res = algo.device_call(cluster_key, sketches, k=k, **options)
-    kk = res.centers.shape[0]
-    onehot = jax.nn.one_hot(res.labels, kk, dtype=jnp.float32)  # (C, K)
-    counts = jnp.sum(onehot, axis=0)                            # (K,) raw
-    new_params = jax.tree_util.tree_map(
-        constrain, cluster_aggregate_tree(params, res.labels, onehot,
-                                          counts, aggregator))
+    new_params = _average_clusters(constrain, res.labels, res.centers,
+                                   params, aggregator)
     return new_params, res
+
+
+class _Program:
+    """AOT-compiled program with compile-vs-execute telemetry.
+
+    Wraps a traceable function: the first call per input-shape
+    signature runs ``jit(fn).lower(*args).compile()`` under a
+    ``"<label>.compile"`` span and records the compiled module's XLA
+    cost analysis as ``"<label>.flops"`` / ``"<label>.bytes"`` gauges;
+    every call then executes (blocking to completion) under a
+    ``"<label>.execute"`` span.  This is what splits the historically
+    conflated "first round is slow" wall clock into trace/compile vs
+    execute in the bench rows, and what feeds
+    ``roofline.engine_costs`` its achieved-vs-peak numbers without a
+    second compile of the round.
+    """
+
+    def __init__(self, label: str, fn):
+        self.label = label
+        self._fn = fn
+        self._cache = {}
+
+    @staticmethod
+    def _signature(args):
+        return tuple((l.shape, str(l.dtype))
+                     for l in jax.tree_util.tree_leaves(args))
+
+    def __call__(self, *args):
+        sig = self._signature(args)
+        compiled = self._cache.get(sig)
+        if compiled is None:
+            with obs.span(f"{self.label}.compile"):
+                compiled = jax.jit(self._fn).lower(*args).compile()
+            cost = compiled.cost_analysis() or {}
+            if isinstance(cost, (list, tuple)):   # older jax: per-device list
+                cost = cost[0] if cost else {}
+            obs.gauge(f"{self.label}.flops", float(cost.get("flops", 0.0)))
+            obs.gauge(f"{self.label}.bytes",
+                      float(cost.get("bytes accessed", 0.0)))
+            self._cache[sig] = compiled
+        with obs.span(f"{self.label}.execute"):
+            out = compiled(*args)
+            jax.block_until_ready(out)
+        return out
 
 
 @functools.lru_cache(maxsize=16)
 def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis,
                    aggregator="mean"):
-    """Build the jitted end-to-end round for one static configuration.
+    """Build the fused end-to-end round for one static configuration.
 
     Cached on the static pieces (``aggregator`` resolves to a frozen
     registry instance, so it joins the key) so repeated rounds (sweeps,
     parity tests, multi-round drivers) reuse the compiled program
-    instead of retracing a fresh closure every call.
+    instead of retracing a fresh closure every call.  Returns a
+    ``_Program`` — AOT-compiled per shape with compile/execute spans
+    and roofline counters under the ``"engine.round"`` label.
     """
     options = dict(opts)
     constrain = _constrainer(mesh, client_axis)
 
-    @jax.jit
     def round_fn(sketch_key, cluster_key, params):
         sketches = jax.vmap(
             lambda p: sketch_tree(sketch_key, p, sketch_dim,
@@ -101,26 +163,49 @@ def _round_program(algo, k, opts, sketch_dim, leaf_filter, mesh, client_axis,
             aggregator)
         return new_params, res, sketches
 
-    return round_fn
+    return _Program("engine.round", round_fn)
 
 
 @functools.lru_cache(maxsize=16)
-def _finalize_program(algo, k, opts, mesh, client_axis, aggregator="mean"):
-    """Steps 2-4 alone, jitted — the streaming session's finalize.
+def _cluster_program(algo, k, opts):
+    """Step 2 alone — the session finalize's clustering phase.
 
-    Identical trace body to the fused round's tail, fed the sketch
-    matrix the session accumulated wave by wave instead of re-sketching.
-    """
+    Same ``device_call`` trace as inside the fused round; splitting it
+    from the mean program gives the cluster/mean latency breakdown
+    (``session.finalize.cluster`` vs ``session.finalize.mean`` spans)
+    that decides *what* an incremental re-finalize would need to re-run.
+    The bit-exactness property tests in ``tests/test_session.py`` pin
+    that the split stays identical to the fused round."""
     options = dict(opts)
+
+    def cluster_fn(cluster_key, sketches):
+        return algo.device_call(cluster_key, sketches, k=k, **options)
+
+    return _Program("session.finalize.cluster", cluster_fn)
+
+
+@functools.lru_cache(maxsize=16)
+def _mean_program(mesh, client_axis, aggregator="mean"):
+    """Steps 3-4 alone — the session finalize's averaging phase (the
+    shared ``_average_clusters`` body, fed the cluster program's
+    labels/centers, which stay on device between the two programs)."""
     constrain = _constrainer(mesh, client_axis)
 
-    @jax.jit
-    def finalize_fn(cluster_key, sketches, params):
-        return _cluster_and_average(algo, options, k, constrain,
-                                    cluster_key, sketches, params,
-                                    aggregator)
+    def mean_fn(labels, centers, params):
+        return _average_clusters(constrain, labels, centers, params,
+                                 aggregator)
 
-    return finalize_fn
+    return _Program("session.finalize.mean", mean_fn)
+
+
+def cached_program(builder, *key):
+    """Call an ``lru_cache``d program builder, falling back to the
+    uncached build when a key piece (algorithm instance, options dict,
+    mesh) is unhashable — shared by the fused round and the session."""
+    try:
+        return builder(*key)
+    except TypeError:
+        return builder.__wrapped__(*key)
 
 
 def resolve_device_algorithm(algorithm):
@@ -152,7 +237,7 @@ def materialize_round(new_params, res, state: FederatedState):
     ids behind each compact label, ``first`` one member index per compact
     id (the session's routing/serving handles)."""
     labels, uniq, first = compact_labels(res.labels)
-    meta = {name: float(np.asarray(v)) for name, v in res.meta.items()}
+    meta = meta_to_host(res.meta)
     new_state = FederatedState(
         params=new_params,
         opt_state=jax.vmap(adamw_init)(new_params),
@@ -190,19 +275,16 @@ def one_shot_aggregate_device(state: FederatedState, cfg=None, *,
                    if cfg is not None and getattr(cfg, "is_moe", False)
                    else None)
     opts = tuple(sorted((algo_options or {}).items()))
-    try:
-        round_fn = _round_program(algo, k, opts, sketch_dim, leaf_filter,
-                                  mesh, client_axis, aggregator)
-    except TypeError:  # unhashable algorithm/options/mesh: build uncached
-        round_fn = _round_program.__wrapped__(algo, k, opts, sketch_dim,
-                                              leaf_filter, mesh, client_axis,
-                                              aggregator)
+    round_fn = cached_program(_round_program, algo, k, opts, sketch_dim,
+                              leaf_filter, mesh, client_axis, aggregator)
 
     sketch_key = jax.random.PRNGKey(seed)
     cluster_key = jax.random.PRNGKey(
         seed if cluster_seed is None else cluster_seed)
-    new_params, res, sketches = round_fn(sketch_key, cluster_key,
-                                         state.params)
+    with obs.span("engine.one_shot", clients=state.n_clients,
+                  algorithm=getattr(algo, "name", str(algo))):
+        new_params, res, sketches = round_fn(sketch_key, cluster_key,
+                                             state.params)
 
     new_state, labels, info, _, _ = materialize_round(new_params, res, state)
     if return_sketches:

@@ -45,6 +45,11 @@ class DeviceKMeansResult(NamedTuple):
     centers: jnp.ndarray    # (k, d) float32 cluster centers
     inertia: jnp.ndarray    # () sum of squared distances to assigned center
     n_iter: jnp.ndarray     # () Lloyd iterations actually run
+    restart_spread: jnp.ndarray = jnp.float32(0.0)
+    #                         () max-min final inertia over the vmapped
+    #                         restarts (0 for a single restart): the
+    #                         init-sensitivity diagnostic the obs layer
+    #                         surfaces as meta["restart_spread"]
 
 
 def _init_centers(key, points, k: int, init: str):
@@ -168,4 +173,6 @@ def device_kmeans(key, points, k: int, iters: int = 50,
     keys = jnp.concatenate([key[None], jax.random.split(key, restarts - 1)])
     stacked = jax.vmap(lambda kk: run(kk))(keys)
     best = jnp.argmin(stacked.inertia)
-    return jax.tree_util.tree_map(lambda x: x[best], stacked)
+    picked = jax.tree_util.tree_map(lambda x: x[best], stacked)
+    return picked._replace(
+        restart_spread=jnp.max(stacked.inertia) - jnp.min(stacked.inertia))

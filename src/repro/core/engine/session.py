@@ -44,14 +44,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.clustering.api import (
     device_twin,
     get_algorithm,
     is_device_algorithm,
+    meta_to_host,
     resolve_device_request,
 )
 from repro.core.engine.aggregate import (
-    _finalize_program,
+    _cluster_program,
+    _mean_program,
+    cached_program,
     compact_labels,
     materialize_round,
 )
@@ -63,6 +67,13 @@ from repro.core.federated import FederatedState
 from repro.core.sketch import sketch_tree
 from repro.kernels import ops as kops
 from repro.optim import adamw_init
+
+
+@jax.jit
+def _sum_sq_to_assigned(pts, centers, labels):
+    """Sum over rows of ||pt - centers[label]||^2 — the inertia of a
+    point set against an existing clustering (drift bookkeeping)."""
+    return jnp.sum((pts - centers[labels]) ** 2)
 
 
 class AggregationSession:
@@ -110,6 +121,12 @@ class AggregationSession:
         self._final = None             # (state, labels, info) of finalize
         self._route_centers = None     # (K', sketch_dim) active centers
         self._first_idx = None         # (K',) one member index per cluster
+        # drift bookkeeping: per-row inertia of the finalized clustering
+        # vs the running per-row inertia of everything routed since —
+        # the gauge the incremental-re-finalize policy will trigger on
+        self._finalized_d2 = None      # mean row d^2 at finalize time
+        self._routed_d2_sum = 0.0      # accumulated routed row d^2
+        self._routed_n = 0
 
         def _ingest(sk_buf, p_buf, wave, offset):
             sk = jax.vmap(
@@ -205,9 +222,15 @@ class AggregationSession:
                 lambda l: self._constrain(
                     jnp.zeros((self.capacity,) + l.shape[1:], l.dtype)),
                 wave)
-        self._sketches, self._params = self._ingest_fn(
-            self._sketches, self._params, wave,
-            jnp.asarray(offset, jnp.int32))
+        with obs.span("session.ingest", wave=w, offset=offset,
+                      mode="params"):
+            self._sketches, self._params = self._ingest_fn(
+                self._sketches, self._params, wave,
+                jnp.asarray(offset, jnp.int32))
+            jax.block_until_ready(self._sketches)
+        obs.count("session.ingest.clients", w)
+        obs.count("session.ingest.bytes",
+                  sum(l.size * l.dtype.itemsize for l in leaves))
         return offset
 
     def _ingest_sketches(self, sketches) -> int:
@@ -218,10 +241,17 @@ class AggregationSession:
         if sketches.ndim != 2 or sketches.shape[1] != self.sketch_dim:
             raise ValueError(f"sketch wave must be (w, {self.sketch_dim}), "
                              f"got {sketches.shape}")
-        offset = self._reserve(int(sketches.shape[0]))
+        w = int(sketches.shape[0])
+        offset = self._reserve(w)
         self._mode = "sketches"    # only after validation, as above
-        self._sketches = self._ingest_sk_fn(self._sketches, sketches,
-                                            jnp.asarray(offset, jnp.int32))
+        with obs.span("session.ingest", wave=w, offset=offset,
+                      mode="sketches"):
+            self._sketches = self._ingest_sk_fn(
+                self._sketches, sketches, jnp.asarray(offset, jnp.int32))
+            jax.block_until_ready(self._sketches)
+        obs.count("session.ingest.clients", w)
+        obs.count("session.ingest.bytes",
+                  sketches.size * sketches.dtype.itemsize)
         return offset
 
     # ---------------------------------------------------------- finalize
@@ -262,12 +292,15 @@ class AggregationSession:
         params = (None if self._params is None else
                   jax.tree_util.tree_map(lambda l: l[:self._count],
                                          self._params))
-        if use_device:
-            out = self._finalize_device(algo, k_eff, algo_options, sketches,
-                                        params, aggregator)
-        else:
-            out = self._finalize_host(algo, k_eff, algo_options, sketches,
-                                      params, aggregator)
+        with obs.span("session.finalize", count=self._count,
+                      algorithm=getattr(algo, "name", str(algo)),
+                      engine="device" if use_device else "host"):
+            if use_device:
+                out = self._finalize_device(algo, k_eff, algo_options,
+                                            sketches, params, aggregator)
+            else:
+                out = self._finalize_host(algo, k_eff, algo_options,
+                                          sketches, params, aggregator)
         self._final = out
         return out
 
@@ -276,49 +309,68 @@ class AggregationSession:
         cluster_key = jax.random.PRNGKey(self.cluster_seed)
         aggregator = get_aggregator(aggregator)
         opts = tuple(sorted((algo_options or {}).items()))
+        # the cluster and mean phases run as two AOT programs (labels /
+        # centers stay on device between them) so the obs layer sees the
+        # finalize latency split — the breakdown an incremental
+        # re-finalize would consult to decide what to re-run
+        res = cached_program(_cluster_program, algo, k, opts)(
+            cluster_key, sketches)
         if params is None:
-            res = algo.device_call(cluster_key, sketches, k=k,
-                                   **dict(opts))
             labels, uniq, first = compact_labels(res.labels)
-            meta = {n: float(np.asarray(v)) for n, v in res.meta.items()}
-            info = {"n_clusters": int(len(uniq)), "meta": meta,
+            info = {"n_clusters": int(len(uniq)),
+                    "meta": meta_to_host(res.meta),
                     "engine": "device", "count": self._count}
             self._set_routing(res.centers[jnp.asarray(uniq)], first)
+            self._note_finalized(sketches, res)
             return None, labels, info
-        try:
-            fin = _finalize_program(algo, k, opts, self.mesh,
-                                    self.client_axis, aggregator)
-        except TypeError:          # unhashable algorithm/options/mesh
-            fin = _finalize_program.__wrapped__(algo, k, opts, self.mesh,
-                                               self.client_axis, aggregator)
-        new_params, res = fin(cluster_key, sketches, params)
+        new_params = cached_program(_mean_program, self.mesh,
+                                    self.client_axis, aggregator)(
+            res.labels, res.centers, params)
         state = FederatedState(params=params, opt_state=None,
                                n_clients=self._count, step=0)
         new_state, labels, info, uniq, first = materialize_round(
             new_params, res, state)
         info["count"] = self._count
         self._set_routing(res.centers[jnp.asarray(uniq)], first)
+        self._note_finalized(sketches, res)
         return new_state, labels, info
+
+    def _note_finalized(self, sketches, res):
+        """Anchor the drift gauge: record the finalized clustering's mean
+        per-row inertia and reset the routed-traffic accumulator."""
+        self._finalized_d2 = float(
+            _sum_sq_to_assigned(sketches, res.centers, res.labels)
+        ) / max(self._count, 1)
+        self._routed_d2_sum = 0.0
+        self._routed_n = 0
 
     def _finalize_host(self, algo, k, algo_options, sketches, params,
                        aggregator="mean"):
         from repro.core.odcl import run_clustering
 
-        result = run_clustering(jax.random.PRNGKey(self.cluster_seed),
-                                np.asarray(sketches), algo, k=k,
-                                **(algo_options or {}))
+        with obs.span("session.finalize.cluster", engine="host"):
+            result = run_clustering(jax.random.PRNGKey(self.cluster_seed),
+                                    np.asarray(sketches), algo, k=k,
+                                    **(algo_options or {}))
         labels, _, first = compact_labels(result.labels)
         info = {"n_clusters": result.n_clusters, "meta": result.meta,
                 "engine": "host", "count": self._count}
-        self._set_routing(jnp.asarray(result.centers, jnp.float32), first)
+        centers = jnp.asarray(result.centers, jnp.float32)
+        self._set_routing(centers, first)
+        self._finalized_d2 = float(_sum_sq_to_assigned(
+            sketches, centers, jnp.asarray(labels))) / max(self._count, 1)
+        self._routed_d2_sum = 0.0
+        self._routed_n = 0
         if params is None:
             return None, labels, info
         labels_j = jnp.asarray(labels)
-        onehot = jax.nn.one_hot(labels_j, result.n_clusters,
-                                dtype=jnp.float32)
-        counts = jnp.sum(onehot, axis=0)
-        new_params = cluster_aggregate_tree(params, labels_j, onehot, counts,
-                                            aggregator)
+        with obs.span("session.finalize.mean", engine="host"):
+            onehot = jax.nn.one_hot(labels_j, result.n_clusters,
+                                    dtype=jnp.float32)
+            counts = jnp.sum(onehot, axis=0)
+            new_params = cluster_aggregate_tree(params, labels_j, onehot,
+                                                counts, aggregator)
+            jax.block_until_ready(new_params)
         new_state = FederatedState(
             params=new_params, opt_state=jax.vmap(adamw_init)(new_params),
             n_clients=self._count, step=0)
@@ -348,8 +400,19 @@ class AggregationSession:
         sketch = jnp.asarray(sketch, jnp.float32)
         single = sketch.ndim == 1
         pts = sketch[None] if single else sketch
-        labels, _, _ = kops.kmeans_assign(pts, self._route_centers)
-        out = np.asarray(labels)
+        with obs.span("session.route", n=int(pts.shape[0])):
+            labels, _, _ = kops.kmeans_assign(pts, self._route_centers)
+            out = np.asarray(labels)
+        obs.count("session.route.requests", int(pts.shape[0]))
+        # drift gauge: routed traffic's mean d^2 to its assigned center,
+        # relative to the finalized clustering's own mean d^2 — the
+        # trigger signal for the roadmap's incremental re-finalize
+        self._routed_d2_sum += float(_sum_sq_to_assigned(
+            pts, self._route_centers, labels))
+        self._routed_n += int(pts.shape[0])
+        d = self.drift
+        if d is not None:
+            obs.gauge("session.drift", d)
         return int(out[0]) if single else out
 
     def cluster_model(self, cluster_id: int):
@@ -370,6 +433,21 @@ class AggregationSession:
         if self._final is None:
             raise ValueError("finalize() first")
         return self._route_centers
+
+    @property
+    def drift(self) -> Optional[float]:
+        """Routed-traffic inertia relative to the finalized clustering's
+        own inertia: (mean routed row d^2) / (mean finalized row d^2).
+
+        ~1.0 means serving traffic looks like the federation that was
+        clustered; growth means the recovered centers are going stale —
+        the signal a future incremental re-finalize would trigger on.
+        ``None`` until at least one finalize and one route happened.
+        """
+        if self._finalized_d2 is None or self._routed_n == 0:
+            return None
+        return (self._routed_d2_sum / self._routed_n) / max(
+            self._finalized_d2, 1e-12)
 
     # ------------------------------------------------------------- state
 

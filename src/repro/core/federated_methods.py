@@ -40,12 +40,14 @@ dispatch by name and never grow if/elif ladders.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Iterator, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.clustering.api import get_algorithm, resolve_device_request
 from repro.core.engine.aggregators import cluster_reduce_tree, get_aggregator
 from repro.core.federated import (
@@ -180,10 +182,12 @@ class ODCLFederated:
 
         algorithm, options = self._resolve()
         k = self.k if get_algorithm(algorithm).requires_k else None
+        t0 = time.perf_counter()
         state, labels, info = one_shot_aggregate(
             state, cfg, algorithm=algorithm, k=k, algo_options=options,
             engine=self.engine, sketch_dim=self.sketch_dim, seed=self.seed,
             aggregator=self.aggregator, mesh=mesh)
+        round_s = time.perf_counter() - t0
         rounds.append({"phase": "aggregate", "engine": info["engine"],
                        "n_clusters": info["n_clusters"]})
 
@@ -196,6 +200,11 @@ class ODCLFederated:
         bytes_per = params_bytes_per_client(state)
         comm = sketch_round_bytes(state.n_clients, self.sketch_dim,
                                   bytes_per)
+        obs.count("fed.comm_bytes", comm)
+        obs.observe("fed.round.ms", round_s * 1000.0)
+        obs.event("fed.round", method=self.name, round=0, seconds=round_s,
+                  bytes=float(comm), clients=state.n_clients,
+                  n_clusters=info["n_clusters"])
         return FederatedMethodResult(
             state=state, labels=np.asarray(labels),
             n_clusters=info["n_clusters"], comm_rounds=1.0,
@@ -320,8 +329,20 @@ class IFCAFederated:
         cluster_opt = (jax.vmap(adamw_init)(theta)
                        if self.carry_opt_state and self.local_steps else None)
 
+        # comm accounting per round, computed up front (model shapes are
+        # fixed for the whole run) so every round's event can carry it
+        bytes_per = params_bytes_per_client(state)
+        if self.assign == "loss":
+            # down: k models per client; up: one trained model per client
+            per_round = state.n_clients * (self.k + 1) * bytes_per
+        else:
+            # up: sketch + trained model; down: the assigned model
+            per_round = sketch_round_bytes(state.n_clients, self.sketch_dim,
+                                           bytes_per)
+
         params, labels, rounds = state.params, None, []
         for r in range(self.rounds):
+            t0 = time.perf_counter()
             batch = None
             if self.assign == "loss":
                 batch = jax.tree_util.tree_map(jnp.asarray, next(batches))
@@ -368,6 +389,12 @@ class IFCAFederated:
                                               jnp.maximum(counts, 1.0))
                 cluster_opt = jax.tree_util.tree_map(keep, opt_means,
                                                      cluster_opt)
+            round_s = time.perf_counter() - t0
+            obs.count("fed.comm_bytes", per_round)
+            obs.observe("fed.round.ms", round_s * 1000.0)
+            obs.event("fed.round", method=self.name, round=r,
+                      seconds=round_s, bytes=float(per_round),
+                      clients=state.n_clients, churn=churn)
             rounds.append({"round": r, "assign_churn": churn,
                            "cluster_sizes": np.asarray(counts).tolist(),
                            "loss_last": losses[-1] if losses else None})
@@ -382,14 +409,6 @@ class IFCAFederated:
             params=params, opt_state=jax.vmap(adamw_init)(params),
             n_clients=state.n_clients,
             step=state.step + self.rounds * self.local_steps)
-        bytes_per = params_bytes_per_client(new_state)
-        if self.assign == "loss":
-            # down: k models per client; up: one trained model per client
-            per_round = state.n_clients * (self.k + 1) * bytes_per
-        else:
-            # up: sketch + trained model; down: the assigned model
-            per_round = sketch_round_bytes(state.n_clients, self.sketch_dim,
-                                           bytes_per)
         return FederatedMethodResult(
             state=new_state, labels=labels,
             n_clusters=int(len(np.unique(labels))),
@@ -417,8 +436,10 @@ class FedAvgGlobal:
         c = state.n_clients
         onehot = jnp.ones((c, 1), jnp.float32)
         counts = jnp.full((1,), float(c))
+        per_round = c * 2 * params_bytes_per_client(state)
         rounds = []
         for r in range(self.rounds):
+            t0 = time.perf_counter()
             if self.local_steps:
                 state, losses = local_training(state, cfg, batches,
                                                self.local_steps, self.opt)
@@ -430,6 +451,11 @@ class FedAvgGlobal:
             state = FederatedState(params=params,
                                    opt_state=jax.vmap(adamw_init)(params),
                                    n_clients=c, step=state.step)
+            round_s = time.perf_counter() - t0
+            obs.count("fed.comm_bytes", per_round)
+            obs.observe("fed.round.ms", round_s * 1000.0)
+            obs.event("fed.round", method=self.name, round=r,
+                      seconds=round_s, bytes=float(per_round), clients=c)
         bytes_per = params_bytes_per_client(state)
         return FederatedMethodResult(
             state=state, labels=np.zeros(c, np.int32), n_clusters=1,

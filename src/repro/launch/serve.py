@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import latest_step, restore_checkpoint
 from repro.configs import get_config
 from repro.models import init_params
@@ -112,7 +113,12 @@ def main(argv=None):
                     help="registered clustering for --route-by-sketch")
     ap.add_argument("--route-sketch-dim", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write every obs span/event (routing, finalize) "
+                         "of this serve run as JSONL")
     args = ap.parse_args(argv)
+    if args.trace:
+        obs.add_sink(obs.JsonlSink(args.trace))
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -147,6 +153,10 @@ def main(argv=None):
             print(f"[ckpt] restored step {step}; client {args.client} "
                   f"routed to cluster {cid}/{info['n_clusters']} "
                   f"(labels {info['labels'].tolist()})")
+            h = obs.snapshot()["histograms"].get("session.route.ms")
+            if h and h.get("count"):
+                print(f"[route] {h['count']} request(s), "
+                      f"p50={h['p50']:.3f}ms max={h['max']:.3f}ms")
         else:
             def select(restored, ref):
                 # federated checkpoints stack params along a leading

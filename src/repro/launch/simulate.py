@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.clustering import (
     device_twin,
     get_algorithm,
@@ -101,7 +102,8 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
              scenario=None, scenario_options: dict | None = None,
              aggregator: str = "mean", trim_beta: float = 0.1,
              seed: int = 0, method: str = "odcl", rounds: int = 5,
-             mesh=None) -> dict:
+             trace: str | None = None, route_probes: int = 0,
+             finalize_repeats: int = 1, mesh=None) -> dict:
     """Generate a K-cluster federation of ``clients`` users, stream the
     wave-solved local ERMs into an ``AggregationSession``, run the
     requested federated method over it (default: the session's own
@@ -130,7 +132,19 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
     step-3 reduction (``trim_beta`` specializes ``trimmed_mean``); a
     non-mean aggregator also drives the device Lloyd center update, so
     Byzantine rows stop dragging the recovered partition.
+
+    ``trace`` attaches a JSONL event sink for the run (every obs span /
+    event lands there).  ``route_probes``/``finalize_repeats`` exercise
+    the serving path AFTER the scored run — fresh probe clients routed
+    through ``session.route`` and warm finalize re-runs — so the
+    summary's ``serving`` section gets real route/finalize latency
+    histograms without touching the phase timings.
     """
+    obs.reset()                       # per-run aggregates; sinks survive
+    trace_sink = None
+    if trace is not None:
+        trace_sink = obs.JsonlSink(trace)
+        obs.add_sink(trace_sink)
     key = jax.random.PRNGKey(seed)
     k_opt, k_data = jax.random.split(key)
     optima = staggered_optima(k_opt, clusters, dim)
@@ -251,6 +265,47 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         target = np.asarray(optima)[truth]
         mse = float(np.mean((served[honest] - target[honest]) ** 2))
 
+    # serving exercise: deliberately OUTSIDE the phase timings (total_s
+    # stays comparable with pre-serving bench rows); the latencies land
+    # in the session.route.ms / session.finalize.ms histograms
+    serving = None
+    if method == "odcl" and (route_probes > 0 or finalize_repeats > 1):
+        for _ in range(max(0, finalize_repeats - 1)):
+            session.finalize(algorithm=algorithm, k=clusters,
+                             algo_options=algo_options, engine="device",
+                             aggregator=agg)
+        routes_per_s = None
+        if route_probes > 0:
+            # fresh never-seen clients from the same population — the
+            # paper's serving-time arrivals
+            probe_labels = jnp.arange(route_probes, dtype=jnp.int32) % clusters
+            theta_p = _wave_erm(
+                jax.random.fold_in(k_data, 0x9e3779b9), optima, probe_labels,
+                wave=route_probes, n=samples, d=dim, task=task)
+            jax.block_until_ready(theta_p)
+            session.route(params={"theta": theta_p[0]})        # warmup
+            tr = time.perf_counter()
+            for i in range(route_probes):
+                session.route(params={"theta": theta_p[i]})
+            routes_per_s = route_probes / (time.perf_counter() - tr)
+        hists = obs.snapshot()["histograms"]
+        h_route = hists.get("session.route.ms", {})
+        h_fin = hists.get("session.finalize.ms", {})
+        serving = {
+            "route_probes": route_probes,
+            "route_p50_ms": h_route.get("p50"),
+            "route_p99_ms": h_route.get("p99"),
+            "routes_per_s": routes_per_s,
+            "finalize_repeats": finalize_repeats,
+            "finalize_p50_ms": h_fin.get("p50"),
+            "finalize_p99_ms": h_fin.get("p99"),
+            "drift": session.drift,
+        }
+
+    if trace_sink is not None:
+        obs.remove_sink(trace_sink)
+        trace_sink.close()
+
     return {
         "clients": clients, "clusters": clusters, "dim": dim,
         "samples": samples, "wave": wave, "task": task,
@@ -271,6 +326,8 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         "purity_all": purity_all,
         "mse": mse,
         "meta": meta,
+        "serving": serving,
+        "obs": obs.snapshot(),
     }
 
 
@@ -351,6 +408,14 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=5,
                     help="communication rounds (ifca / fedavg)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write every obs span/event of the run as JSONL")
+    ap.add_argument("--route-probes", type=int, default=0,
+                    help="route this many fresh probe clients after the "
+                         "round (serving latency histograms)")
+    ap.add_argument("--finalize-repeats", type=int, default=1,
+                    help="total finalize runs (warm re-finalizes feed the "
+                         "finalize latency histogram)")
     ap.add_argument("--out", default=None, help="write the summary JSON here")
     args = ap.parse_args(argv)
 
@@ -372,7 +437,9 @@ def main(argv=None):
         edges=args.edges, knn_k=args.knn_k,
         scenario=args.scenario, scenario_options=scenario_options or None,
         aggregator=args.aggregator, trim_beta=args.trim_beta,
-        seed=args.seed, method=args.method, rounds=args.rounds)
+        seed=args.seed, method=args.method, rounds=args.rounds,
+        trace=args.trace, route_probes=args.route_probes,
+        finalize_repeats=args.finalize_repeats)
     ph = summary["phases"]
     print(f"[simulate] C={summary['clients']} K={summary['clusters']} "
           f"task={summary['task']} wave={summary['wave']} "
@@ -392,6 +459,17 @@ def main(argv=None):
           f"honest={summary['honest_frac']:.2f}) "
           f"mse={mse if mse is None else format(mse, '.3g')} "
           f"inertia={summary['meta'].get('inertia', float('nan')):.3g}")
+    sv = summary["serving"]
+    if sv is not None:
+        rp50 = sv["route_p50_ms"]
+        print(f"[simulate] serving: route p50="
+              f"{'-' if rp50 is None else format(rp50, '.3f')}ms "
+              f"p99={'-' if sv['route_p99_ms'] is None else format(sv['route_p99_ms'], '.3f')}ms "
+              f"({'-' if sv['routes_per_s'] is None else format(sv['routes_per_s'], '.0f')}/s)  "
+              f"finalize p50={'-' if sv['finalize_p50_ms'] is None else format(sv['finalize_p50_ms'], '.1f')}ms  "
+              f"drift={'-' if sv['drift'] is None else format(sv['drift'], '.3f')}")
+    if args.trace:
+        print(f"[simulate] trace -> {args.trace}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(summary, f, indent=2)

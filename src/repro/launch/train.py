@@ -38,6 +38,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core.federated import evaluate_per_client, init_federation
@@ -105,7 +106,12 @@ def main(argv=None):
                          "averaging): mean, or a robust registry variant")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write every obs span/event (engine round, "
+                         "per-round comm) of this run as JSONL")
     args = ap.parse_args(argv)
+    if args.trace:
+        obs.add_sink(obs.JsonlSink(args.trace))
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -7,13 +7,29 @@ from repro.roofline.analysis import (
     active_param_count,
     roofline_terms,
 )
+from repro.roofline.engine_costs import (
+    HW_CPU,
+    achieved_vs_peak,
+    detect_hardware,
+    engine_kernel_report,
+    hardware_info,
+    kernel_probe,
+    program_rows_from_snapshot,
+)
 
 __all__ = [
+    "HW_CPU",
     "HW_V5E",
     "Hardware",
     "RooflineReport",
+    "achieved_vs_peak",
     "collective_bytes_from_hlo",
+    "detect_hardware",
+    "engine_kernel_report",
+    "hardware_info",
+    "kernel_probe",
     "model_flops",
     "active_param_count",
+    "program_rows_from_snapshot",
     "roofline_terms",
 ]

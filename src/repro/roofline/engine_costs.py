@@ -1,0 +1,161 @@
+"""Achieved-vs-peak roofline numbers for the aggregation engine.
+
+``roofline/analysis.py`` predicts LM train/serve step times from a
+compiled dry run; this module closes the loop for the *engine* —
+the fused one-shot round, the session's split finalize, and the two
+engine kernels (``kmeans_assign``, ``group_ball_proj_batched``) — by
+pairing each program's XLA ``cost_analysis()`` (flops / bytes accessed)
+with its *measured* execute time:
+
+  * ``program_rows_from_snapshot(snapshot, hw)`` — reads the
+    ``"<label>.flops"`` / ``"<label>.bytes"`` gauges and
+    ``"<label>.execute.ms"`` histograms that ``engine.aggregate._Program``
+    records into ``repro.obs``, and turns every AOT program the run
+    compiled into an achieved-vs-peak row.  Free: the costs were
+    captured at the program's own compile, no second compile happens.
+  * ``kernel_probe`` / ``engine_kernel_report`` — standalone AOT
+    compile+time of the per-iteration kernels at a given problem size,
+    for the bench rows' ``kernels`` section.
+
+Peaks come from the shared ``Hardware`` dataclass.  On TPU the real
+v5e numbers apply; elsewhere ``HW_CPU`` is a *nominal* reference chip
+(order-of-magnitude laptop-class peaks) so the fraction-of-peak columns
+stay comparable across bench runs on the same backend — they are NOT a
+claim about the actual host silicon, and ``hw["name"]`` in every report
+says which reference was used.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.analysis import HW_V5E, Hardware
+
+# nominal laptop-class reference peaks for non-TPU backends: ~100 GFLOP/s
+# f32, ~25 GB/s memory, ~10 GB/s interconnect.  Deliberately round
+# numbers — the point is stable achieved/peak ratios across runs, not
+# host-silicon accuracy.
+HW_CPU = Hardware(name="cpu-nominal", peak_flops=1e11, hbm_bw=2.5e10,
+                  link_bw=1e10)
+
+
+def detect_hardware(backend: str | None = None) -> Hardware:
+    """The reference Hardware for the active (or given) jax backend."""
+    b = backend or jax.default_backend()
+    return HW_V5E if b == "tpu" else HW_CPU
+
+
+def _cost_dict(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):    # older jax: per-device list
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def achieved_vs_peak(cost: dict, seconds: float, hw: Hardware) -> dict:
+    """One program's roofline row: cost_analysis dict + measured wall
+    seconds -> achieved rates and fraction-of-peak."""
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    s = max(float(seconds), 1e-12)
+    return {
+        "flops": flops,
+        "bytes": nbytes,
+        "exec_s": float(seconds),
+        "achieved_flops_per_s": flops / s,
+        "achieved_bytes_per_s": nbytes / s,
+        "flops_frac_of_peak": flops / s / hw.peak_flops,
+        "bytes_frac_of_peak": nbytes / s / hw.hbm_bw,
+    }
+
+
+def kernel_probe(name: str, fn, args, hw: Hardware, iters: int = 3) -> dict:
+    """AOT-compile ``fn`` at the shapes of ``args`` and time warm
+    executions; returns an achieved-vs-peak row tagged with the arg
+    shapes."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = _cost_dict(compiled)
+    jax.block_until_ready(compiled(*args))            # warmup
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = compiled(*args)
+    jax.block_until_ready(out)
+    per_iter = (time.perf_counter() - t0) / iters
+    row = achieved_vs_peak(cost, per_iter, hw)
+    row["name"] = name
+    row["shapes"] = [list(jnp.shape(a)) for a in args]
+    return row
+
+
+def engine_kernel_report(clients: int, sketch_dim: int, k: int,
+                         algorithm: str, *, edges: str = "complete",
+                         knn_k: int = 8, max_edges: int = 1 << 21,
+                         hw: Hardware | None = None) -> list[dict]:
+    """Probe the per-iteration kernel(s) a bench row's algorithm drives.
+
+    Lloyd-family rows probe ``kmeans_assign`` at the row's (C, s) x
+    (k, s); convex rows probe ``group_ball_proj_batched`` at the fusion
+    graph's edge count (C*knn_k for knn, C(C-1)/2 complete, capped at
+    ``max_edges`` with a ``capped`` flag so huge-C rows don't allocate
+    an O(C^2) probe tensor).
+    """
+    from repro.kernels import ops as kops
+
+    hw = hw or detect_hardware()
+    key = jax.random.PRNGKey(0)
+    rows = []
+    if algorithm.startswith("kmeans"):
+        pts = jax.random.normal(key, (clients, sketch_dim), jnp.float32)
+        ctr = pts[:max(k, 1)]
+        rows.append(kernel_probe("kmeans_assign", kops.kmeans_assign,
+                                 (pts, ctr), hw))
+    else:
+        n_edges = (clients * knn_k if edges == "knn"
+                   else clients * (clients - 1) // 2)
+        capped = n_edges > max_edges
+        e = min(n_edges, max_edges)
+        v = jax.random.normal(key, (1, e, sketch_dim), jnp.float32)
+        radius = jnp.ones((1, e), jnp.float32)
+        row = kernel_probe("group_ball_proj_batched",
+                           kops.group_ball_proj_batched, (v, radius), hw)
+        row["edges"] = int(e)
+        row["edges_capped"] = bool(capped)
+        rows.append(row)
+    return rows
+
+
+def program_rows_from_snapshot(snapshot: dict,
+                               hw: Hardware | None = None) -> dict:
+    """Achieved-vs-peak per AOT program, from an ``obs.snapshot()``.
+
+    Pairs every ``"<label>.flops"`` gauge with the matching
+    ``"<label>.execute.ms"`` histogram's p50 (warm-execution latency)
+    — the programs the run actually compiled and ran, at their real
+    shapes, with zero extra compiles.
+    """
+    hw = hw or detect_hardware()
+    gauges = snapshot.get("gauges", {})
+    hists = snapshot.get("histograms", {})
+    out = {}
+    for name, flops in gauges.items():
+        if not name.endswith(".flops"):
+            continue
+        label = name[:-len(".flops")]
+        h = hists.get(f"{label}.execute.ms")
+        if not h or not h.get("count"):
+            continue
+        cost = {"flops": flops,
+                "bytes accessed": gauges.get(f"{label}.bytes", 0.0)}
+        row = achieved_vs_peak(cost, h["p50"] / 1000.0, hw)
+        row["exec_count"] = h["count"]
+        out[label] = row
+    return out
+
+
+def hardware_info(hw: Hardware | None = None) -> dict:
+    hw = hw or detect_hardware()
+    return {"name": hw.name, "peak_flops": hw.peak_flops,
+            "hbm_bw": hw.hbm_bw, "link_bw": hw.link_bw,
+            "backend": jax.default_backend()}

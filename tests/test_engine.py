@@ -281,3 +281,56 @@ def test_one_shot_duplicate_clients_share_label(engine):
     assert same_partition(labels, true)
     np.testing.assert_allclose(np.asarray(new_state.params["theta"]), pts,
                                rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- uniform device meta
+
+def test_device_meta_keys_are_the_contract():
+    from repro.core.clustering.api import DEVICE_META_KEYS
+    assert DEVICE_META_KEYS == ("inertia", "n_iter", "restarts",
+                                "n_clusters", "lam", "restart_spread")
+
+
+@pytest.mark.parametrize("name,opts", [
+    ("kmeans-device", {"restarts": 2}),
+    ("convex-device", {"lam": 0.5, "iters": 50}),
+    ("clusterpath-device", {"n_lambdas": 4, "iters": 50}),
+    ("gradient-device", {"iters": 20}),
+])
+def test_device_meta_uniform_schema(name, opts):
+    """Every device family reports the same typed meta schema: jnp
+    scalars on device, int/float/None on host, NaN sentinels for the
+    fields a family has no notion of."""
+    from repro.core.clustering.api import DEVICE_META_KEYS
+
+    pts, _ = make_blobs(0, k=3, per=8, d=4)
+    algo = get_algorithm(name)
+    k = 3 if algo.requires_k else None
+    res = algo.device_call(jax.random.PRNGKey(0), jnp.asarray(pts), k=k,
+                           **opts)
+    assert set(res.meta) == set(DEVICE_META_KEYS)
+    for v in res.meta.values():
+        assert isinstance(v, jnp.ndarray) and v.shape == ()
+
+    host = algo(jax.random.PRNGKey(0), pts, k=k, **opts)
+    assert set(host.meta) == set(DEVICE_META_KEYS)
+    for key_ in ("n_iter", "restarts", "n_clusters"):
+        assert isinstance(host.meta[key_], int), key_
+    assert isinstance(host.meta["inertia"], float)
+    assert host.meta["inertia"] >= 0.0
+    assert host.meta["n_iter"] >= 1
+    # n_clusters in meta agrees with the compacted host result
+    assert host.meta["n_clusters"] == host.n_clusters
+
+    if name == "kmeans-device":
+        # Lloyd: restart diagnostics real, lambda not a concept -> None
+        assert host.meta["lam"] is None
+        assert host.meta["restarts"] == 2
+        assert isinstance(host.meta["restart_spread"], float)
+    if name == "kmeans-device" or name == "gradient-device":
+        assert host.meta["lam"] is None
+    if name == "convex-device":
+        # convex: lambda real, restart machinery not a concept -> None
+        assert host.meta["lam"] == pytest.approx(0.5)
+        assert host.meta["restart_spread"] is None
+        assert host.meta["restarts"] == 1

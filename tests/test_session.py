@@ -275,3 +275,38 @@ if _HAVE_HYPOTHESIS:
             np.asarray(ref_state.params["theta"]))
         # route() self-consistency rides along on every drawn federation
         np.testing.assert_array_equal(sess.route(sess.sketches), labels)
+
+
+# ------------------------------------------------------------ obs / drift
+
+def test_session_drift_gauge_and_route_histogram():
+    """The drift gauge anchors at finalize and tracks routed traffic:
+    routing the session's own members gives drift ~= 1; routing points
+    far from every center inflates it.  Route latencies land in the
+    ``session.route.ms`` histogram."""
+    from repro import obs
+
+    obs.reset()
+    pts, _ = make_blobs(3, (12, 12, 12), 8)
+    sess = AggregationSession(len(pts), sketch_dim=16, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts)})
+    assert sess.drift is None                  # nothing finalized yet
+    sess.finalize(algorithm="kmeans-device", k=3)
+    assert sess.drift is None                  # nothing routed yet
+
+    sess.route(sess.sketches)                  # members of the clustering
+    assert sess.drift == pytest.approx(1.0, rel=1e-4)
+
+    far = jnp.asarray(np.full((4, 16), 1e3, np.float32))
+    sess.route(far)
+    assert sess.drift > 1.0
+
+    snap = obs.snapshot()
+    h = snap["histograms"]["session.route.ms"]
+    assert h["count"] == 2
+    assert snap["gauges"]["session.drift"] == pytest.approx(sess.drift)
+    assert snap["histograms"]["session.finalize.ms"]["count"] == 1
+
+    # a re-finalize re-anchors: the routed accumulator starts over
+    sess.finalize(algorithm="kmeans-device", k=3)
+    assert sess.drift is None
