@@ -12,7 +12,18 @@ the next optimization PRs measure against.  The phases are disjoint:
 ``local_erm_s`` the wave ERMs without it (comparable with pre-session
 rows), ``aggregate_s`` the finalize round.
 
-Each row now also carries (schema_version 2):
+Schema_version 3 adds the mutable-serving columns to the kmeans rows:
+the sweep re-runs each federation with keyed drifted re-uploads +
+churned-in joiners (``reupload_frac`` / ``churn``), measures the
+drift-triggered warm re-finalize (``refinalize_warm_p50_ms`` — the
+number to compare against the cold ``finalize_p50_ms``) and the
+one-program batched route (``route_batch_ms`` / ``batched_routes_per_s``
+over the drifted probe batch), and records the eviction/live-slot
+accounting.  The convex rows keep these columns null (the complete-graph
+rows are too slow to re-run mutated, and the warm AMA dual only applies
+at unchanged client count).
+
+Each row also carries (since schema_version 2):
 
   * serving columns — ``route_p50_ms`` / ``route_p99_ms`` /
     ``routes_per_s`` from 256 fresh probe clients routed through the
@@ -56,11 +67,15 @@ from repro.roofline.engine_costs import (
 
 CLUSTERS = 8
 OUT = "BENCH_engine.json"
-SCHEMA_VERSION = 2
-# (algorithm, C grid, simulate overrides)
+SCHEMA_VERSION = 3
+# (algorithm, C grid, simulate overrides).  The kmeans rows carry the
+# mutation knobs, so each row ALSO measures the mutable-serving path
+# (keyed drifted re-uploads + churn, warm re-finalize, batched route)
+# after the scored run; the row key (algorithm, edges, C) is unchanged.
 SWEEPS = (
     ("kmeans-device", (256, 1024, 4096, 16384),
-     {"finalize_repeats": 5, "route_probes": 256}),
+     {"finalize_repeats": 5, "route_probes": 256,
+      "reupload_frac": 0.25, "churn": 64, "refinalize_threshold": 1.5}),
     ("convex-device", (256, 1024),
      {"sketch_dim": 32, "cc_iters": 200,
       "finalize_repeats": 3, "route_probes": 256}),
@@ -124,6 +139,8 @@ def run(sweeps=SWEEPS, out: str = OUT):
                  f"ingest_s={ph['ingest_s']:.2f};"
                  f"purity={summary['purity']:.3f};"
                  f"route_p50_ms={serving.get('route_p50_ms')};"
+                 f"refinalize_warm_p50_ms={serving.get('refinalize_warm_p50_ms')};"
+                 f"route_batch_ms={serving.get('route_batch_ms')};"
                  f"rss={row['peak_rss_bytes']}")
     report = {"bench": "engine_scale", "schema_version": SCHEMA_VERSION,
               "backend": jax.default_backend(), "clusters": CLUSTERS,

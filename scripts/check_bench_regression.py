@@ -5,9 +5,11 @@ Two layers, both exiting non-zero on violation so CI/smoke can gate on
 them:
 
   * schema validation (always): ``BENCH_engine.json`` must be
-    schema_version 2 with the serving / roofline / peak-memory columns
-    present in every row; ``BENCH_robustness.json`` must be
-    schema_version 1 with the robustness row keys.
+    schema_version 3 with the serving / mutable-serving / roofline /
+    peak-memory columns present in every row (the mutation columns —
+    warm re-finalize, batched route, evictions — are nullable: convex
+    rows don't run the mutated sweep); ``BENCH_robustness.json`` must
+    be schema_version 1 with the robustness row keys.
   * ``--quick``: re-run the cheapest engine row (kmeans-device, C=256)
     through the real ``bench_engine_scale`` path into a temp file and
     compare it against the committed baseline row under per-metric
@@ -35,7 +37,7 @@ for p in (ROOT, os.path.join(ROOT, "src")):
 ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
 ROBUSTNESS_JSON = os.path.join(ROOT, "BENCH_robustness.json")
 
-ENGINE_SCHEMA_VERSION = 2
+ENGINE_SCHEMA_VERSION = 3
 ROBUSTNESS_SCHEMA_VERSION = 1
 
 ENGINE_ROW_KEYS = {
@@ -43,6 +45,10 @@ ENGINE_ROW_KEYS = {
     "comm_bytes", "device_peak_bytes", "device_peak_bytes_source",
     "route_probes", "route_p50_ms", "route_p99_ms", "routes_per_s",
     "finalize_repeats", "finalize_p50_ms", "finalize_p99_ms", "kernels",
+    # schema 3: mutable-serving columns (nullable on non-mutated rows)
+    "reupload_frac", "churn", "live_clients", "evictions",
+    "drift_after_mutation", "refinalize_threshold", "refinalize_fired",
+    "refinalize_warm_p50_ms", "route_batch_ms", "batched_routes_per_s",
 }
 ROBUSTNESS_ROW_KEYS = {"sweep", "scenario", "aggregator", "purity"}
 
@@ -112,7 +118,9 @@ def quick_check(baseline: dict, failures: list) -> None:
     from benchmarks.bench_engine_scale import run
 
     sweeps = (("kmeans-device", (256,),
-               {"finalize_repeats": 5, "route_probes": 256}),)
+               {"finalize_repeats": 5, "route_probes": 256,
+                "reupload_frac": 0.25, "churn": 64,
+                "refinalize_threshold": 1.5}),)
     with tempfile.TemporaryDirectory() as td:
         report = run(sweeps=sweeps, out=os.path.join(td, "quick.json"))
     row = report["rows"][0]
@@ -145,6 +153,19 @@ def quick_check(baseline: dict, failures: list) -> None:
         cap = base["route_p50_ms"] * ROUTE_MULT + ROUTE_SLACK_MS
         _check(failures, row["route_p50_ms"] <= cap,
                f"route_p50_ms {row['route_p50_ms']:.3f} <= {cap:.3f}")
+    if base.get("refinalize_warm_p50_ms"):
+        cap = base["refinalize_warm_p50_ms"] * ROUTE_MULT + ROUTE_SLACK_MS
+        _check(failures,
+               row.get("refinalize_warm_p50_ms") is not None
+               and row["refinalize_warm_p50_ms"] <= cap,
+               f"refinalize_warm_p50_ms {row.get('refinalize_warm_p50_ms')} "
+               f"<= {cap:.3f}")
+    if base.get("route_batch_ms"):
+        cap = base["route_batch_ms"] * ROUTE_MULT + ROUTE_SLACK_MS
+        _check(failures,
+               row.get("route_batch_ms") is not None
+               and row["route_batch_ms"] <= cap,
+               f"route_batch_ms {row.get('route_batch_ms')} <= {cap:.3f}")
 
 
 def main(argv=None) -> int:

@@ -66,6 +66,14 @@ PYTHONPATH=src python -m repro.launch.simulate \
     --scenario byzantine --byzantine-frac 0.1 \
     --aggregator trimmed_mean --trim-beta 0.25
 
+# mutable serving: keyed drifted re-uploads + churned-in joiners under
+# the sliding-window staleness policy, drift-triggered warm re-finalize
+# and the one-program batched route
+PYTHONPATH=src python -m repro.launch.simulate \
+    --clients 256 --clusters 4 --wave 128 --samples 32 \
+    --route-probes 32 --finalize-repeats 3 \
+    --reupload-frac 0.25 --churn 32 --max-age 2 --refinalize-threshold 1.5
+
 # same federation through the iterative baseline (sketch-assign rounds)
 PYTHONPATH=src python -m repro.launch.simulate \
     --clients 256 --clusters 4 --wave 128 --samples 32 --init spectral \

@@ -82,6 +82,9 @@ class DeviceClusteringResult(NamedTuple):
     labels: jnp.ndarray       # (m,) int32 cluster id per point
     centers: jnp.ndarray      # (k, d) cluster representatives
     meta: dict                # the DEVICE_META_KEYS schema, jnp scalars
+    aux: Any = None           # opaque warm-start state beyond the centers
+    #                           (the convex family's AMA dual); None for
+    #                           families whose centers are the whole state
 
 
 # the uniform device meta contract: every DeviceClusteringAlgorithm
@@ -196,6 +199,40 @@ def resolve_device_request(algorithm, options: Optional[dict] = None, *,
     return algorithm, options
 
 
+def resolve_host_request(algorithm, options: Optional[dict] = None):
+    """Map an algorithm request onto the host clustering path.
+
+    The mirror of ``resolve_device_request``: host names pass through
+    unchanged, while explicit ``"<name>-device"`` requests downgrade to
+    the host member of the same family — ``kmeans-device`` maps back
+    through the inverse of ``LLOYD_DEVICE_INIT`` (its ``init`` option
+    selects which host Lloyd name it reproduces), and other device
+    names fall back to their registered ``"<name>"`` base.  Twin-less
+    device names (and device-only options like ``init='warm'``) raise
+    ``ValueError`` instead of silently running a device loop under
+    ``engine='host'``.  Returns ``(algorithm, options)``.
+    """
+    algo = get_algorithm(algorithm)
+    name = getattr(algo, "name", algorithm)
+    if not (isinstance(name, str) and name.endswith("-device")):
+        return algorithm, options
+    opts = dict(options or {})
+    if name == "kmeans-device":
+        init = opts.pop("init", "kmeans++")
+        host = {v: k for k, v in LLOYD_DEVICE_INIT.items()}.get(init)
+        if host is None:
+            raise ValueError(
+                f"engine='host' cannot run kmeans-device init={init!r}; "
+                f"host Lloyd inits: {sorted(LLOYD_DEVICE_INIT.values())}")
+        return host, (opts or None)
+    base = name[: -len("-device")]
+    if base in _REGISTRY:
+        return base, options
+    raise ValueError(
+        f"engine='host' cannot run device-only algorithm {name!r}: no "
+        f"registered host base {base!r}")
+
+
 def device_twin(algo) -> Optional["DeviceClusteringAlgorithm"]:
     """The registered ``"<name>-device"`` twin of a host algorithm.
 
@@ -281,16 +318,20 @@ class DeviceLloydFamily:
     def device_call(self, key, points, *, k: Optional[int] = None,
                     iters: int = 100, init: str = "kmeans++",
                     restarts: int = 1, batch_m: Optional[int] = None,
-                    aggregator=None, **_: Any) -> DeviceClusteringResult:
+                    aggregator=None, init_centers=None,
+                    **_: Any) -> DeviceClusteringResult:
         if k is None:
             raise ValueError(f"{self.name!r} requires k")
         res = device_kmeans(key, points, k, iters=iters, init=init,
                             restarts=restarts, batch_m=batch_m,
-                            aggregator=self._resolve_aggregator(aggregator))
+                            aggregator=self._resolve_aggregator(aggregator),
+                            init_centers=init_centers)
         # report the EFFECTIVE restart count: full-batch spectral seeding
-        # is deterministic, so device_kmeans collapses its restarts to 1
+        # and warm starts are deterministic, so device_kmeans collapses
+        # their restarts to 1
         full_batch = batch_m is None or batch_m >= points.shape[0]
-        eff_restarts = 1 if (init == "spectral" and full_batch) else restarts
+        eff_restarts = (1 if (init in ("spectral", "warm") and full_batch)
+                        else restarts)
         return DeviceClusteringResult(
             labels=res.labels, centers=res.centers,
             meta=device_meta(
@@ -299,6 +340,23 @@ class DeviceLloydFamily:
                 n_clusters=jnp.sum(
                     jnp.bincount(res.labels, length=k) > 0),
                 restart_spread=res.restart_spread))
+
+    # ---- warm-start protocol (session incremental re-finalize) ----
+    # ``warm_state(res)`` extracts what to carry across rounds;
+    # ``device_warm_call(key, points, warm, ...)`` replays the family
+    # from that state.  The Lloyd state is just the centers, and a warm
+    # start is valid for any point count (assignment re-derives).
+    warm_requires_same_count = False
+
+    def warm_state(self, res: DeviceClusteringResult):
+        return res.centers
+
+    def device_warm_call(self, key, points, warm, *,
+                         k: Optional[int] = None,
+                         **options: Any) -> DeviceClusteringResult:
+        options = {**options, "init": "warm", "restarts": 1}
+        return self.device_call(key, points, k=k, init_centers=warm,
+                                **options)
 
     def __call__(self, key, points, *, k: Optional[int] = None,
                  iters: int = 100, init: str = "kmeans++",
@@ -323,7 +381,8 @@ def _device_convex_result(points, res) -> DeviceClusteringResult:
     return DeviceClusteringResult(
         labels=res.labels, centers=res.centers,
         meta=device_meta(inertia=inertia, n_iter=res.n_iter,
-                         n_clusters=res.n_clusters, lam=res.lam))
+                         n_clusters=res.n_clusters, lam=res.lam),
+        aux=res.nu)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -342,11 +401,28 @@ class DeviceConvexClustering:
     def device_call(self, key, points, *, k: Optional[int] = None,
                     lam: Optional[float] = None, iters: int = 400,
                     weights=None, merge_tol=None, edges: str = "complete",
-                    knn_k: int = 8, **_: Any) -> DeviceClusteringResult:
+                    knn_k: int = 8, warm_nu=None,
+                    **_: Any) -> DeviceClusteringResult:
         del k
         return _device_convex_result(points, device_convex_cluster(
             key, points, lam=lam, iters=iters, weights=weights,
-            merge_tol=merge_tol, edges=edges, knn_k=knn_k))
+            merge_tol=merge_tol, edges=edges, knn_k=knn_k,
+            warm_nu=warm_nu))
+
+    # ---- warm-start protocol (session incremental re-finalize) ----
+    # the convex warm state is the AMA dual, one (d,) row per fusion
+    # edge — only valid when the point count (hence the edge set's
+    # slot layout) is unchanged, so the session falls back to a cold
+    # solve after churn changes the live-row count
+    warm_requires_same_count = True
+
+    def warm_state(self, res: DeviceClusteringResult):
+        return res.aux
+
+    def device_warm_call(self, key, points, warm, *,
+                         k: Optional[int] = None,
+                         **options: Any) -> DeviceClusteringResult:
+        return self.device_call(key, points, k=k, warm_nu=warm, **options)
 
     def __call__(self, key, points, *, k: Optional[int] = None,
                  lam: Optional[float] = None, iters: int = 400,

@@ -93,6 +93,12 @@ from repro.core.engine.edges import (
     register_edge_set,
     unregister_edge_set,
 )
+from repro.core.engine.staleness import (
+    ExpDecay,
+    NoStaleness,
+    SlidingWindow,
+    make_staleness_policy,
+)
 
 __all__ = [
     "AggregationSession",
@@ -102,10 +108,14 @@ __all__ = [
     "DeviceKMeansResult",
     "Edges",
     "EdgeSet",
+    "ExpDecay",
     "KnnEdges",
     "MeanAggregator",
     "MedianAggregator",
+    "NoStaleness",
+    "SlidingWindow",
     "TrimmedMeanAggregator",
+    "make_staleness_policy",
     "cluster_aggregate_tree",
     "cluster_reduce_tree",
     "device_clusterpath",

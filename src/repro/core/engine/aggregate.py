@@ -51,6 +51,7 @@ from repro.core.engine.aggregators import (
 )
 from repro.core.federated import FederatedState, _router_invariant_filter
 from repro.core.sketch import sketch_tree
+from repro.kernels import ops as kops
 from repro.optim import adamw_init
 
 
@@ -196,6 +197,81 @@ def _mean_program(mesh, client_axis, aggregator="mean"):
                                  aggregator)
 
     return _Program("session.finalize.mean", mean_fn)
+
+
+@functools.lru_cache(maxsize=16)
+def _warm_cluster_program(algo, k, opts):
+    """Step 2 warm-started — the session's incremental re-finalize.
+
+    Same static configuration as ``_cluster_program`` but traced through
+    the family's ``device_warm_call``: the warm state (previous centers
+    for Lloyd, the AMA dual for the convex family) enters as a TRACED
+    argument, so re-finalizes with fresh warm states reuse one compiled
+    program instead of retracing per state."""
+    options = dict(opts)
+
+    def cluster_fn(cluster_key, sketches, warm):
+        return algo.device_warm_call(cluster_key, sketches, warm, k=k,
+                                     **options)
+
+    return _Program("session.refinalize.cluster", cluster_fn)
+
+
+@functools.lru_cache(maxsize=16)
+def _weighted_mean_program(mesh, client_axis):
+    """Steps 3-4 with per-client weights — the exponential-decay
+    staleness policy's averaging phase.  The per-cluster reduction is
+    the normalized weighted mean ``sum_i w_i x_i / sum_i w_i`` (uniform
+    weights reduce to the plain mean on non-empty clusters); robust
+    aggregators have no weighted form here, which the session enforces."""
+    constrain = _constrainer(mesh, client_axis)
+
+    def mean_fn(labels, centers, params, weights):
+        kk = centers.shape[0]
+        onehot = jax.nn.one_hot(labels, kk, dtype=jnp.float32)     # (C, K)
+        weighted = onehot * weights.astype(jnp.float32)[:, None]   # (C, K)
+        denom = jnp.maximum(jnp.sum(weighted, axis=0), 1e-12)[:, None]
+
+        def back(leaf):
+            flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+            means = (weighted.T @ flat) / denom                    # (K, n)
+            return constrain(
+                (onehot @ means).reshape(leaf.shape).astype(leaf.dtype))
+
+        return jax.tree_util.tree_map(back, params)
+
+    return _Program("session.finalize.mean", mean_fn)
+
+
+@functools.lru_cache(maxsize=4)
+def _route_program():
+    """Serving-time step 4 over a request batch, as ONE program: the
+    fused nearest-center assignment plus the drift accumulator (total
+    squared distance of the batch to its assigned centers).  The
+    per-request host round-trips of the old route path (a label pull,
+    then a separate ``float()`` sync for the drift gauge) collapse into
+    a single execute with one host sync per batch."""
+
+    def route_fn(pts, centers):
+        labels, _, _ = kops.kmeans_assign(pts, centers)
+        assigned = centers[labels]
+        d2 = jnp.sum((pts - assigned) ** 2)
+        return labels, d2
+
+    return _Program("session.route.batch", route_fn)
+
+
+@functools.lru_cache(maxsize=4)
+def _gather_rows_program():
+    """Live-row gather: compact a holey fixed-capacity buffer (sketches
+    or a stacked params pytree) down to the surviving rows before a
+    finalize.  Sessions with a contiguous live prefix never call this —
+    they keep the bit-exact slice path."""
+
+    def gather_fn(buf, rows):
+        return jax.tree_util.tree_map(lambda l: l[rows], buf)
+
+    return _Program("session.gather", gather_fn)
 
 
 def cached_program(builder, *key):

@@ -55,9 +55,15 @@ class DeviceConvexResult(NamedTuple):
     n_clusters: jnp.ndarray   # () int32 number of distinct roots
     n_iter: jnp.ndarray       # () int32 AMA iterations actually run
     lam: jnp.ndarray          # () float32 fusion penalty used
+    nu: Optional[jnp.ndarray] = None
+    #                           (E, d) final AMA dual (fixed-lambda path
+    #                           only) — feed back as ``warm_nu`` to
+    #                           warm-start the next solve on the same
+    #                           edge set
 
 
-def _ama_fixed_point(a, lams, edges: Edges, *, iters: int, tol: float):
+def _ama_fixed_point(a, lams, edges: Edges, *, iters: int, tol: float,
+                     nu0=None):
     """Batched AMA: a (m, d), lams (L,), edges E slots -> u (L, m, d).
 
     All L solves advance together inside one ``lax.while_loop``; the
@@ -66,6 +72,11 @@ def _ama_fixed_point(a, lams, edges: Edges, *, iters: int, tol: float):
     complete edge set this mirrors the host ``_ama_solve`` update
     exactly (same eta = 1/m, same prox); sparse edge sets use the
     builder's ``inv_eta`` (their incidence-spectrum bound).
+
+    ``nu0`` warm-starts the dual ((L, E, d), e.g. the previous round's
+    fixed point on the same edge set) — the AMA dual is feasible for
+    any radius after the first prox, so a stale dual is a valid start
+    that lands near the new fixed point when the data moved little.
     """
     m, d = a.shape
     i_idx, j_idx = edges.i_idx, edges.j_idx
@@ -93,10 +104,13 @@ def _ama_fixed_point(a, lams, edges: Edges, *, iters: int, tol: float):
         moved = jnp.max(jnp.abs(new_nu - nu)) / eta
         return new_nu, it + 1, moved
 
-    nu0 = jnp.zeros((L, e, d), jnp.float32)
+    if nu0 is None:
+        nu0 = jnp.zeros((L, e, d), jnp.float32)
+    else:
+        nu0 = jnp.asarray(nu0, jnp.float32).reshape(L, e, d)
     nu, n_iter, _ = jax.lax.while_loop(
         cond, body, (nu0, jnp.array(0, jnp.int32), jnp.array(jnp.inf)))
-    return u_of(nu), n_iter
+    return u_of(nu), nu, n_iter
 
 
 def _fusion_components_dense(u, merge_tol):
@@ -181,14 +195,14 @@ def _components(u, merge_tol, edge_set: Optional[Edges]):
 
 
 def _extract(u, lam, n_iter, merge_tol,
-             edge_set: Optional[Edges] = None) -> DeviceConvexResult:
+             edge_set: Optional[Edges] = None, nu=None) -> DeviceConvexResult:
     labels = _components(u, merge_tol, edge_set)
     centers, counts = _root_indexed_centers(u, labels)
     return DeviceConvexResult(
         labels=labels, centers=centers, u=u,
         n_clusters=jnp.sum(counts > 0).astype(jnp.int32),
         n_iter=jnp.asarray(n_iter, jnp.int32),
-        lam=jnp.asarray(lam, jnp.float32))
+        lam=jnp.asarray(lam, jnp.float32), nu=nu)
 
 
 def _min_pairwise_dist(a):
@@ -213,7 +227,8 @@ def _nearest_dist(a, edge_set: Edges):
 def device_convex_cluster(key, points, *, lam=None, iters: int = 400,
                           tol: float = 1e-7, weights=None,
                           merge_tol=None, edges: str = "complete",
-                          knn_k: int = 8) -> DeviceConvexResult:
+                          knn_k: int = 8,
+                          warm_nu=None) -> DeviceConvexResult:
     """Fixed-lambda sum-of-norms clustering, fully on device.
 
     ``lam=None`` reproduces the host default (the upper recovery bound
@@ -222,8 +237,11 @@ def device_convex_cluster(key, points, *, lam=None, iters: int = 400,
     graph (``"complete"`` | ``"knn"``; ``knn_k`` neighbours for the
     latter).  ``weights`` overrides the edge set's per-slot weights
     (complete-graph (E,) order — only meaningful with the complete
-    edge set).  ``key`` is unused (the solver is deterministic) but
-    kept for the ``device_call`` protocol signature.
+    edge set).  ``warm_nu`` ((E, d), a previous result's ``.nu`` on an
+    identically-shaped edge set) warm-starts the AMA dual — the
+    session's incremental re-finalize path.  ``key`` is unused (the
+    solver is deterministic) but kept for the ``device_call`` protocol
+    signature.
     """
     del key
     a = jnp.asarray(points, jnp.float32)
@@ -242,10 +260,11 @@ def device_convex_cluster(key, points, *, lam=None, iters: int = 400,
     if lam is None:
         lam = _nearest_dist(a, edge_set) / (2.0 * (m - 1))
     lam = jnp.asarray(lam, jnp.float32)
-    u, n_iter = _ama_fixed_point(a, lam[None], edge_set, iters=iters,
-                                 tol=tol)
+    nu0 = None if warm_nu is None else jnp.asarray(warm_nu, jnp.float32)[None]
+    u, nu, n_iter = _ama_fixed_point(a, lam[None], edge_set, iters=iters,
+                                     tol=tol, nu0=nu0)
     sparse = None if edges == "complete" else edge_set
-    return _extract(u[0], lam, n_iter, merge_tol, sparse)
+    return _extract(u[0], lam, n_iter, merge_tol, sparse, nu=nu[0])
 
 
 @functools.partial(jax.jit,
@@ -283,7 +302,7 @@ def device_clusterpath(key, points, *, n_lambdas: int = 10,
     lam_hi = jnp.maximum(
         2.0 * jnp.max(jnp.linalg.norm(centred, axis=1)) / m, lam_lo * 10.0)
     lams = jnp.linspace(lam_lo, lam_hi, n_lambdas).astype(jnp.float32)
-    u, n_iter = _ama_fixed_point(a, lams, edge_set, iters=iters, tol=tol)
+    u, _, n_iter = _ama_fixed_point(a, lams, edge_set, iters=iters, tol=tol)
     sparse = None if edges == "complete" else edge_set
 
     def extract_one(u_l):

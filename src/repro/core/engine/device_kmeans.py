@@ -52,12 +52,16 @@ class DeviceKMeansResult(NamedTuple):
     #                         surfaces as meta["restart_spread"]
 
 
-def _init_centers(key, points, k: int, init: str):
+def _init_centers(key, points, k: int, init: str, init_centers=None):
     # local import: clustering.api registers the adapter for this loop,
     # so a module-level import here would be circular
     from repro.core.clustering.kmeans import kmeans_plus_plus_init, spectral_init
 
     m, _ = points.shape
+    if init == "warm":
+        if init_centers is None:
+            raise ValueError("init='warm' requires init_centers")
+        return jnp.asarray(init_centers, jnp.float32)
     if init == "kmeans++":
         return kmeans_plus_plus_init(key, points, k)
     if init == "spectral":
@@ -70,7 +74,7 @@ def _init_centers(key, points, k: int, init: str):
 
 def _lloyd(key, points, k: int, iters: int, init: str, tol: float,
            batch_m: Optional[int],
-           aggregator=None) -> DeviceKMeansResult:
+           aggregator=None, init_centers=None) -> DeviceKMeansResult:
     """One Lloyd run.  ``batch_m=None`` is the full (PR-2 bit-exact)
     path; otherwise each iteration updates from a fresh without-
     replacement sample of ``batch_m`` rows.  ``aggregator`` (a registry
@@ -79,7 +83,7 @@ def _lloyd(key, points, k: int, iters: int, init: str, tol: float,
     sign-flip Byzantine sketch rows then stop dragging the centers,
     which is what keeps the recovered partition honest under attack."""
     m, d = points.shape
-    centers = _init_centers(key, points, k, init)
+    centers = _init_centers(key, points, k, init, init_centers)
     # the init consumes ``key`` exactly as the full path always did;
     # minibatch sampling draws from a fold so full-Lloyd stays bit-exact
     iter_keys = jax.random.split(jax.random.fold_in(key, 0x6d62), iters)
@@ -143,7 +147,8 @@ def device_kmeans(key, points, k: int, iters: int = 50,
                   init: str = "kmeans++", tol: float = 1e-8,
                   restarts: int = 1,
                   batch_m: Optional[int] = None,
-                  aggregator=None) -> DeviceKMeansResult:
+                  aggregator=None,
+                  init_centers=None) -> DeviceKMeansResult:
     """Lloyd's algorithm with the fused assign+accumulate kernel.
 
     With ``restarts=1`` and full batches this mirrors
@@ -157,17 +162,25 @@ def device_kmeans(key, points, k: int, iters: int = 50,
     ``Aggregator``, e.g. ``make_aggregator("trimmed_mean", beta=0.2)``)
     swaps the center update for a robust per-cluster reduction; ``None``
     keeps the fused-kernel mean path bit-exact with the host oracle.
+
+    ``init="warm"`` starts Lloyd from the caller's ``init_centers``
+    ((k, d), e.g. the previous round's centers) instead of seeding —
+    the session's drift-triggered incremental re-finalize: near a fixed
+    point the loop early-freezes in one or two iterations and the
+    kmeans++ D^2 seeding pass (the dominant cost at large C) is skipped
+    entirely.
     """
     points = points.astype(jnp.float32)
     m, d = points.shape
     if batch_m is not None and batch_m >= m:
         batch_m = None                      # full Lloyd, bit-exact
-    if init == "spectral" and batch_m is None:
-        restarts = 1    # spectral seeding ignores the key: every restart
-        #                 would be the identical run, pure wasted compute
+    if init in ("spectral", "warm") and batch_m is None:
+        restarts = 1    # spectral seeding / a warm start ignore the key:
+        #                 every restart would be the identical run
     run = functools.partial(_lloyd, points=points, k=k, iters=iters,
                             init=init, tol=tol, batch_m=batch_m,
-                            aggregator=aggregator)
+                            aggregator=aggregator,
+                            init_centers=init_centers)
     if restarts <= 1:
         return run(key)
     keys = jnp.concatenate([key[None], jax.random.split(key, restarts - 1)])

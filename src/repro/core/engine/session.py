@@ -1,5 +1,5 @@
 """AggregationSession — the server side of Algorithm 1 as a long-lived,
-streaming service.
+streaming, *mutable* service.
 
 The paper's server is not a function call: clients upload sketches over
 time, the server clusters once enough arrived, and later traffic is
@@ -12,28 +12,49 @@ this module is the stateful redesign:
   * ``ingest(wave)`` / ``ingest(sketches=...)`` — step-1 uploads, wave
     by wave.  Parameter waves are sketched on device (the same vmapped
     JL projection as the fused round) and written into a fixed-capacity
-    (capacity, sketch_dim) device buffer by ``dynamic_update_slice``;
-    nothing federation-sized ever crosses to host, and the wave size is
-    the caller's memory knob (``launch/simulate.py`` feeds its ERM
-    waves straight in).  Sketch-only waves support servers that never
-    see raw parameters (the paper's actual communication model).
-  * ``finalize(algorithm=..., engine=...)`` — steps 2-4: the registered
-    clustering + per-cluster parameter mean over everything ingested.
-    The device path traces the exact ``_cluster_and_average`` body of
-    the fused round (``engine/aggregate.py``), so a session fed any
-    wave partition of a federation is **bit-exact** with
+    (capacity, sketch_dim) device buffer; nothing federation-sized ever
+    crosses to host.  With ``client_ids=`` the wave is KEYED: a
+    host-side slot table maps stable client ids to buffer rows, so a
+    returning client's row is replaced in place (sketch and params
+    buffers both) instead of appended — ``count`` means live clients,
+    not uploads.  Contiguous writes keep the ``dynamic_update_slice``
+    fast path; keyed replacements and free-list reuse go through a
+    row-scatter program.
+  * staleness — the session advances a logical clock per wave and
+    stamps every written row; a pluggable policy
+    (``engine/staleness.py``: ``none`` | ``max_age`` sliding window |
+    ``exp_decay`` weighting) evicts aged rows back onto a free list
+    (masked out of every later finalize) or fades their weight in the
+    per-cluster parameter mean.
+  * ``finalize(algorithm=..., engine=...)`` — steps 2-4 over the LIVE
+    rows: the registered clustering + per-cluster parameter mean.  The
+    device path traces the exact ``_cluster_and_average`` body of the
+    fused round (``engine/aggregate.py``), so a session fed any wave
+    partition of a federation is **bit-exact** with
     ``one_shot_aggregate(engine="device")`` on the same clients — the
-    property tests in ``tests/test_session.py`` pin this down.
+    property tests in ``tests/test_session.py`` pin this, re-uploads
+    and evictions included.
+  * ``maybe_refinalize(threshold=...)`` — the drift gauge (routed
+    traffic's inertia over the finalized clustering's own) triggers an
+    INCREMENTAL re-finalize: device Lloyd warm-starts from the previous
+    round's centers (``init="warm"``), the convex family warm-starts
+    its AMA dual — measured as ``session.refinalize.*`` spans vs the
+    cold ``session.finalize.*`` ones.
   * ``route(sketch | params)`` — serving: nearest recovered cluster in
-    sketch space through the fused ``kernels/kmeans_assign`` dispatch;
-    ``cluster_model(cid)`` hands back that cluster's averaged model
-    (what ``launch/serve.py --route-by-sketch`` serves).
+    sketch space through ONE fused program per request batch (label
+    assignment + drift accumulation, one host sync per batch);
+    ``cluster_model(cid)`` hands back that cluster's averaged model.
+    Serving keeps working from the last finalized clustering while the
+    buffers mutate underneath — that staleness is exactly what the
+    drift gauge measures and ``maybe_refinalize`` repairs.
 
 The session is deliberately dumb about *which* clustering runs: it
 resolves ``algorithm`` through the admissible registry exactly like
-``one_shot_aggregate`` (device twins upgrade host names), so every
-registered family — including ``convex-device`` with the sparse
-``edges="knn"`` fusion graph — streams the same way.
+``one_shot_aggregate`` (device twins upgrade host names under
+``engine='auto'|'device'``; explicit device names downgrade to their
+host base under ``engine='host'``), so every registered family —
+including ``convex-device`` with the sparse ``edges="knn"`` fusion
+graph — streams the same way.
 """
 from __future__ import annotations
 
@@ -51,10 +72,15 @@ from repro.core.clustering.api import (
     is_device_algorithm,
     meta_to_host,
     resolve_device_request,
+    resolve_host_request,
 )
 from repro.core.engine.aggregate import (
     _cluster_program,
+    _gather_rows_program,
     _mean_program,
+    _route_program,
+    _warm_cluster_program,
+    _weighted_mean_program,
     cached_program,
     compact_labels,
     materialize_round,
@@ -63,9 +89,9 @@ from repro.core.engine.aggregators import (
     cluster_aggregate_tree,
     get_aggregator,
 )
+from repro.core.engine.staleness import make_staleness_policy
 from repro.core.federated import FederatedState
 from repro.core.sketch import sketch_tree
-from repro.kernels import ops as kops
 from repro.optim import adamw_init
 
 
@@ -76,12 +102,21 @@ def _sum_sq_to_assigned(pts, centers, labels):
     return jnp.sum((pts - centers[labels]) ** 2)
 
 
+@jax.jit
+def _mean_row_scale(pts):
+    """Mean squared deviation of the rows from their centroid — the
+    absolute scale the drift gauge falls back to when the finalized
+    inertia itself is degenerate (~0)."""
+    centred = pts - jnp.mean(pts, axis=0, keepdims=True)
+    return jnp.mean(jnp.sum(centred * centred, axis=1))
+
+
 class AggregationSession:
-    """Streaming server-side aggregation over a fixed client capacity.
+    """Streaming, mutable server-side aggregation over a fixed capacity.
 
     Args:
-      capacity: maximum number of clients this session can ingest (the
-        sketch buffer is allocated once at this size).
+      capacity: maximum number of live clients (the sketch buffer is
+        allocated once at this size; evicted slots are reused).
       sketch_dim: JL sketch width (step-1 upload size per client).
       cfg: optional ``ModelConfig`` — only consulted for the MoE
         router-invariant sketch filter, exactly as in
@@ -91,14 +126,16 @@ class AggregationSession:
       sketch_transform: optional traceable ``(sk, offset) -> sk`` hook
         applied to every wave's (w, sketch_dim) rows INSIDE the jitted
         ingest — the scenario subsystem's sketch-channel hooks (DP
-        Gaussian release, colluding spoof) run here, so the transformed
-        rows are the only sketches that ever exist, on device or off.
+        Gaussian release, colluding spoof) run here.  ``offset`` is the
+        wave's first target row.
+      staleness: a policy instance from ``engine/staleness.py`` or a
+        spec string (``"none"`` | ``"max_age=3"`` | ``"exp_decay=2.0"``).
       mesh / client_axis: shard the client axis of the buffers.
     """
 
     def __init__(self, capacity: int, *, sketch_dim: int = 256, cfg=None,
                  seed: int = 0, cluster_seed: Optional[int] = None,
-                 sketch_transform=None,
+                 sketch_transform=None, staleness="none",
                  mesh=None, client_axis: str = "data"):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -108,6 +145,7 @@ class AggregationSession:
         self.cluster_seed = self.seed if cluster_seed is None else int(
             cluster_seed)
         self.mesh, self.client_axis = mesh, client_axis
+        self.staleness = make_staleness_policy(staleness)
         from repro.core.federated import _router_invariant_filter
         self._leaf_filter = (_router_invariant_filter
                              if cfg is not None
@@ -116,29 +154,58 @@ class AggregationSession:
         self._sketches = self._constrain(
             jnp.zeros((self.capacity, self.sketch_dim), jnp.float32))
         self._params = None            # stacked buffer, lazily allocated
-        self._count = 0
         self._mode: Optional[str] = None    # 'params' | 'sketches'
-        self._final = None             # (state, labels, info) of finalize
+        # ---- slot table: host-side row bookkeeping -------------------
+        self._slots: dict = {}         # client id -> buffer row
+        self._row_ids: dict = {}       # buffer row -> client id (keyed only)
+        self._live = np.zeros(self.capacity, bool)
+        self._stamps = np.zeros(self.capacity, np.int64)
+        self._free: list = []          # evicted rows, ready for reuse
+        self._high = 0                 # high-water mark of ever-written rows
+        self._count = 0                # LIVE clients (not uploads)
+        self._clock = 0                # logical time, +1 per ingested wave
+        # ---- finalize / serving state --------------------------------
+        self._final = None             # round of the CURRENT buffer contents
+        self._serving = None           # last finalized round (stale-ok serving)
+        self._finalize_kwargs = None   # replayed by refinalize()
+        self._n_clusters = 0
         self._route_centers = None     # (K', sketch_dim) active centers
         self._first_idx = None         # (K',) one member index per cluster
+        # warm-start cache for the incremental re-finalize
+        self._warm_algo_name = None
+        self._warm_state = None
+        self._warm_count = 0
         # drift bookkeeping: per-row inertia of the finalized clustering
         # vs the running per-row inertia of everything routed since —
-        # the gauge the incremental-re-finalize policy will trigger on
+        # the gauge maybe_refinalize() triggers on
         self._finalized_d2 = None      # mean row d^2 at finalize time
+        self._finalized_scale = None   # mean row scale (degenerate fallback)
         self._routed_d2_sum = 0.0      # accumulated routed row d^2
         self._routed_n = 0
 
-        def _ingest(sk_buf, p_buf, wave, offset):
+        def _sketch_wave(wave, offset):
             sk = jax.vmap(
                 lambda p: sketch_tree(self._sketch_key, p, self.sketch_dim,
                                       leaf_filter=self._leaf_filter))(wave)
             if sketch_transform is not None:
                 sk = sketch_transform(sk, offset)
+            return sk
+
+        def _ingest(sk_buf, p_buf, wave, offset):
+            sk = _sketch_wave(wave, offset)
             sk_buf = self._constrain(
                 jax.lax.dynamic_update_slice_in_dim(sk_buf, sk, offset, 0))
             p_buf = jax.tree_util.tree_map(
                 lambda b, w: self._constrain(
                     jax.lax.dynamic_update_slice_in_dim(b, w, offset, 0)),
+                p_buf, wave)
+            return sk_buf, p_buf
+
+        def _ingest_scatter(sk_buf, p_buf, wave, rows):
+            sk = _sketch_wave(wave, rows[0])
+            sk_buf = self._constrain(sk_buf.at[rows].set(sk))
+            p_buf = jax.tree_util.tree_map(
+                lambda b, w: self._constrain(b.at[rows].set(w)),
                 p_buf, wave)
             return sk_buf, p_buf
 
@@ -148,14 +215,23 @@ class AggregationSession:
             return self._constrain(
                 jax.lax.dynamic_update_slice_in_dim(sk_buf, sk, offset, 0))
 
+        def _ingest_sk_scatter(sk_buf, sk, rows):
+            if sketch_transform is not None:
+                sk = sketch_transform(sk, rows[0])
+            return self._constrain(sk_buf.at[rows].set(sk))
+
         # donate the capacity-sized buffers so XLA updates them in place
         # (a fresh full-size copy per wave would defeat the streaming
         # design); the CPU backend can't donate and would warn per wave
         donate = jax.default_backend() != "cpu"
         self._ingest_fn = jax.jit(_ingest,
                                   donate_argnums=(0, 1) if donate else ())
+        self._ingest_scatter_fn = jax.jit(
+            _ingest_scatter, donate_argnums=(0, 1) if donate else ())
         self._ingest_sk_fn = jax.jit(_ingest_sk,
                                      donate_argnums=(0,) if donate else ())
+        self._ingest_sk_scatter_fn = jax.jit(
+            _ingest_sk_scatter, donate_argnums=(0,) if donate else ())
         self._sketch_one = jax.jit(
             lambda p: sketch_tree(self._sketch_key, p, self.sketch_dim,
                                   leaf_filter=self._leaf_filter))
@@ -170,39 +246,142 @@ class AggregationSession:
 
     @property
     def count(self) -> int:
-        """Clients ingested so far."""
+        """Live clients currently held (re-uploads replace, evictions
+        subtract — not a lifetime upload counter)."""
         return self._count
 
     @property
-    def sketches(self) -> jnp.ndarray:
-        """Device-resident (count, sketch_dim) view of the accumulated
-        sketch matrix (no host copy)."""
-        return self._sketches[:self._count]
+    def clients(self) -> dict:
+        """Copy of the live slot table: client id -> buffer row (keyed
+        ingests only; anonymous waves don't appear)."""
+        return dict(self._slots)
 
-    def _reserve(self, w: int) -> int:
+    def _live_rows(self) -> np.ndarray:
+        """Sorted buffer rows currently holding live clients."""
+        return np.flatnonzero(self._live[:self._high])
+
+    @property
+    def sketches(self) -> jnp.ndarray:
+        """Device-resident (count, sketch_dim) view of the live sketch
+        rows (a slice while the live set is contiguous, a gather after
+        evictions punch holes)."""
+        rows = self._live_rows()
+        if rows.size == self._high:
+            return self._sketches[:self._high]
+        return self._sketches[jnp.asarray(rows, jnp.int32)]
+
+    def _validate_params_wave(self, wave, leaves):
+        """Structure/shape validation BEFORE any bookkeeping mutates —
+        a rejected wave must leave count, buffers, and the finalized
+        round exactly as they were."""
+        w = int(leaves[0].shape[0])
         if w < 1:
             raise ValueError("empty wave")
-        if self._count + w > self.capacity:
-            raise ValueError(
-                f"session capacity exceeded: {self._count} ingested + wave "
-                f"of {w} > capacity {self.capacity}")
-        offset, self._count = self._count, self._count + w
-        self._final = None             # new uploads invalidate the round
-        return offset
+        if any(l.shape[0] != w for l in leaves):
+            raise ValueError("parameter wave leaves disagree on the "
+                             "leading (client) axis")
+        if self._params is not None:
+            buf_def = jax.tree_util.tree_structure(self._params)
+            wave_def = jax.tree_util.tree_structure(wave)
+            if buf_def != wave_def:
+                raise ValueError(
+                    f"wave tree structure {wave_def} does not match the "
+                    f"session's first wave {buf_def}")
+            for b, l in zip(jax.tree_util.tree_leaves(self._params), leaves):
+                if tuple(l.shape[1:]) != tuple(b.shape[1:]):
+                    raise ValueError(
+                        f"wave leaf shape {tuple(l.shape[1:])} does not "
+                        f"match the session's {tuple(b.shape[1:])}")
+        return w
 
-    def ingest(self, wave=None, *, sketches=None) -> int:
-        """Ingest one wave of step-1 uploads; returns the wave's offset.
+    def _alloc_rows(self, w: int, client_ids) -> tuple[np.ndarray, int]:
+        """Map a wave onto buffer rows (no mutation on failure).
+
+        Returning client ids keep their row (in-place replace); new ids
+        (and anonymous waves) take evicted rows from the free list
+        first, then extend the high-water mark.  Returns ``(rows,
+        n_new)``; raises on duplicate ids or capacity exhaustion."""
+        if client_ids is not None:
+            ids = list(client_ids)
+            if len(ids) != w:
+                raise ValueError(f"client_ids has {len(ids)} entries for a "
+                                 f"wave of {w}")
+            if len(set(ids)) != len(ids):
+                raise ValueError("duplicate client ids within one wave")
+        else:
+            ids = [None] * w
+        rows = np.empty(w, np.int64)
+        new_at = []
+        for i, cid in enumerate(ids):
+            row = self._slots.get(cid) if cid is not None else None
+            if row is None:
+                new_at.append(i)
+            else:
+                rows[i] = row
+        n_new = len(new_at)
+        headroom = len(self._free) + (self.capacity - self._high)
+        if n_new > headroom:
+            raise ValueError(
+                f"session capacity exceeded: {self._count} live + "
+                f"{n_new} new clients > capacity {self.capacity}")
+        free = list(self._free)
+        high = self._high
+        for i in new_at:
+            if free:
+                rows[i] = free.pop()
+            else:
+                rows[i] = high
+                high += 1
+        return rows, n_new
+
+    def _commit_rows(self, rows: np.ndarray, client_ids) -> None:
+        """Post-write bookkeeping: slot table, free list, stamps, clock."""
+        ids = list(client_ids) if client_ids is not None else [None] * len(rows)
+        self._clock += 1
+        for row, cid in zip(rows, ids):
+            row = int(row)
+            if not self._live[row]:
+                self._count += 1
+            self._live[row] = True
+            if row in self._free:
+                self._free.remove(row)
+            if cid is not None:
+                self._slots[cid] = row
+                self._row_ids[row] = cid
+        self._high = max(self._high, int(rows.max()) + 1)
+        self._stamps[rows] = self._clock
+        self._final = None             # buffer contents left the round
+        self.evict_stale()
+        self._gauge_slots()
+
+    def _gauge_slots(self) -> None:
+        obs.gauge("session.slots.live", float(self._count))
+        obs.gauge("session.slots.free", float(self.capacity - self._count))
+
+    @staticmethod
+    def _contiguous(rows: np.ndarray) -> bool:
+        return bool(np.array_equal(
+            rows, np.arange(rows[0], rows[0] + len(rows))))
+
+    def ingest(self, wave=None, *, sketches=None, client_ids=None):
+        """Ingest one wave of step-1 uploads.
 
         ``wave`` is a stacked parameter pytree (every leaf has leading
         axis w) or a ``FederatedState``; ``sketches=`` takes an already
         projected (w, sketch_dim) matrix instead (sketch-only servers).
         Modes cannot be mixed within one session: parameter averaging in
         ``finalize`` needs every client's parameters.
+
+        ``client_ids=`` (length-w sequence of stable hashable ids) keys
+        the wave: a returning id's buffer row is replaced in place, a
+        new id takes a free (possibly previously evicted) row.  Returns
+        the (w,) row assignment for keyed waves, the wave's offset for
+        anonymous ones.
         """
         if (wave is None) == (sketches is None):
             raise ValueError("pass exactly one of wave= or sketches=")
         if sketches is not None:
-            return self._ingest_sketches(sketches)
+            return self._ingest_sketches(sketches, client_ids)
         if isinstance(wave, FederatedState):
             wave = wave.params
         if self._mode == "sketches":
@@ -211,8 +390,8 @@ class AggregationSession:
         leaves = jax.tree_util.tree_leaves(wave)
         if not leaves:
             raise ValueError("empty parameter wave")
-        w = int(leaves[0].shape[0])
-        offset = self._reserve(w)
+        w = self._validate_params_wave(wave, leaves)
+        rows, _ = self._alloc_rows(w, client_ids)
         self._mode = "params"      # only after validation: a rejected
         #                            wave must not lock the mode in
         if self._params is None:
@@ -222,18 +401,25 @@ class AggregationSession:
                 lambda l: self._constrain(
                     jnp.zeros((self.capacity,) + l.shape[1:], l.dtype)),
                 wave)
+        offset = int(rows[0])
         with obs.span("session.ingest", wave=w, offset=offset,
                       mode="params"):
-            self._sketches, self._params = self._ingest_fn(
-                self._sketches, self._params, wave,
-                jnp.asarray(offset, jnp.int32))
+            if self._contiguous(rows):
+                self._sketches, self._params = self._ingest_fn(
+                    self._sketches, self._params, wave,
+                    jnp.asarray(offset, jnp.int32))
+            else:
+                self._sketches, self._params = self._ingest_scatter_fn(
+                    self._sketches, self._params, wave,
+                    jnp.asarray(rows, jnp.int32))
             jax.block_until_ready(self._sketches)
         obs.count("session.ingest.clients", w)
         obs.count("session.ingest.bytes",
                   sum(l.size * l.dtype.itemsize for l in leaves))
-        return offset
+        self._commit_rows(rows, client_ids)
+        return rows if client_ids is not None else offset
 
-    def _ingest_sketches(self, sketches) -> int:
+    def _ingest_sketches(self, sketches, client_ids=None):
         if self._mode == "params":
             raise ValueError("session already holds parameter waves; "
                              "cannot mix in sketch-only waves")
@@ -242,25 +428,71 @@ class AggregationSession:
             raise ValueError(f"sketch wave must be (w, {self.sketch_dim}), "
                              f"got {sketches.shape}")
         w = int(sketches.shape[0])
-        offset = self._reserve(w)
+        if w < 1:
+            raise ValueError("empty wave")
+        rows, _ = self._alloc_rows(w, client_ids)
         self._mode = "sketches"    # only after validation, as above
+        offset = int(rows[0])
         with obs.span("session.ingest", wave=w, offset=offset,
                       mode="sketches"):
-            self._sketches = self._ingest_sk_fn(
-                self._sketches, sketches, jnp.asarray(offset, jnp.int32))
+            if self._contiguous(rows):
+                self._sketches = self._ingest_sk_fn(
+                    self._sketches, sketches, jnp.asarray(offset, jnp.int32))
+            else:
+                self._sketches = self._ingest_sk_scatter_fn(
+                    self._sketches, sketches, jnp.asarray(rows, jnp.int32))
             jax.block_until_ready(self._sketches)
         obs.count("session.ingest.clients", w)
         obs.count("session.ingest.bytes",
                   sketches.size * sketches.dtype.itemsize)
-        return offset
+        self._commit_rows(rows, client_ids)
+        return rows if client_ids is not None else offset
+
+    # --------------------------------------------------------- staleness
+
+    def evict_stale(self) -> list:
+        """Apply the staleness policy's eviction mask to the live rows.
+
+        Evicted rows return to the free list and are masked out of
+        every later finalize; returns the evicted client ids (``None``
+        placeholders for anonymous rows).  Runs automatically after
+        every ingest and before every finalize."""
+        rows = self._live_rows()
+        if rows.size == 0:
+            return []
+        ages = self._clock - self._stamps[rows]
+        mask = np.asarray(self.staleness.evict(ages), bool)
+        evicted = rows[mask]
+        if evicted.size == 0:
+            return []
+        out = []
+        for row in evicted:
+            row = int(row)
+            cid = self._row_ids.pop(row, None)
+            if cid is not None:
+                del self._slots[cid]
+            self._live[row] = False
+            self._free.append(row)
+            out.append(cid)
+        self._count -= len(out)
+        self._final = None
+        obs.count("session.evictions", len(out))
+        self._gauge_slots()
+        return out
+
+    def _live_weights(self, rows: np.ndarray):
+        """Per-row staleness weights in live-row (gathered) order, or
+        ``None`` for unweighted policies."""
+        ages = self._clock - self._stamps[rows]
+        return self.staleness.weights(ages)
 
     # ---------------------------------------------------------- finalize
 
     def finalize(self, *, algorithm="kmeans-device", k: Optional[int] = None,
                  algo_options: Optional[dict] = None,
                  engine: str = "device", aggregator="mean"):
-        """Steps 2-4 over everything ingested: cluster the accumulated
-        sketch matrix, average parameters per recovered cluster.
+        """Steps 2-4 over the live rows: cluster the accumulated sketch
+        matrix, average parameters per recovered cluster.
 
         Returns ``(new_state, labels, info)`` with the same contract as
         ``one_shot_aggregate`` (``new_state is None`` for sketch-only
@@ -269,14 +501,53 @@ class AggregationSession:
         bit-exact with the fused round on the same clients.
         ``aggregator`` selects the per-cluster parameter reduction from
         the registry (``mean`` | ``trimmed_mean`` | ``median`` | an
-        ``Aggregator`` instance) on both engines.
+        ``Aggregator`` instance) on both engines.  The call's arguments
+        are remembered: ``refinalize()`` / ``maybe_refinalize()`` replay
+        them warm-started.
         """
+        kwargs = dict(algorithm=algorithm, k=k, algo_options=algo_options,
+                      engine=engine, aggregator=aggregator)
+        out = self._run_finalize(warm=False, **kwargs)
+        self._finalize_kwargs = kwargs
+        return out
+
+    def refinalize(self):
+        """Re-run the last ``finalize`` configuration over the current
+        live rows, warm-starting the clustering from the previous
+        round's state when the family supports it (Lloyd restarts from
+        the old centers, AMA from its old dual; cold fallback
+        otherwise).  Requires a prior ``finalize()``."""
+        if self._finalize_kwargs is None:
+            raise ValueError("refinalize() needs a prior finalize()")
+        return self._run_finalize(warm=True, **self._finalize_kwargs)
+
+    def maybe_refinalize(self, threshold: float = 1.5):
+        """Drift-triggered incremental re-finalize: when the ``drift``
+        gauge (routed-traffic inertia over finalized inertia) exceeds
+        ``threshold``, replay the last finalize warm-started and
+        re-anchor the gauge.  Returns the new round, or ``None`` when
+        drift is below threshold (or unmeasured)."""
+        d = self.drift
+        if d is None or d <= threshold:
+            return None
+        obs.count("session.refinalize.triggered")
+        return self.refinalize()
+
+    def _run_finalize(self, *, algorithm, k, algo_options, engine,
+                      aggregator, warm: bool):
         if engine not in ("auto", "host", "device"):
             raise ValueError(f"engine must be auto|host|device, got "
                              f"{engine!r}")
+        self.evict_stale()
         if self._count == 0:
             raise ValueError("nothing ingested")
-        if engine != "host":
+        if engine == "host":
+            # explicit device names downgrade to their host base (or
+            # raise for twin-less device-only families) instead of
+            # silently running the device loop under engine='host'
+            algorithm, algo_options = resolve_host_request(
+                algorithm, algo_options)
+        else:
             # the legacy Lloyd-name mapping (kmeans++ -> kmeans-device
             # with init='kmeans++'), shared with ODCLFederated; raises
             # for host-only no-twin names under engine='device'
@@ -288,64 +559,125 @@ class AggregationSession:
         if use_device:
             algo = dev
         k_eff = k if algo.requires_k else None
-        sketches = self.sketches                   # (count, sketch_dim)
-        params = (None if self._params is None else
-                  jax.tree_util.tree_map(lambda l: l[:self._count],
-                                         self._params))
-        with obs.span("session.finalize", count=self._count,
+        rows = self._live_rows()
+        if rows.size == self._high:
+            sketches = self._sketches[:self._high]
+            params = (None if self._params is None else
+                      jax.tree_util.tree_map(lambda l: l[:self._high],
+                                             self._params))
+        else:
+            rows_j = jnp.asarray(rows, jnp.int32)
+            sketches, params = cached_program(_gather_rows_program)(
+                (self._sketches, self._params), rows_j)
+        weights = self._live_weights(rows)
+        span = "session.refinalize" if warm else "session.finalize"
+        with obs.span(span, count=self._count,
                       algorithm=getattr(algo, "name", str(algo)),
                       engine="device" if use_device else "host"):
             if use_device:
                 out = self._finalize_device(algo, k_eff, algo_options,
-                                            sketches, params, aggregator)
+                                            sketches, params, aggregator,
+                                            weights, warm)
             else:
                 out = self._finalize_host(algo, k_eff, algo_options,
-                                          sketches, params, aggregator)
+                                          sketches, params, aggregator,
+                                          weights)
         self._final = out
+        self._serving = out
         return out
 
+    def _warm_usable(self, algo, warm: bool) -> bool:
+        if not warm or self._warm_state is None:
+            return False
+        if getattr(algo, "name", None) != self._warm_algo_name:
+            return False
+        if not callable(getattr(algo, "device_warm_call", None)):
+            return False
+        if (getattr(algo, "warm_requires_same_count", False)
+                and self._count != self._warm_count):
+            obs.count("session.refinalize.cold_fallback")
+            return False
+        return True
+
+    def _cache_warm_state(self, algo, res) -> None:
+        if not callable(getattr(algo, "device_warm_call", None)):
+            return
+        state = algo.warm_state(res)
+        if state is not None:
+            self._warm_algo_name = getattr(algo, "name", None)
+            self._warm_state = state
+            self._warm_count = self._count
+
+    def _average_params(self, res, params, aggregator, weights):
+        """The finalize's parameter-averaging phase: the shared
+        unweighted mean program (bit-exact with the fused round) unless
+        the staleness policy supplies decay weights."""
+        if weights is None:
+            return cached_program(_mean_program, self.mesh,
+                                  self.client_axis,
+                                  get_aggregator(aggregator))(
+                res.labels, res.centers, params)
+        if get_aggregator(aggregator).name != "mean":
+            raise ValueError(
+                "staleness weighting (exp_decay) requires the 'mean' "
+                f"aggregator, got {get_aggregator(aggregator).name!r}")
+        return cached_program(_weighted_mean_program, self.mesh,
+                              self.client_axis)(
+            res.labels, res.centers, params,
+            jnp.asarray(weights, jnp.float32))
+
     def _finalize_device(self, algo, k, algo_options, sketches, params,
-                         aggregator="mean"):
+                         aggregator="mean", weights=None, warm=False):
         cluster_key = jax.random.PRNGKey(self.cluster_seed)
-        aggregator = get_aggregator(aggregator)
         opts = tuple(sorted((algo_options or {}).items()))
         # the cluster and mean phases run as two AOT programs (labels /
         # centers stay on device between them) so the obs layer sees the
-        # finalize latency split — the breakdown an incremental
-        # re-finalize would consult to decide what to re-run
-        res = cached_program(_cluster_program, algo, k, opts)(
-            cluster_key, sketches)
+        # finalize latency split; the warm path swaps only the cluster
+        # program (the mean phase is identical either way)
+        if self._warm_usable(algo, warm):
+            res = cached_program(_warm_cluster_program, algo, k, opts)(
+                cluster_key, sketches, self._warm_state)
+            mode = "warm"
+        else:
+            res = cached_program(_cluster_program, algo, k, opts)(
+                cluster_key, sketches)
+            mode = "cold"
+        self._cache_warm_state(algo, res)
         if params is None:
             labels, uniq, first = compact_labels(res.labels)
             info = {"n_clusters": int(len(uniq)),
                     "meta": meta_to_host(res.meta),
-                    "engine": "device", "count": self._count}
-            self._set_routing(res.centers[jnp.asarray(uniq)], first)
-            self._note_finalized(sketches, res)
+                    "engine": "device", "count": self._count,
+                    "refinalize": mode if warm else None}
+            self._set_routing(res.centers[jnp.asarray(uniq)], first,
+                              int(len(uniq)))
+            self._note_finalized(sketches, res.centers, res.labels)
             return None, labels, info
-        new_params = cached_program(_mean_program, self.mesh,
-                                    self.client_axis, aggregator)(
-            res.labels, res.centers, params)
+        new_params = self._average_params(res, params, aggregator, weights)
         state = FederatedState(params=params, opt_state=None,
                                n_clients=self._count, step=0)
         new_state, labels, info, uniq, first = materialize_round(
             new_params, res, state)
         info["count"] = self._count
-        self._set_routing(res.centers[jnp.asarray(uniq)], first)
-        self._note_finalized(sketches, res)
+        info["refinalize"] = mode if warm else None
+        self._set_routing(res.centers[jnp.asarray(uniq)], first,
+                          int(len(uniq)))
+        self._note_finalized(sketches, res.centers, res.labels)
         return new_state, labels, info
 
-    def _note_finalized(self, sketches, res):
+    def _note_finalized(self, sketches, centers, labels):
         """Anchor the drift gauge: record the finalized clustering's mean
-        per-row inertia and reset the routed-traffic accumulator."""
+        per-row inertia (plus the absolute row scale, the degenerate-
+        inertia fallback) and reset the routed-traffic accumulator."""
         self._finalized_d2 = float(
-            _sum_sq_to_assigned(sketches, res.centers, res.labels)
+            _sum_sq_to_assigned(sketches, centers, jnp.asarray(labels))
         ) / max(self._count, 1)
+        self._finalized_scale = float(_mean_row_scale(sketches))
         self._routed_d2_sum = 0.0
         self._routed_n = 0
 
     def _finalize_host(self, algo, k, algo_options, sketches, params,
-                       aggregator="mean"):
+                       aggregator="mean", weights=None):
         from repro.core.odcl import run_clustering
 
         with obs.span("session.finalize.cluster", engine="host"):
@@ -356,29 +688,37 @@ class AggregationSession:
         info = {"n_clusters": result.n_clusters, "meta": result.meta,
                 "engine": "host", "count": self._count}
         centers = jnp.asarray(result.centers, jnp.float32)
-        self._set_routing(centers, first)
-        self._finalized_d2 = float(_sum_sq_to_assigned(
-            sketches, centers, jnp.asarray(labels))) / max(self._count, 1)
-        self._routed_d2_sum = 0.0
-        self._routed_n = 0
+        self._set_routing(centers, first, result.n_clusters)
+        self._note_finalized(sketches, centers, jnp.asarray(labels))
         if params is None:
             return None, labels, info
         labels_j = jnp.asarray(labels)
         with obs.span("session.finalize.mean", engine="host"):
-            onehot = jax.nn.one_hot(labels_j, result.n_clusters,
-                                    dtype=jnp.float32)
-            counts = jnp.sum(onehot, axis=0)
-            new_params = cluster_aggregate_tree(params, labels_j, onehot,
-                                                counts, aggregator)
+            if weights is not None:
+                if get_aggregator(aggregator).name != "mean":
+                    raise ValueError(
+                        "staleness weighting (exp_decay) requires the "
+                        "'mean' aggregator")
+                new_params = cached_program(
+                    _weighted_mean_program, self.mesh, self.client_axis)(
+                    labels_j, centers, params,
+                    jnp.asarray(weights, jnp.float32))
+            else:
+                onehot = jax.nn.one_hot(labels_j, result.n_clusters,
+                                        dtype=jnp.float32)
+                counts = jnp.sum(onehot, axis=0)
+                new_params = cluster_aggregate_tree(params, labels_j, onehot,
+                                                    counts, aggregator)
             jax.block_until_ready(new_params)
         new_state = FederatedState(
             params=new_params, opt_state=jax.vmap(adamw_init)(new_params),
             n_clients=self._count, step=0)
         return new_state, labels, info
 
-    def _set_routing(self, centers, first_idx):
+    def _set_routing(self, centers, first_idx, n_clusters: int):
         self._route_centers = centers
         self._first_idx = np.asarray(first_idx)
+        self._n_clusters = int(n_clusters)
 
     # ------------------------------------------------------------- serve
 
@@ -388,10 +728,14 @@ class AggregationSession:
 
         Pass either a (sketch_dim,) / (n, sketch_dim) sketch or a raw
         parameter pytree (sketched with the session's own projection).
-        Runs the fused ``kernels/kmeans_assign`` dispatch against the
-        active cluster centers; returns an int (or (n,) int array).
+        The whole batch runs as ONE fused program (nearest-center
+        assignment + the drift accumulator), with a single host sync per
+        batch; returns an int (or (n,) int array).  Serving stays on the
+        LAST finalized clustering even while later ingests/evictions
+        mutate the buffers — ``drift`` measures how stale that is, and
+        ``maybe_refinalize`` repairs it.
         """
-        if self._final is None:
+        if self._serving is None:
             raise ValueError("route() needs finalize() first")
         if (sketch is None) == (params is None):
             raise ValueError("pass exactly one of sketch or params=")
@@ -400,37 +744,59 @@ class AggregationSession:
         sketch = jnp.asarray(sketch, jnp.float32)
         single = sketch.ndim == 1
         pts = sketch[None] if single else sketch
-        with obs.span("session.route", n=int(pts.shape[0])):
-            labels, _, _ = kops.kmeans_assign(pts, self._route_centers)
+        n = int(pts.shape[0])
+        with obs.span("session.route", n=n):
+            labels, batch_d2 = cached_program(_route_program)(
+                pts, self._route_centers)
             out = np.asarray(labels)
-        obs.count("session.route.requests", int(pts.shape[0]))
+            batch_d2 = float(batch_d2)
+        obs.count("session.route.requests", n)
         # drift gauge: routed traffic's mean d^2 to its assigned center,
         # relative to the finalized clustering's own mean d^2 — the
-        # trigger signal for the roadmap's incremental re-finalize
-        self._routed_d2_sum += float(_sum_sq_to_assigned(
-            pts, self._route_centers, labels))
-        self._routed_n += int(pts.shape[0])
+        # trigger signal of maybe_refinalize(); accumulated on device
+        # inside the route program, synced once per batch
+        self._routed_d2_sum += batch_d2
+        self._routed_n += n
         d = self.drift
         if d is not None:
             obs.gauge("session.drift", d)
         return int(out[0]) if single else out
 
+    def sketch_params(self, wave):
+        """Sketch a stacked parameter wave (leading axis = clients) with
+        the session's own JL projection, WITHOUT ingesting — the input
+        shape batched ``route()`` consumes for request batches."""
+        return jax.vmap(self._sketch_one)(wave)
+
     def cluster_model(self, cluster_id: int):
         """The averaged model of one recovered cluster (a single-model
         pytree, no leading client axis) — what a routed client is served.
         """
-        if self._final is None:
+        if self._serving is None:
             raise ValueError("cluster_model() needs finalize() first")
-        state = self._final[0]
+        state = self._serving[0]
         if state is None:
             raise ValueError("sketch-only session holds no parameters")
-        idx = int(self._first_idx[int(cluster_id)])
+        cid = int(cluster_id)
+        if not 0 <= cid < self._n_clusters:
+            # a negative id would silently wrap to another cluster's row
+            raise IndexError(
+                f"cluster id {cid} out of range for {self._n_clusters} "
+                "recovered clusters")
+        idx = int(self._first_idx[cid])
         return jax.tree_util.tree_map(lambda l: l[idx], state.params)
+
+    @property
+    def n_clusters(self) -> int:
+        """Recovered cluster count of the clustering currently served."""
+        if self._serving is None:
+            raise ValueError("finalize() first")
+        return self._n_clusters
 
     @property
     def route_centers(self) -> jnp.ndarray:
         """(K', sketch_dim) active cluster centers (device-resident)."""
-        if self._final is None:
+        if self._serving is None:
             raise ValueError("finalize() first")
         return self._route_centers
 
@@ -441,24 +807,35 @@ class AggregationSession:
 
         ~1.0 means serving traffic looks like the federation that was
         clustered; growth means the recovered centers are going stale —
-        the signal a future incremental re-finalize would trigger on.
-        ``None`` until at least one finalize and one route happened.
+        the signal ``maybe_refinalize`` triggers on.  A degenerate
+        finalize (zero inertia: duplicate/tight sketches, k == count)
+        falls back to the absolute sketch-row scale as denominator so
+        the gauge cannot explode to ~1e12 and mis-trigger.  ``None``
+        until at least one finalize and one route happened.
         """
         if self._finalized_d2 is None or self._routed_n == 0:
             return None
-        return (self._routed_d2_sum / self._routed_n) / max(
-            self._finalized_d2, 1e-12)
+        routed = self._routed_d2_sum / self._routed_n
+        scale = self._finalized_scale or 0.0
+        if self._finalized_d2 > 1e-9 * max(scale, 1e-30):
+            return routed / self._finalized_d2
+        return routed / max(scale, 1e-12)
 
     # ------------------------------------------------------------- state
 
     def state(self) -> FederatedState:
-        """The ingested federation as a stacked ``FederatedState`` —
-        feeds any registered ``FederatedMethod`` (how ``simulate.py``
-        runs iterative baselines over a streamed-in federation)."""
+        """The live federation as a stacked ``FederatedState`` — feeds
+        any registered ``FederatedMethod`` (how ``simulate.py`` runs
+        iterative baselines over a streamed-in federation)."""
         if self._mode != "params":
             raise ValueError("state() needs parameter waves")
-        params = jax.tree_util.tree_map(lambda l: l[:self._count],
-                                        self._params)
+        rows = self._live_rows()
+        if rows.size == self._high:
+            params = jax.tree_util.tree_map(lambda l: l[:self._high],
+                                            self._params)
+        else:
+            params = jax.tree_util.tree_map(
+                lambda l: l[jnp.asarray(rows, jnp.int32)], self._params)
         return FederatedState(params=params,
                               opt_state=jax.vmap(adamw_init)(params),
                               n_clients=self._count)

@@ -87,6 +87,12 @@ def route_from_checkpoint(stacked, cfg, client: int, *, algorithm: str,
                                        engine="device")
     client_params = jax.tree_util.tree_map(lambda l: l[client], stacked)
     cid = session.route(params=client_params)
+    if not 0 <= cid < session.n_clusters:
+        # belt over cluster_model's own IndexError: a routed id outside
+        # the recovered range means the session state is corrupt, and a
+        # serving driver should say so rather than wrap around
+        raise SystemExit(f"routed cluster id {cid} out of range for "
+                         f"{session.n_clusters} recovered clusters")
     return session.cluster_model(cid), cid, {"labels": labels, **info}
 
 

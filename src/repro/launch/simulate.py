@@ -44,7 +44,7 @@ from repro.core.clustering import (
     lambda_interval,
     list_algorithms,
 )
-from repro.core.engine import list_edge_sets
+from repro.core.engine import list_edge_sets, make_staleness_policy
 from repro.core.engine.aggregators import list_aggregators, make_aggregator
 from repro.core.engine.session import AggregationSession
 from repro.core.erm import batched_ridge_erm, logistic_erm
@@ -103,7 +103,12 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
              aggregator: str = "mean", trim_beta: float = 0.1,
              seed: int = 0, method: str = "odcl", rounds: int = 5,
              trace: str | None = None, route_probes: int = 0,
-             finalize_repeats: int = 1, mesh=None) -> dict:
+             finalize_repeats: int = 1,
+             reupload_frac: float = 0.0, churn: int = 0,
+             max_age: int | None = None,
+             refinalize_threshold: float | None = None,
+             mutation_rounds: int = 3, drift_scale: float = 2.0,
+             mesh=None) -> dict:
     """Generate a K-cluster federation of ``clients`` users, stream the
     wave-solved local ERMs into an ``AggregationSession``, run the
     requested federated method over it (default: the session's own
@@ -139,6 +144,18 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
     through ``session.route`` and warm finalize re-runs — so the
     summary's ``serving`` section gets real route/finalize latency
     histograms without touching the phase timings.
+
+    The mutation knobs drive the drifted-population serving loop, also
+    after the scored run: ``reupload_frac`` re-uploads that fraction of
+    clients per mutation round with local ERMs re-solved against a
+    SHIFTED set of cluster optima (in-place keyed replacement),
+    ``churn`` joins that many fresh clients per round (``max_age``
+    arms the sliding-window staleness policy so silent clients age
+    out), drifted probes push the ``drift`` gauge, and
+    ``refinalize_threshold`` arms ``session.maybe_refinalize`` — the
+    summary's ``serving`` section then reports the drift value, the
+    eviction count, warm re-finalize p50 vs the cold finalize column,
+    and the batched-``route()`` throughput.
     """
     obs.reset()                       # per-run aggregates; sinks survive
     trace_sink = None
@@ -169,7 +186,15 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         (lambda sk, off: scen.sketch_transform(scen_key, sk, off))
         if scen is not None and scen.transforms_sketches else None)
 
-    session = AggregationSession(clients, sketch_dim=sketch_dim, seed=seed,
+    # mutation mode: keyed slots (stable int client ids), headroom for
+    # the churned-in joiners, and the sliding-window staleness policy
+    mutated = (reupload_frac > 0 or churn > 0 or max_age is not None
+               or refinalize_threshold is not None)
+    capacity = clients + (churn * mutation_rounds if mutated else 0)
+    # the staleness window opens at the mutation loop (below), so the
+    # initial federation — streamed in over clients/wave ingest waves —
+    # counts as one snapshot rather than aging itself out
+    session = AggregationSession(capacity, sketch_dim=sketch_dim, seed=seed,
                                  sketch_transform=sketch_hook, mesh=mesh)
     t0 = time.perf_counter()
     t_ingest = 0.0
@@ -184,7 +209,9 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
             theta_w = scen.corrupt_uploads(scen_key, theta_w, lab_w,
                                            start, clients)
         ti = time.perf_counter()
-        session.ingest({"theta": theta_w})     # step-1 upload of the wave
+        ids = range(start, start + w) if mutated else None
+        session.ingest({"theta": theta_w},     # step-1 upload of the wave
+                       client_ids=ids)
         t_ingest += time.perf_counter() - ti
     jax.block_until_ready(session.sketches)
     # disjoint phases: local_erm_s excludes the ingest dispatch measured
@@ -269,7 +296,8 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
     # stays comparable with pre-serving bench rows); the latencies land
     # in the session.route.ms / session.finalize.ms histograms
     serving = None
-    if method == "odcl" and (route_probes > 0 or finalize_repeats > 1):
+    if method == "odcl" and (mutated or route_probes > 0
+                             or finalize_repeats > 1):
         for _ in range(max(0, finalize_repeats - 1)):
             session.finalize(algorithm=algorithm, k=clusters,
                              algo_options=algo_options, engine="device",
@@ -288,9 +316,71 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
             for i in range(route_probes):
                 session.route(params={"theta": theta_p[i]})
             routes_per_s = route_probes / (time.perf_counter() - tr)
-        hists = obs.snapshot()["histograms"]
+
+        # drifted-population mutation loop: keyed re-uploads + churn-in
+        # joiners against SHIFTED optima, then drifted probes to push
+        # the drift gauge, then the drift-triggered warm re-finalize
+        drift_after = None
+        refinalize_fired = None
+        route_batch_ms = None
+        batched_routes_per_s = None
+        if mutated:
+            if max_age is not None:
+                session.staleness = make_staleness_policy(
+                    f"max_age={max_age}")
+            k_mut = jax.random.fold_in(key, 0xd21f7)
+            shifted = optima + drift_scale * jax.random.normal(
+                k_mut, optima.shape, jnp.float32)
+            n_re = int(round(reupload_frac * clients))
+            for r in range(mutation_rounds):
+                if n_re > 0:
+                    sel = (np.arange(n_re) + r * n_re) % clients
+                    lab_m = jnp.asarray(np.asarray(true_labels)[sel])
+                    theta_m = _wave_erm(
+                        jax.random.fold_in(k_mut, 100 + r), shifted, lab_m,
+                        wave=n_re, n=samples, d=dim, task=task)
+                    session.ingest({"theta": theta_m},
+                                   client_ids=[int(i) for i in sel])
+                if churn > 0:
+                    lab_c = jnp.arange(churn, dtype=jnp.int32) % clusters
+                    theta_c = _wave_erm(
+                        jax.random.fold_in(k_mut, 200 + r), shifted, lab_c,
+                        wave=churn, n=samples, d=dim, task=task)
+                    session.ingest(
+                        {"theta": theta_c},
+                        client_ids=[("joiner", r, i) for i in range(churn)])
+            # batched route() over drifted probes: one fused program per
+            # request batch (the per-request loop above is the per-call
+            # latency column; this is the throughput column)
+            n_probe = min(max(route_probes, 256), 4096)
+            lab_p = jnp.arange(n_probe, dtype=jnp.int32) % clusters
+            theta_p2 = _wave_erm(
+                jax.random.fold_in(k_mut, 300), shifted, lab_p,
+                wave=n_probe, n=samples, d=dim, task=task)
+            sk_p = session.sketch_params({"theta": theta_p2})
+            jax.block_until_ready(sk_p)
+            session.route(sk_p)                                # warmup
+            reps = 10
+            tb = time.perf_counter()
+            for _ in range(reps):
+                session.route(sk_p)
+            batch_s = (time.perf_counter() - tb) / reps
+            route_batch_ms = batch_s * 1e3
+            batched_routes_per_s = n_probe / batch_s
+            drift_after = session.drift
+            if refinalize_threshold is not None:
+                out = session.maybe_refinalize(
+                    threshold=refinalize_threshold)
+                refinalize_fired = out is not None
+                # warm re-finalize repeats feed the refinalize histogram
+                # (the warm-vs-cold p50 comparison column)
+                for _ in range(max(0, finalize_repeats - 1)):
+                    session.refinalize()
+        snap = obs.snapshot()
+        hists = snap["histograms"]
         h_route = hists.get("session.route.ms", {})
         h_fin = hists.get("session.finalize.ms", {})
+        h_ref = hists.get("session.refinalize.ms", {})
         serving = {
             "route_probes": route_probes,
             "route_p50_ms": h_route.get("p50"),
@@ -300,6 +390,19 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
             "finalize_p50_ms": h_fin.get("p50"),
             "finalize_p99_ms": h_fin.get("p99"),
             "drift": session.drift,
+            # mutable-serving columns (None outside mutation mode)
+            "reupload_frac": reupload_frac if mutated else None,
+            "churn": churn if mutated else None,
+            "max_age": max_age,
+            "live_clients": session.count if mutated else None,
+            "evictions": (int(snap["counters"].get("session.evictions", 0))
+                          if mutated else None),
+            "drift_after_mutation": drift_after,
+            "refinalize_threshold": refinalize_threshold,
+            "refinalize_fired": refinalize_fired,
+            "refinalize_warm_p50_ms": h_ref.get("p50"),
+            "route_batch_ms": route_batch_ms,
+            "batched_routes_per_s": batched_routes_per_s,
         }
 
     if trace_sink is not None:
@@ -416,6 +519,17 @@ def main(argv=None):
     ap.add_argument("--finalize-repeats", type=int, default=1,
                     help="total finalize runs (warm re-finalizes feed the "
                          "finalize latency histogram)")
+    ap.add_argument("--reupload-frac", type=float, default=0.0,
+                    help="fraction of clients re-uploading drifted models "
+                         "each mutation round (keyed slot replacement)")
+    ap.add_argument("--churn", type=int, default=0,
+                    help="fresh clients joining each mutation round")
+    ap.add_argument("--max-age", type=int, default=None,
+                    help="sliding-window staleness: evict slots older than "
+                         "this many waves")
+    ap.add_argument("--refinalize-threshold", type=float, default=None,
+                    help="drift ratio above which maybe_refinalize() warm-"
+                         "starts a re-finalize after the mutation rounds")
     ap.add_argument("--out", default=None, help="write the summary JSON here")
     args = ap.parse_args(argv)
 
@@ -439,7 +553,10 @@ def main(argv=None):
         aggregator=args.aggregator, trim_beta=args.trim_beta,
         seed=args.seed, method=args.method, rounds=args.rounds,
         trace=args.trace, route_probes=args.route_probes,
-        finalize_repeats=args.finalize_repeats)
+        finalize_repeats=args.finalize_repeats,
+        reupload_frac=args.reupload_frac, churn=args.churn,
+        max_age=args.max_age,
+        refinalize_threshold=args.refinalize_threshold)
     ph = summary["phases"]
     print(f"[simulate] C={summary['clients']} K={summary['clusters']} "
           f"task={summary['task']} wave={summary['wave']} "
@@ -468,6 +585,16 @@ def main(argv=None):
               f"({'-' if sv['routes_per_s'] is None else format(sv['routes_per_s'], '.0f')}/s)  "
               f"finalize p50={'-' if sv['finalize_p50_ms'] is None else format(sv['finalize_p50_ms'], '.1f')}ms  "
               f"drift={'-' if sv['drift'] is None else format(sv['drift'], '.3f')}")
+        if sv.get("live_clients") is not None:
+            rw = sv["refinalize_warm_p50_ms"]
+            bb = sv["route_batch_ms"]
+            print(f"[simulate] mutation: live={sv['live_clients']} "
+                  f"evictions={sv['evictions']} "
+                  f"drift(after)={'-' if sv['drift_after_mutation'] is None else format(sv['drift_after_mutation'], '.3f')} "
+                  f"refinalize={'fired' if sv['refinalize_fired'] else ('-' if sv['refinalize_fired'] is None else 'held')} "
+                  f"warm p50={'-' if rw is None else format(rw, '.1f')}ms  "
+                  f"batched route={'-' if bb is None else format(bb, '.2f')}ms "
+                  f"({'-' if sv['batched_routes_per_s'] is None else format(sv['batched_routes_per_s'], '.0f')}/s)")
     if args.trace:
         print(f"[simulate] trace -> {args.trace}")
     if args.out:

@@ -204,14 +204,20 @@ def test_rejected_wave_does_not_lock_ingest_mode():
     assert sess2.count == 2
 
 
-def test_ingest_after_finalize_invalidates_round():
+def test_ingest_after_finalize_serves_stale_round():
+    """A mutable server keeps serving the last finalized round while the
+    buffer moves on (stale-serving); the next finalize covers the full
+    buffer.  Routing before ANY finalize still raises."""
     pts, _ = make_blobs(7, [6, 6], 5)
     sess = AggregationSession(len(pts), sketch_dim=16, seed=0)
     sess.ingest({"theta": jnp.asarray(pts[:8])})
-    sess.finalize(algorithm="kmeans-device", k=2)
-    sess.ingest({"theta": jnp.asarray(pts[8:])})
     with pytest.raises(ValueError, match="finalize"):
         sess.route(np.zeros(16, np.float32))
+    sess.finalize(algorithm="kmeans-device", k=2)
+    k_before = sess.n_clusters
+    sess.ingest({"theta": jnp.asarray(pts[8:])})
+    cid = sess.route(params={"theta": jnp.asarray(pts[0])})
+    assert 0 <= cid < k_before                  # stale round still serves
     _, labels, _ = sess.finalize(algorithm="kmeans-device", k=2)
     assert labels.shape == (len(pts),)
 

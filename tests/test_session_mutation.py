@@ -1,0 +1,391 @@
+"""Mutable-serving contracts of the AggregationSession.
+
+Pins the keyed-slot / staleness / warm-re-finalize semantics:
+
+  * keyed re-uploads replace in place and finalize bit-exact with a
+    fresh session holding only the surviving values (the hypothesis
+    property drives arbitrary re-upload/evict interleavings);
+  * the staleness policies (sliding-window eviction, exp-decay
+    weighting) and their effect on finalize;
+  * warm-started re-finalize: device Lloyd from the previous centers
+    and AMA from its previous dual reach the same fixed point in fewer
+    iterations, with cold fallback when the family (or a changed client
+    count, for the convex dual) cannot warm-start;
+  * the drift gauge (degenerate zero-inertia fallback included) and the
+    ``maybe_refinalize`` trigger;
+  * the engine='host' resolution of explicit device names, the
+    rejected-wave atomicity guarantee, and ``cluster_model`` bounds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustering.api import (
+    DeviceClusteringResult,
+    register_algorithm,
+    resolve_host_request,
+    unregister_algorithm,
+)
+from repro.core.engine import (
+    AggregationSession,
+    ExpDecay,
+    NoStaleness,
+    SlidingWindow,
+    make_staleness_policy,
+)
+from repro.core.engine.device_convex import device_convex_cluster
+from repro.core.engine.device_kmeans import device_kmeans
+
+from test_session import make_blobs
+
+
+def keyed_session(pts, ids, sketch_dim=16, seed=0, **kw):
+    sess = AggregationSession(len(pts), sketch_dim=sketch_dim, seed=seed,
+                              **kw)
+    sess.ingest({"theta": jnp.asarray(pts)}, client_ids=ids)
+    return sess
+
+
+# ------------------------------------------------- keyed slots / re-upload
+
+def test_reupload_replaces_in_place():
+    pts, _ = make_blobs(0, [6, 6], 5)
+    sess = keyed_session(pts, list(range(len(pts))))
+    assert sess.count == len(pts)
+    rows = sess.ingest({"theta": jnp.asarray(pts[:3] + 1.0)},
+                       client_ids=[0, 1, 2])
+    np.testing.assert_array_equal(rows, [0, 1, 2])
+    assert sess.count == len(pts)          # replaced, not appended
+    st = sess.state()
+    np.testing.assert_allclose(np.asarray(st.params["theta"][:3]),
+                               pts[:3] + 1.0, rtol=1e-6)
+
+
+def test_reupload_finalize_bit_exact_with_fresh_session():
+    pts, _ = make_blobs(3, [8, 8], 6)
+    sess = keyed_session(pts, list(range(len(pts))), sketch_dim=24, seed=5)
+    moved = pts[4:10] + 0.5
+    sess.ingest({"theta": jnp.asarray(moved)}, client_ids=list(range(4, 10)))
+
+    final = pts.copy()
+    final[4:10] = moved
+    ref = keyed_session(final, list(range(len(pts))), sketch_dim=24, seed=5)
+
+    state, labels, _ = sess.finalize(algorithm="kmeans-device", k=2)
+    ref_state, ref_labels, _ = ref.finalize(algorithm="kmeans-device", k=2)
+    np.testing.assert_array_equal(labels, ref_labels)
+    np.testing.assert_array_equal(np.asarray(state.params["theta"]),
+                                  np.asarray(ref_state.params["theta"]))
+
+
+def test_duplicate_ids_within_wave_rejected():
+    pts, _ = make_blobs(1, [4], 5)
+    sess = AggregationSession(8, sketch_dim=16)
+    with pytest.raises(ValueError, match="duplicate client ids"):
+        sess.ingest({"theta": jnp.asarray(pts)}, client_ids=[0, 1, 1, 2])
+    assert sess.count == 0                 # nothing committed
+
+
+def test_new_ids_reuse_evicted_rows_before_growing():
+    pts, _ = make_blobs(2, [4], 5)
+    sess = AggregationSession(4, sketch_dim=16,
+                              staleness=SlidingWindow(max_age=1))
+    sess.ingest({"theta": jnp.asarray(pts)}, client_ids=["a", "b", "c", "d"])
+    sess.ingest({"theta": jnp.asarray(pts[:1])}, client_ids=["a"])
+    sess.ingest({"theta": jnp.asarray(pts[:1])}, client_ids=["a"])
+    # b/c/d aged out; their rows are free again, so new joiners fit in a
+    # capacity-4 buffer even though 4 distinct ids already passed through
+    assert sess.count == 1
+    rows = sess.ingest({"theta": jnp.asarray(pts[:2])},
+                       client_ids=["e", "f"])
+    assert set(int(r) for r in rows) <= {1, 2, 3}
+    assert sess.count == 3
+
+
+# ------------------------------------------------------------- staleness
+
+def test_make_staleness_policy_parses_cli_spellings():
+    assert isinstance(make_staleness_policy("none"), NoStaleness)
+    assert make_staleness_policy("max_age=3") == SlidingWindow(3)
+    assert make_staleness_policy("exp_decay=2.0") == ExpDecay(2.0)
+    p = SlidingWindow(7)
+    assert make_staleness_policy(p) is p
+    with pytest.raises(ValueError, match="unknown staleness policy"):
+        make_staleness_policy("lru")
+
+
+def test_sliding_window_evicts_and_finalize_matches_survivors():
+    pts, _ = make_blobs(4, [6, 6], 6)
+    sess = AggregationSession(len(pts), sketch_dim=24, seed=7,
+                              staleness="max_age=1")
+    sess.ingest({"theta": jnp.asarray(pts[:6])},
+                client_ids=list(range(6)))
+    sess.ingest({"theta": jnp.asarray(pts[6:])},
+                client_ids=list(range(6, 12)))
+    sess.ingest({"theta": jnp.asarray(pts[6:])},
+                client_ids=list(range(6, 12)))
+    # first wave is now age 2 > max_age=1 -> evicted
+    assert sess.count == 6
+    assert set(sess.clients) == set(range(6, 12))
+
+    state, labels, info = sess.finalize(algorithm="kmeans-device", k=2)
+    assert info["count"] == 6
+    assert labels.shape == (6,)
+    # the eviction left holes (rows 0..5 dead) — finalize must see the
+    # same federation as a fresh session of just the survivors
+    ref = keyed_session(pts[6:], list(range(6)), sketch_dim=24, seed=7)
+    ref_state, ref_labels, _ = ref.finalize(algorithm="kmeans-device", k=2)
+    np.testing.assert_array_equal(labels, ref_labels)
+    np.testing.assert_array_equal(np.asarray(state.params["theta"]),
+                                  np.asarray(ref_state.params["theta"]))
+
+
+def test_exp_decay_weights_fade_stale_rows():
+    # two clients per cluster: one fresh at the optimum, one stale and
+    # offset.  With NoStaleness the cluster mean sits midway; with a
+    # sharp ExpDecay the stale row's weight vanishes and the mean hugs
+    # the fresh upload.
+    base = np.array([[10.0, 0.0], [-10.0, 0.0]], np.float32)
+    stale = base + np.array([2.0, 0.0], np.float32)
+    sess = AggregationSession(4, sketch_dim=8, seed=0,
+                              staleness=ExpDecay(half_life=0.1))
+    sess.ingest({"theta": jnp.asarray(stale)}, client_ids=["s0", "s1"])
+    for _ in range(8):                      # age the stale pair
+        sess.ingest({"theta": jnp.asarray(base)}, client_ids=["f0", "f1"])
+    state, _, info = sess.finalize(algorithm="kmeans-device", k=2)
+    assert info["n_clusters"] == 2
+    served = np.asarray(state.params["theta"])
+    fresh_rows = served[2:]                 # f0/f1 ingested after s0/s1
+    np.testing.assert_allclose(fresh_rows, base, atol=1e-2)
+
+
+def test_exp_decay_requires_mean_aggregator():
+    pts, _ = make_blobs(5, [4, 4], 5)
+    sess = AggregationSession(len(pts), sketch_dim=16,
+                              staleness=ExpDecay(half_life=1.0))
+    sess.ingest({"theta": jnp.asarray(pts)},
+                client_ids=list(range(len(pts))))
+    with pytest.raises(ValueError, match="mean"):
+        sess.finalize(algorithm="kmeans-device", k=2,
+                      aggregator="trimmed_mean")
+
+
+# ------------------------------------------------- warm-start re-finalize
+
+def test_device_kmeans_warm_matches_cold_in_fewer_iters():
+    pts, _ = make_blobs(6, [20, 20, 20], 8)
+    key = jax.random.PRNGKey(0)
+    cold = device_kmeans(key, jnp.asarray(pts), k=3, init="kmeans++",
+                         iters=50)
+    warm = device_kmeans(key, jnp.asarray(pts), k=3, init="warm",
+                         init_centers=cold.centers, iters=50)
+    np.testing.assert_array_equal(np.asarray(warm.labels),
+                                  np.asarray(cold.labels))
+    np.testing.assert_allclose(np.asarray(warm.centers),
+                               np.asarray(cold.centers), atol=1e-5)
+    assert int(warm.n_iter) <= int(cold.n_iter)
+    assert int(warm.n_iter) <= 2           # restart at the fixed point
+
+
+def test_device_kmeans_warm_requires_centers():
+    with pytest.raises(ValueError, match="init_centers"):
+        device_kmeans(jax.random.PRNGKey(0), jnp.zeros((4, 3)), k=2,
+                      init="warm")
+
+
+def test_device_convex_warm_dual_converges_faster():
+    pts, _ = make_blobs(7, [6, 6], 4, sep=40.0, noise=0.05)
+    a = jnp.asarray(pts)
+    key = jax.random.PRNGKey(0)
+    cold = device_convex_cluster(key, a, lam=5e-3, iters=200)
+    assert cold.nu is not None
+    warm = device_convex_cluster(key, a, lam=5e-3, iters=200,
+                                 warm_nu=cold.nu)
+    np.testing.assert_array_equal(np.asarray(warm.labels),
+                                  np.asarray(cold.labels))
+    assert int(warm.n_iter) < int(cold.n_iter)
+
+
+def test_session_refinalize_warm_agrees_with_cold():
+    pts, _ = make_blobs(8, [10, 10], 8)
+    sess = keyed_session(pts, list(range(len(pts))), sketch_dim=24, seed=3)
+    _, labels0, info0 = sess.finalize(algorithm="kmeans-device", k=2)
+    assert info0["refinalize"] is None     # a plain finalize is not warm
+    _, labels1, info1 = sess.refinalize()
+    assert info1["refinalize"] == "warm"
+    np.testing.assert_array_equal(labels1, labels0)
+    assert info1["meta"]["n_iter"] <= info0["meta"]["n_iter"]
+
+
+def test_session_refinalize_needs_prior_finalize():
+    pts, _ = make_blobs(9, [4], 5)
+    sess = keyed_session(pts, list(range(len(pts))))
+    with pytest.raises(ValueError, match="prior finalize"):
+        sess.refinalize()
+
+
+def test_convex_warm_falls_back_cold_when_count_changes():
+    pts, _ = make_blobs(10, [5, 5], 4, sep=40.0, noise=0.05)
+    sess = AggregationSession(len(pts) + 1, sketch_dim=8, seed=1)
+    sess.ingest({"theta": jnp.asarray(pts)},
+                client_ids=list(range(len(pts))))
+    sess.finalize(algorithm="convex-device",
+                  algo_options={"lam": 5e-3, "iters": 150})
+    _, _, info_same = sess.refinalize()
+    assert info_same["refinalize"] == "warm"
+    # the AMA dual is per-edge: a changed client count invalidates it
+    sess.ingest({"theta": jnp.asarray(pts[:1] + 9.0)}, client_ids=["new"])
+    _, _, info = sess.refinalize()
+    assert info["refinalize"] == "cold"    # same-count guard tripped
+
+
+# ------------------------------------------------- drift / maybe_refinalize
+
+def test_maybe_refinalize_triggers_on_drift():
+    pts, _ = make_blobs(11, [12, 12], 8)
+    sess = keyed_session(pts, list(range(len(pts))), sketch_dim=24, seed=2)
+    sess.finalize(algorithm="kmeans-device", k=2)
+    # routing the whole clustered federation back pins drift at ~1.0
+    sess.route(sess.sketch_params({"theta": jnp.asarray(pts)}))
+    assert sess.drift is not None and sess.drift < 1.5
+    assert sess.maybe_refinalize(threshold=1.5) is None
+
+    far = {"theta": jnp.asarray(pts[:6] + 80.0)}
+    sess.route(sess.sketch_params(far))    # drifted request batch
+    assert sess.drift > 1.5
+    out = sess.maybe_refinalize(threshold=1.5)
+    assert out is not None
+    _, _, info = out
+    assert info["refinalize"] == "warm"
+    assert sess.drift is None              # gauge re-anchored
+
+
+def test_drift_degenerate_zero_inertia_uses_scale_fallback():
+    # every client identical -> finalized inertia is exactly 0.  The
+    # old /1e-12 denominator exploded the gauge to ~1e12 for any routed
+    # request; the fallback normalizes by the absolute sketch scale so
+    # near-identical traffic still reads as no drift.
+    pts = np.ones((6, 5), np.float32) * 3.0
+    sess = AggregationSession(6, sketch_dim=8, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts)})
+    sess.finalize(algorithm="kmeans-device", k=1)
+    sess.route(params={"theta": jnp.asarray(pts[0])})
+    assert sess.drift is not None
+    assert sess.drift < 10.0               # was ~1e12 before the fix
+
+
+# ------------------------------------------------- host-engine resolution
+
+def test_finalize_host_downgrades_device_name():
+    pts, _ = make_blobs(12, [8, 8], 6)
+    sess = keyed_session(pts, list(range(len(pts))), sketch_dim=16, seed=4)
+    _, labels, info = sess.finalize(algorithm="kmeans-device", k=2,
+                                    algo_options={"init": "kmeans++"},
+                                    engine="host")
+    assert info["engine"] == "host"
+    assert labels.shape == (len(pts),)
+
+
+def test_resolve_host_request_rejects_twinless_device_algo():
+    class FakeDeviceAlgo:
+        name = "fakeonly-device"
+        requires_k = True
+
+        def __call__(self, key, points, k=None, **options):
+            raise AssertionError("host path must not run the device loop")
+
+        def device_call(self, key, points, *, k=None, **options):
+            raise AssertionError("engine='host' must not reach device_call")
+
+    register_algorithm(FakeDeviceAlgo(), overwrite=True)
+    try:
+        with pytest.raises(ValueError, match="no\\s+registered host base"):
+            resolve_host_request("fakeonly-device")
+        pts, _ = make_blobs(13, [4], 5)
+        sess = keyed_session(pts, list(range(len(pts))))
+        with pytest.raises(ValueError, match="fakeonly-device"):
+            sess.finalize(algorithm="fakeonly-device", k=1, engine="host")
+    finally:
+        unregister_algorithm("fakeonly-device")
+
+
+def test_resolve_host_request_rejects_warm_init():
+    with pytest.raises(ValueError, match="init='warm'"):
+        resolve_host_request("kmeans-device", {"init": "warm"})
+
+
+# ------------------------------------------------- atomicity / bounds
+
+def test_rejected_wave_leaves_state_untouched():
+    pts, _ = make_blobs(14, [6, 6], 5)
+    sess = keyed_session(pts, list(range(len(pts))), sketch_dim=16, seed=6)
+    sess.finalize(algorithm="kmeans-device", k=2)
+    clients_before = sess.clients
+    with pytest.raises(ValueError, match="does not match the session's"):
+        sess.ingest({"theta": jnp.zeros((3, 99))}, client_ids=[0, 1, 2])
+    assert sess.count == len(pts)
+    assert sess.clients == clients_before
+    # the finalized round survived too: the rejected wave never touched
+    # the buffers, so serving continues uninvalidated
+    cid = sess.route(params={"theta": jnp.asarray(pts[0])})
+    assert 0 <= cid < sess.n_clusters
+
+
+def test_cluster_model_bounds_check():
+    pts, _ = make_blobs(15, [6, 6], 5)
+    sess = keyed_session(pts, list(range(len(pts))), sketch_dim=16, seed=0)
+    sess.finalize(algorithm="kmeans-device", k=2)
+    sess.cluster_model(0)
+    sess.cluster_model(sess.n_clusters - 1)
+    with pytest.raises(IndexError, match="out of range"):
+        sess.cluster_model(-1)             # wrapped silently before
+    with pytest.raises(IndexError, match="out of range"):
+        sess.cluster_model(sess.n_clusters)
+
+
+# ------------------------------------------------- hypothesis property
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # pragma: no cover - baked image
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def mutation_scripts(draw):
+        """An initial keyed federation plus a random script of keyed
+        re-upload waves (subsets of the ids, shifted values)."""
+        n = draw(st.integers(4, 10))
+        n_waves = draw(st.integers(1, 4))
+        waves = []
+        for w in range(n_waves):
+            size = draw(st.integers(1, n))
+            ids = draw(st.lists(st.integers(0, n - 1), min_size=size,
+                                max_size=size, unique=True))
+            shift = draw(st.floats(-4.0, 4.0, allow_nan=False))
+            waves.append((sorted(ids), shift))
+        return n, waves
+
+    @settings(max_examples=15, deadline=None)
+    @given(mutation_scripts())
+    def test_arbitrary_reuploads_match_fresh_session(script):
+        n, waves = script
+        pts, _ = make_blobs(42, [n - n // 2, n // 2], 6)
+        sess = keyed_session(pts, list(range(n)), sketch_dim=16, seed=9)
+        final = pts.copy()
+        for ids, shift in waves:
+            vals = pts[ids] + np.float32(shift)
+            sess.ingest({"theta": jnp.asarray(vals)}, client_ids=ids)
+            final[ids] = vals
+        assert sess.count == n
+        ref = keyed_session(final, list(range(n)), sketch_dim=16, seed=9)
+        state, labels, _ = sess.finalize(algorithm="kmeans-device", k=2)
+        ref_state, ref_labels, _ = ref.finalize(algorithm="kmeans-device",
+                                                k=2)
+        np.testing.assert_array_equal(labels, ref_labels)
+        np.testing.assert_array_equal(
+            np.asarray(state.params["theta"]),
+            np.asarray(ref_state.params["theta"]))
