@@ -43,20 +43,34 @@ Each row also carries (since schema_version 2):
     process-wide high-water mark, so later rows upper-bound earlier
     peaks rather than resetting per row.
 
-The kmeans family sweeps to C=16k.  The convex family's complete fusion
-graph is E = C(C-1)/2 edges (the AMA state is O(E * sketch_dim)), which
-walls at C=4k — the ``edges=knn`` rows swap in the sparse mutual-kNN
-graph (E = C*k via the tiled top-k over the ``pairwise_l2`` kernel) and
-carry the family to C=16k.
+The kmeans family sweeps to C=16k flat, then rides the two-level
+hierarchical round (``shards=`` -> ``engine/hierarchy.py``) to
+C=100k-1M.  The convex family's complete fusion graph is E = C(C-1)/2
+edges (the AMA state is O(E * sketch_dim)), which walls at C=4k — the
+``edges=knn`` rows swap in the sparse mutual-kNN graph (E = C*k via
+the tiled top-k over the ``pairwise_l2`` kernel) and carry the family
+to C=16k, and the ``edges=knn-approx`` row replaces even that build's
+O(C^2) distance sweep with the projection-LSH candidate stage.
+
+Schema_version 4 adds the scale columns: ``shards`` (1 = the flat
+session) and ``comm_level_bytes`` (per-level upload bytes of the
+hierarchical round, null for flat rows) on every row, and
+``edge_build_s`` on the convex rows — the standalone warm wall-clock
+of the registered edge builder at the row's (C, sketch_dim), the
+number the ``knn`` vs ``knn-approx`` comparison reads.
 """
 from __future__ import annotations
 
 import json
 import resource
+import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
+from repro.core.engine.edges import get_edge_set
 from repro.launch.simulate import simulate
 from repro.roofline.engine_costs import (
     detect_hardware,
@@ -67,15 +81,22 @@ from repro.roofline.engine_costs import (
 
 CLUSTERS = 8
 OUT = "BENCH_engine.json"
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 # (algorithm, C grid, simulate overrides).  The kmeans rows carry the
 # mutation knobs, so each row ALSO measures the mutable-serving path
 # (keyed drifted re-uploads + churn, warm re-finalize, batched route)
-# after the scored run; the row key (algorithm, edges, C) is unchanged.
+# after the scored run; the row key (algorithm, edges, C, shards) is
+# unchanged.
 SWEEPS = (
     ("kmeans-device", (256, 1024, 4096, 16384),
      {"finalize_repeats": 5, "route_probes": 256,
       "reupload_frac": 0.25, "churn": 64, "refinalize_threshold": 1.5}),
+    # two-level hierarchical rounds: the million-client path (S shards
+    # of the fused round, then the S*k shard centers at the top level)
+    ("kmeans-device", (102400,),
+     {"shards": 8, "wave": 8192, "route_probes": 256}),
+    ("kmeans-device", (1048576,),
+     {"shards": 32, "wave": 8192, "route_probes": 256}),
     ("convex-device", (256, 1024),
      {"sketch_dim": 32, "cc_iters": 200,
       "finalize_repeats": 3, "route_probes": 256}),
@@ -88,7 +109,30 @@ SWEEPS = (
     ("convex-device", (4096, 16384),
      {"sketch_dim": 32, "cc_iters": 200, "edges": "knn", "knn_k": 8,
       "finalize_repeats": 2, "route_probes": 256}),
+    # approximate kNN: the LSH candidate stage drops the edge build's
+    # O(C^2) distance sweep (compare edge_build_s with the knn row)
+    ("convex-device", (16384,),
+     {"sketch_dim": 32, "cc_iters": 200, "edges": "knn-approx", "knn_k": 8,
+      "finalize_repeats": 2, "route_probes": 256}),
 )
+
+
+def edge_build_seconds(c: int, sketch_dim: int, edges: str, knn_k: int,
+                       repeats: int = 3) -> float:
+    """Standalone warm wall-clock of the registered edge builder at the
+    row's shapes — isolates the fusion-graph build from the AMA solve so
+    the exact-vs-approximate kNN comparison is apples to apples."""
+    pts = jax.random.normal(jax.random.PRNGKey(0), (c, sketch_dim),
+                            jnp.float32)
+    builder = get_edge_set(edges)
+    fn = jax.jit(lambda p: builder(p, knn_k=knn_k))
+    jax.block_until_ready(fn(pts))                  # compile + warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(pts))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
 
 
 def _peak_bytes(rss_baseline: int) -> dict:
@@ -119,16 +163,28 @@ def run(sweeps=SWEEPS, out: str = OUT):
         tag = algorithm
         if overrides.get("edges", "complete") != "complete":
             tag = f"{algorithm}+{overrides['edges']}"
+        if overrides.get("shards", 1) > 1:
+            tag = f"{tag}@S{overrides['shards']}"
         for c in c_grid:
-            summary = simulate(clients=c, clusters=CLUSTERS, wave=4096,
-                               algorithm=algorithm, **overrides)
+            summary = simulate(clients=c, clusters=CLUSTERS,
+                               algorithm=algorithm,
+                               **{"wave": 4096, **overrides})
             snap = summary.pop("obs")
             serving = summary.pop("serving") or {}
+            # hierarchical rows probe at the per-shard level-0 shapes —
+            # that is the program the round actually compiles
+            probe_c = -(-c // summary.get("shards", 1))
             probes = engine_kernel_report(
-                c, summary["sketch_dim"], CLUSTERS, algorithm,
+                probe_c, summary["sketch_dim"], CLUSTERS, algorithm,
                 edges=summary.get("edges") or "complete",
                 knn_k=summary.get("knn_k") or 8, hw=hw)
+            edge_build_s = None
+            if summary.get("edges") is not None:
+                edge_build_s = edge_build_seconds(
+                    c, summary["sketch_dim"], summary["edges"],
+                    summary.get("knn_k") or 8)
             row = {**summary, **serving, **_peak_bytes(rss_baseline),
+                   "edge_build_s": edge_build_s,
                    "kernels": {
                        "programs": program_rows_from_snapshot(snap, hw),
                        "probes": probes}}

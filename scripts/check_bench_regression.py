@@ -5,11 +5,17 @@ Two layers, both exiting non-zero on violation so CI/smoke can gate on
 them:
 
   * schema validation (always): ``BENCH_engine.json`` must be
-    schema_version 3 with the serving / mutable-serving / roofline /
+    schema_version 4 with the serving / mutable-serving / roofline /
     peak-memory columns present in every row (the mutation columns —
     warm re-finalize, batched route, evictions — are nullable: convex
-    rows don't run the mutated sweep); ``BENCH_robustness.json`` must
-    be schema_version 1 with the robustness row keys.
+    rows don't run the mutated sweep) plus the scale columns —
+    ``shards`` / ``comm_level_bytes`` / ``edge_build_s``; the report
+    must carry at least one hierarchical row (shards > 1, C >= 100k,
+    purity >= 0.99, per-level comm bytes) and the C=16384
+    ``knn-approx`` convex row must match the exact ``knn`` row's
+    purity within slack while beating its edge-build wall-clock;
+    ``BENCH_robustness.json`` must be schema_version 1 with the
+    robustness row keys.
   * ``--quick``: re-run the cheapest engine row (kmeans-device, C=256)
     through the real ``bench_engine_scale`` path into a temp file and
     compare it against the committed baseline row under per-metric
@@ -37,7 +43,7 @@ for p in (ROOT, os.path.join(ROOT, "src")):
 ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
 ROBUSTNESS_JSON = os.path.join(ROOT, "BENCH_robustness.json")
 
-ENGINE_SCHEMA_VERSION = 3
+ENGINE_SCHEMA_VERSION = 4
 ROBUSTNESS_SCHEMA_VERSION = 1
 
 ENGINE_ROW_KEYS = {
@@ -49,7 +55,13 @@ ENGINE_ROW_KEYS = {
     "reupload_frac", "churn", "live_clients", "evictions",
     "drift_after_mutation", "refinalize_threshold", "refinalize_fired",
     "refinalize_warm_p50_ms", "route_batch_ms", "batched_routes_per_s",
+    # schema 4: hierarchical / approximate-edge scale columns
+    # (comm_level_bytes is null on flat rows, edge_build_s on non-convex)
+    "shards", "comm_level_bytes", "edge_build_s",
 }
+
+HIER_MIN_CLIENTS = 100_000
+HIER_MIN_PURITY = 0.99
 ROBUSTNESS_ROW_KEYS = {"sweep", "scenario", "aggregator", "purity"}
 
 # --quick tolerances vs the committed baseline row
@@ -93,6 +105,58 @@ def validate_engine(report: dict, failures: list) -> None:
                f"engine row {i} device_peak_bytes non-null "
                f"({row['device_peak_bytes']}, "
                f"source={row.get('device_peak_bytes_source')})")
+    _validate_hierarchical(rows, failures)
+    _validate_knn_approx(rows, failures)
+
+
+def _validate_hierarchical(rows: list, failures: list) -> None:
+    """Schema 4: the report must prove the million-client path — at
+    least one two-level row at C >= 100k recovering the planted
+    clusters, with the per-level comm accounting filled in."""
+    hier = [r for r in rows
+            if r.get("shards", 1) > 1 and r["clients"] >= HIER_MIN_CLIENTS]
+    _check(failures, bool(hier),
+           f"engine report has a hierarchical row (shards > 1, "
+           f"C >= {HIER_MIN_CLIENTS})")
+    for row in hier:
+        tag = (f"{row['algorithm']}@S{row['shards']}/C{row['clients']}")
+        _check(failures, row["purity"] >= HIER_MIN_PURITY,
+               f"hierarchical row {tag} purity {row['purity']:.4f} >= "
+               f"{HIER_MIN_PURITY}")
+        clb = row.get("comm_level_bytes") or {}
+        ok = (clb.get("level0") and clb.get("level1")
+              and clb["level1"] < clb["level0"])
+        _check(failures, bool(ok),
+               f"hierarchical row {tag} comm_level_bytes present with "
+               f"level1 < level0 (got {clb})")
+
+
+def _validate_knn_approx(rows: list, failures: list) -> None:
+    """Schema 4: the C=16384 knn-approx convex row must match the exact
+    knn row's purity (within the quick-check slack) while beating its
+    standalone edge-build wall-clock."""
+    def find(edges):
+        for r in rows:
+            if (r["algorithm"].startswith("convex")
+                    and r.get("edges") == edges and r["clients"] == 16384):
+                return r
+        return None
+    exact, approx = find("knn"), find("knn-approx")
+    _check(failures, approx is not None,
+           "engine report has the convex knn-approx C=16384 row")
+    if approx is None or exact is None:
+        if exact is None:
+            _check(failures, False,
+                   "engine report has the convex knn C=16384 row")
+        return
+    _check(failures, approx["purity"] >= exact["purity"] - PURITY_SLACK,
+           f"knn-approx purity {approx['purity']:.3f} >= knn "
+           f"{exact['purity']:.3f} - {PURITY_SLACK}")
+    eb_exact, eb_approx = exact.get("edge_build_s"), approx.get("edge_build_s")
+    _check(failures,
+           eb_exact is not None and eb_approx is not None
+           and eb_approx < eb_exact,
+           f"knn-approx edge_build_s {eb_approx} < knn {eb_exact}")
 
 
 def validate_robustness(report: dict, failures: list) -> None:
@@ -110,7 +174,8 @@ def validate_robustness(report: dict, failures: list) -> None:
 
 
 def _row_key(row: dict):
-    return (row["algorithm"], row.get("edges") or "complete", row["clients"])
+    return (row["algorithm"], row.get("edges") or "complete",
+            row["clients"], row.get("shards", 1))
 
 
 def quick_check(baseline: dict, failures: list) -> None:

@@ -5,15 +5,31 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-# Streaming-session + edge-set + device convex gates: the newest engine
-# paths fail fast and loudly before the multi-minute full suite below.
+# Streaming-session + edge-set + device convex + hierarchy gates: the
+# newest engine paths fail fast and loudly before the multi-minute full
+# suite below.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" \
-    tests/test_session.py tests/test_edges.py tests/test_device_convex.py
+    --durations=20 \
+    tests/test_session.py tests/test_edges.py tests/test_device_convex.py \
+    tests/test_hierarchy.py
+
+# The fast gate must not silently shrink: @slow markings, marker typos
+# and bad deselects all surface as a collected-count drift here.
+# Update the expected count when tests are added/removed on purpose.
+EXPECTED_FAST_GATE_TESTS=391
+collected=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    -m "not slow" --collect-only 2>/dev/null | tail -1 | grep -oE '[0-9]+' | head -1)
+if [ "$collected" != "$EXPECTED_FAST_GATE_TESTS" ]; then
+    echo "fast gate collected $collected tests, expected" \
+         "$EXPECTED_FAST_GATE_TESTS (update scripts/smoke.sh if intended)" >&2
+    exit 1
+fi
 
 # Fast gate first: the full suite minus the @slow large-C engine runs.
 # Deselected: failures already present at the seed commit (c788f4d) —
 # kept visible here so a future fix can re-enable them.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" \
+    --durations=20 \
     --deselect tests/test_dryrun_integration.py::test_dryrun_single_combo \
     --deselect tests/test_federated.py::test_one_shot_aggregate_recovers_clusters \
     --deselect tests/test_federated.py::test_aggregation_improves_or_matches_local \
@@ -23,8 +39,8 @@ PYTHONPATH=src python - <<'PY'
 import benchmarks.run  # imports every benchmark module
 from repro.core import ODCL, get_algorithm, list_algorithms, list_methods
 from repro.core.clustering import is_device_algorithm
-from repro.core.engine import AggregationSession, list_edge_sets
-from repro.core.engine import list_aggregators, make_aggregator
+from repro.core.engine import AggregationSession, HierarchicalSession
+from repro.core.engine import list_aggregators, list_edge_sets, make_aggregator
 from repro.core.federated_methods import list_federated_methods
 from repro.scenarios import build_scenario, list_scenarios
 
@@ -35,8 +51,9 @@ assert is_device_algorithm(get_algorithm("kmeans-device"))
 assert is_device_algorithm(get_algorithm("convex-device"))
 assert is_device_algorithm(get_algorithm("clusterpath-device"))
 assert is_device_algorithm(get_algorithm("gradient-device"))
-assert {"complete", "knn"} <= set(list_edge_sets())
+assert {"complete", "knn", "knn-approx"} <= set(list_edge_sets())
 assert callable(AggregationSession)
+assert callable(HierarchicalSession)
 assert {"odcl", "ifca", "fedavg", "local-only"} <= set(list_federated_methods())
 assert {"mean", "trimmed_mean", "median"} <= set(list_aggregators())
 assert make_aggregator("trimmed_mean", beta=0.2).beta == 0.2
@@ -56,6 +73,11 @@ PY
 # cluster mean, one jitted program)
 PYTHONPATH=src python -m repro.launch.simulate \
     --clients 512 --clusters 8 --wave 256 --samples 32 --init spectral
+
+# the same federation through the two-level hierarchical round (4 shard
+# sessions, then the shard centers clustered at the top level)
+PYTHONPATH=src python -m repro.launch.simulate \
+    --clients 512 --clusters 8 --wave 128 --samples 32 --shards 4
 
 # adversity gate: 10% sign-flip Byzantine clients survived by the
 # trimmed-mean aggregator (robust center update + step-3 reduction +

@@ -84,6 +84,7 @@ from repro.core.engine.device_convex import (
 )
 from repro.core.engine.device_kmeans import DeviceKMeansResult, device_kmeans
 from repro.core.engine.edges import (
+    ApproxKnnEdges,
     CompleteEdges,
     Edges,
     EdgeSet,
@@ -103,7 +104,10 @@ from repro.core.engine.staleness import (
 __all__ = [
     "AggregationSession",
     "Aggregator",
+    "ApproxKnnEdges",
     "CompleteEdges",
+    "HierarchicalSession",
+    "hierarchical_one_shot_aggregate",
     "DeviceConvexResult",
     "DeviceKMeansResult",
     "Edges",
@@ -143,4 +147,10 @@ def __getattr__(name):
     if name == "AggregationSession":
         from repro.core.engine.session import AggregationSession
         return AggregationSession
+    if name == "HierarchicalSession":
+        from repro.core.engine.hierarchy import HierarchicalSession
+        return HierarchicalSession
+    if name == "hierarchical_one_shot_aggregate":
+        from repro.core.engine.hierarchy import hierarchical_one_shot_aggregate
+        return hierarchical_one_shot_aggregate
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -82,6 +82,13 @@ def _ama_fixed_point(a, lams, edges: Edges, *, iters: int, tol: float,
     i_idx, j_idx = edges.i_idx, edges.j_idx
     e = i_idx.shape[0]
     L = lams.shape[0]
+    if e == 0:
+        # degenerate edge set (m=1 falls back to an empty complete
+        # graph): the objective has no fusion term, u == a is the fixed
+        # point and the dual is the empty block.  jnp.max over the
+        # zero-slot dual would be ill-defined, so short-circuit.
+        u = jnp.broadcast_to(a[None], (L, m, d))
+        return u, jnp.zeros((L, 0, d), jnp.float32), jnp.array(0, jnp.int32)
     eta = 1.0 / edges.inv_eta
     radius = lams[:, None] * edges.weights[None, :]         # (L, E)
     thresh = tol * (1.0 + jnp.max(jnp.abs(a)))

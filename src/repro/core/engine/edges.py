@@ -26,6 +26,21 @@ registry plugin:
     complete graph (the paper's interval (17)) transfers: the aggregate
     pull on a point matches the complete graph's.  ``inv_eta = 2 *
     max_degree`` (the unweighted-Laplacian bound).
+  * ``ApproxKnnEdges`` (``"knn-approx"``) — the exact tiled top-k still
+    streams all m^2 distances, the remaining O(m^2) wall of the convex
+    family.  This builder replaces it with an LSH candidate stage:
+    ``n_tables`` random projection directions each impose a sorted
+    1-D order on the sketches (projection LSH — nearby points land at
+    nearby ranks w.h.p.), the sorted order is cut into ``bucket``-sized
+    buckets, and the EXACT top-k runs only within each bucket and its
+    two neighbours (3*bucket candidates per point, per table); per-row
+    results merge across tables by index-dedup + top-k.  Edge assembly
+    (mutual dedup, degree-normalized weights, ``inv_eta``) is shared
+    with ``KnnEdges``, so the solver sees an identical ``Edges``
+    contract — the distance work drops from O(m^2 d) to
+    O(m * tables * bucket * d).  Small inputs (m <= 3*bucket, where the
+    candidate window already covers everything) fall back to the exact
+    builder bit-for-bit.
   * ``register_edge_set`` / ``get_edge_set`` / ``list_edge_sets`` — the
     registry, mirroring the clustering and federated-method registries;
     new graphs (epsilon-balls, cluster-aware samplers, ...) drop in
@@ -70,18 +85,39 @@ class EdgeSet(Protocol):
     def __call__(self, points, **options: Any) -> Edges: ...
 
 
+# Above this many points the complete graph's host-side index arrays
+# alone (two int64 vectors of m(m-1)/2 entries from np.triu_indices)
+# cross the ~4 GB line and climb quadratically — m=65k is ~34 GB, which
+# OOM-kills the container long before the solver even starts.  The
+# sparse builders exist precisely for that regime, so refuse loudly
+# instead of letting the allocation take the process down.
+COMPLETE_EDGES_MAX_M = 16384
+
+
 @dataclasses.dataclass(frozen=True)
 class CompleteEdges:
     """All m(m-1)/2 pairs, uniform weight 1 — the paper's fusion graph.
 
     ``inv_eta = m`` (rho(A A^T) = m for the complete graph), identical
     to the host solver's hardcoded step, so the complete edge set keeps
-    the device/host AMA parity bit-for-bit.
+    the device/host AMA parity bit-for-bit.  Above
+    ``COMPLETE_EDGES_MAX_M`` points the quadratic edge list is refused
+    (``max_m=`` overrides) — use the sparse ``edges="knn"`` /
+    ``"knn-approx"`` builders there.
     """
     name: str = "complete"
 
-    def __call__(self, points, **_: Any) -> Edges:
+    def __call__(self, points, *, max_m: int = COMPLETE_EDGES_MAX_M,
+                 **_: Any) -> Edges:
         m = points.shape[0]
+        if m > max_m:
+            raise ValueError(
+                f"edges='complete' on m={m} points would build "
+                f"{m * (m - 1) // 2:,} edges (~"
+                f"{m * (m - 1) * 8 / 1e9:.0f} GB of host index arrays "
+                f"alone); use the sparse edges='knn' or "
+                f"edges='knn-approx' fusion graphs above m={max_m}, or "
+                "pass max_m= to raise the guard deliberately")
         iu, ju = np.triu_indices(m, k=1)
         e = iu.shape[0]
         # inv_eta stays a python float: eta = 1/m is then computed in
@@ -122,18 +158,48 @@ def _tiled_topk(points, k: int, tile: int):
     return idx, jnp.sqrt(jnp.maximum(d2, 0.0))
 
 
+def _edges_from_neighbors(idx, dist) -> Edges:
+    """Assemble the mutual-kNN ``Edges`` from per-row neighbour lists.
+
+    Shared by the exact and approximate builders: E = m*k static slots
+    (one per (row, neighbour) pair), each canonicalized to (min, max);
+    when a pair is mutually nearest the copy owned by the larger
+    endpoint is zero-weighted, so every unordered edge contributes
+    exactly once.  Active weights are the uniform degree-normalized
+    value (m-1)/avg_degree: the total pull lambda * sum_j w_ij on a
+    point matches the complete graph's lambda * (m-1), which keeps the
+    paper's interval-(17) lambda scales meaningful on the sparse graph.
+    """
+    m, k = idx.shape
+    rows = jnp.repeat(jnp.arange(m, dtype=jnp.int32), k)
+    nbrs = idx.reshape(-1)
+    # mutual-pair dedup: slot (i -> j) with i > j is a duplicate iff
+    # i also appears in knn(j) — that edge already exists as (j -> i)
+    back = idx[idx]                                     # (m, k, k)
+    mutual = jnp.any(
+        back == jnp.arange(m, dtype=jnp.int32)[:, None, None], axis=-1)
+    keep = (rows < nbrs) | ~mutual.reshape(-1)
+    i_idx = jnp.minimum(rows, nbrs)
+    j_idx = jnp.maximum(rows, nbrs)
+    n_active = jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
+    avg_deg = 2.0 * n_active / m
+    w0 = jnp.asarray(m - 1, jnp.float32) / avg_deg
+    weights = jnp.where(keep, w0, 0.0)
+    deg = (jnp.zeros((m,), jnp.float32)
+           .at[i_idx].add(keep.astype(jnp.float32))
+           .at[j_idx].add(keep.astype(jnp.float32)))
+    inv_eta = jnp.maximum(2.0 * jnp.max(deg), 1.0)
+    return Edges(i_idx=i_idx, j_idx=j_idx, weights=weights,
+                 inv_eta=inv_eta, min_dist=jnp.min(dist))
+
+
 @dataclasses.dataclass(frozen=True)
 class KnnEdges:
     """Sparse mutual-kNN fusion graph — the C >> 4k convex edge set.
 
-    E = m*k static slots (one per (row, neighbour) pair).  Each slot is
-    canonicalized to (min, max); when a pair is mutually nearest the
-    copy owned by the larger endpoint is zero-weighted, so every
-    unordered edge contributes exactly once.  Active weights are the
-    uniform degree-normalized value (m-1)/avg_degree: the total pull
-    lambda * sum_j w_ij on a point matches the complete graph's
-    lambda * (m-1), which keeps the paper's interval-(17) lambda scales
-    meaningful on the sparse graph.
+    Exact per-row k nearest neighbours (``_tiled_topk`` streams row
+    tiles of the distance matrix, O(tile*m) peak memory but still
+    O(m^2 d) distance work), assembled by ``_edges_from_neighbors``.
     """
     name: str = "knn"
 
@@ -144,26 +210,110 @@ class KnnEdges:
         if m < 2:
             return CompleteEdges()(points)
         idx, dist = _tiled_topk(points, k, tile)            # (m, k)
-        rows = jnp.repeat(jnp.arange(m, dtype=jnp.int32), k)
-        nbrs = idx.reshape(-1)
-        # mutual-pair dedup: slot (i -> j) with i > j is a duplicate iff
-        # i also appears in knn(j) — that edge already exists as (j -> i)
-        back = idx[idx]                                     # (m, k, k)
-        mutual = jnp.any(
-            back == jnp.arange(m, dtype=jnp.int32)[:, None, None], axis=-1)
-        keep = (rows < nbrs) | ~mutual.reshape(-1)
-        i_idx = jnp.minimum(rows, nbrs)
-        j_idx = jnp.maximum(rows, nbrs)
-        n_active = jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
-        avg_deg = 2.0 * n_active / m
-        w0 = jnp.asarray(m - 1, jnp.float32) / avg_deg
-        weights = jnp.where(keep, w0, 0.0)
-        deg = (jnp.zeros((m,), jnp.float32)
-               .at[i_idx].add(keep.astype(jnp.float32))
-               .at[j_idx].add(keep.astype(jnp.float32)))
-        inv_eta = jnp.maximum(2.0 * jnp.max(deg), 1.0)
-        return Edges(i_idx=i_idx, j_idx=j_idx, weights=weights,
-                     inv_eta=inv_eta, min_dist=jnp.min(dist))
+        return _edges_from_neighbors(idx, dist)
+
+
+def _bucketed_topk(points, k: int, *, n_tables: int, bucket: int, seed: int):
+    """Approximate per-row k nearest neighbours via projection LSH.
+
+    Each table draws one random unit-less direction, sorts the points by
+    their 1-D projection (nearby points land at nearby ranks with high
+    probability), cuts the sorted order into ``bucket``-sized buckets,
+    and runs the exact top-k against each bucket's own + two adjacent
+    buckets (3*bucket candidates, so every point sees its full sorted
+    neighbourhood regardless of where the bucket boundary falls).
+    Tables merge by per-row index-dedup + top-k.  Distance work is
+    O(m * n_tables * bucket * d); the (m, m) matrix is never touched.
+    Returns (idx (m, k) int32, d2 (m, k) f32 squared distances).
+    """
+    m, d = points.shape
+    key = jax.random.PRNGKey(seed)
+    nb = (m + bucket - 1) // bucket
+    mp = nb * bucket
+    pad_rows = mp - m
+
+    def one_table(t):
+        vt = jax.random.normal(jax.random.fold_in(key, t), (d,), jnp.float32)
+        order = jnp.argsort(points @ vt).astype(jnp.int32)       # (m,)
+        # pad the sorted order with sentinel index m (masked below) and
+        # far-away points so pads never win a top-k slot
+        order_p = jnp.concatenate(
+            [order, jnp.full((pad_rows,), m, jnp.int32)])
+        pts_p = jnp.concatenate(
+            [points[order], jnp.full((pad_rows, d), 1e30, jnp.float32)])
+        blocks = pts_p.reshape(nb, bucket, d)
+        idx_blocks = order_p.reshape(nb, bucket)
+        cands = jnp.concatenate([jnp.roll(blocks, 1, axis=0), blocks,
+                                 jnp.roll(blocks, -1, axis=0)], axis=1)
+        cand_idx = jnp.concatenate(
+            [jnp.roll(idx_blocks, 1, axis=0), idx_blocks,
+             jnp.roll(idx_blocks, -1, axis=0)], axis=1)          # (nb, 3B)
+        d2 = jax.vmap(kops.pairwise_sqdist)(blocks, cands)       # (nb,B,3B)
+        invalid = ((cand_idx[:, None, :] == idx_blocks[:, :, None])
+                   | (cand_idx[:, None, :] >= m))    # self + pad slots
+        d2 = jnp.where(invalid, jnp.inf, d2)
+        neg, sel = jax.lax.top_k(-d2, k)                         # (nb,B,k)
+        nbr = jnp.take_along_axis(cand_idx[:, None, :], sel, axis=2)
+        # unsort back to original row order (pad rows sliced off first)
+        idx_t = jnp.zeros((m, k), jnp.int32).at[order].set(
+            nbr.reshape(mp, k)[:m].astype(jnp.int32))
+        d2_t = jnp.zeros((m, k), jnp.float32).at[order].set(
+            (-neg).reshape(mp, k)[:m])
+        return idx_t, d2_t
+
+    idx_all, d2_all = [], []
+    for t in range(n_tables):       # static unroll, n_tables is small
+        it, dt = one_table(t)
+        idx_all.append(it)
+        d2_all.append(dt)
+    idx_all = jnp.concatenate(idx_all, axis=1)                   # (m, T*k)
+    d2_all = jnp.concatenate(d2_all, axis=1)
+    # cross-table dedup: sort candidates by index, inf-out repeats (the
+    # same neighbour found by two tables has the same distance), top-k
+    ord_ = jnp.argsort(idx_all, axis=1)
+    idx_s = jnp.take_along_axis(idx_all, ord_, axis=1)
+    d2_s = jnp.take_along_axis(d2_all, ord_, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((m, 1), bool), idx_s[:, 1:] == idx_s[:, :-1]], axis=1)
+    d2_s = jnp.where(dup, jnp.inf, d2_s)
+    neg, sel = jax.lax.top_k(-d2_s, k)
+    return jnp.take_along_axis(idx_s, sel, axis=1), -neg
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxKnnEdges:
+    """Approximate mutual-kNN fusion graph — the C >> 100k convex edge
+    set.
+
+    The candidate stage (``_bucketed_topk``) replaces the exact
+    builder's O(m^2 d) streamed distance matrix with projection-LSH
+    bucketing + exact top-k within bucket windows; edge assembly is
+    byte-identical with ``KnnEdges``.  ``min_dist`` is the minimum over
+    the *found* neighbour distances — on the sparse graph that is
+    already the quantity the lambda heuristics consume.  When the
+    candidate window covers the whole input (m <= 3*bucket) the exact
+    builder runs instead, bit-for-bit.
+    """
+    name: str = "knn-approx"
+
+    def __call__(self, points, *, knn_k: int = 8, n_tables: int = 4,
+                 bucket: Optional[int] = None, seed: int = 0,
+                 tile: int = 1024, **_: Any) -> Edges:
+        m = points.shape[0]
+        k = int(min(max(knn_k, 1), max(m - 1, 1)))
+        if m < 2:
+            return CompleteEdges()(points)
+        if bucket is None:
+            bucket = max(8 * k, 64)
+        bucket = max(int(bucket), k + 1)
+        if m <= 3 * bucket:
+            # the window already spans every point: exact is both
+            # cheaper and a strictly better answer
+            idx, dist = _tiled_topk(points, k, tile)
+            return _edges_from_neighbors(idx, dist)
+        idx, d2 = _bucketed_topk(points, k, n_tables=int(n_tables),
+                                 bucket=bucket, seed=int(seed))
+        return _edges_from_neighbors(idx, jnp.sqrt(jnp.maximum(d2, 0.0)))
 
 
 # --------------------------------------------------------------- registry
@@ -205,6 +355,6 @@ def list_edge_sets() -> tuple[str, ...]:
     return tuple(sorted(_EDGE_SETS))
 
 
-for _b in (CompleteEdges(), KnnEdges()):
+for _b in (CompleteEdges(), KnnEdges(), ApproxKnnEdges()):
     register_edge_set(_b)
 del _b

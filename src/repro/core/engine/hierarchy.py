@@ -1,0 +1,383 @@
+"""Two-level hierarchical ODCL — the million-client round.
+
+A single ``AggregationSession`` holds one fixed-capacity
+(capacity, sketch_dim) buffer and clusters it in one shot; that buffer
+is the C ceiling.  k-FED ("Heterogeneity for the Win: One-Shot
+Federated Clustering") shows the one-shot estimate composes: cluster
+each shard of clients independently, then cluster the shard-level
+centers — under the paper's Definition-1 separation the shard centers
+of a true cluster concentrate around its mean, so the top level
+recovers the same partition from S*k points instead of C.
+
+``HierarchicalSession`` is that composition over S independent
+``AggregationSession`` shards sharing one JL projection:
+
+  * **ingest** fills shards contiguously (global client order is the
+    concatenation of shard orders), splitting waves at shard
+    boundaries.  Anonymous waves only — keyed mutation composes with a
+    single session, not with a sharded one (a re-upload would have to
+    find its shard), and raises a clear ``ValueError``.
+  * **finalize** is two levels.  Level 0 runs the existing fused
+    sketch -> cluster -> mean round per shard (the exact
+    ``session.finalize`` body — every registered family, edge sets
+    included, streams unchanged).  Level 1 gathers the ~S*k active
+    shard centers with their member counts, clusters them through a
+    sketch-only ``AggregationSession`` (same resolution machinery,
+    same obs spans), and composes:
+
+      - top cluster centers  = count-weighted means of member shard
+        centers (== the global mean of the member clients' sketches
+        when the family's centers are member means),
+      - top cluster models   = count-weighted means of member shard
+        models through the engine's ``_weighted_mean_program``
+        (== the exact global per-cluster parameter mean),
+      - per-client labels    = ``top_labels[offset_s + shard_labels]``.
+
+    Top-level communication is O(S*k*sketch_dim) where the flat round
+    pays O(C*sketch_dim); both levels' bytes are reported in
+    ``info["comm_level_bytes"]`` and as ``hierarchy.comm.*`` gauges.
+  * **route / cluster_model** serve from the composed top-level
+    clustering with the session's single-sync batched route program.
+
+``shards=1`` delegates every call to the single underlying session —
+bit-exact with ``one_shot_aggregate(engine="device")`` on the same
+clients (the hypothesis property in ``tests/test_hierarchy.py``), not
+merely equal-up-to-relabeling as a 1-shard two-level pass would be.
+
+``hierarchical_one_shot_aggregate`` wraps the session as a functional
+round for the fused-round call sites (``launch/simulate.py --shards``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.engine.aggregate import (
+    _route_program,
+    _weighted_mean_program,
+    cached_program,
+)
+from repro.core.engine.session import AggregationSession
+from repro.core.federated import FederatedState
+from repro.optim import adamw_init
+
+_F32 = 4  # bytes per sketch coordinate on the wire
+
+
+class HierarchicalSession:
+    """S-sharded two-level aggregation with the session serving contract.
+
+    Args:
+      capacity: total live-client ceiling, split evenly across shards
+        (per-shard capacity = ceil(capacity / shards)).
+      shards: number of level-0 ``AggregationSession`` instances.  1
+        delegates everything to the flat session (bit-exact).
+      sketch_dim / cfg / seed / cluster_seed / sketch_transform /
+        mesh / client_axis: forwarded to every shard session; all
+        shards share ``seed`` so their JL projections — and therefore
+        the sketch space the top level clusters in — are identical.
+    """
+
+    def __init__(self, capacity: int, *, shards: int = 1,
+                 sketch_dim: int = 256, cfg=None, seed: int = 0,
+                 cluster_seed: Optional[int] = None, sketch_transform=None,
+                 mesh=None, client_axis: str = "data"):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if capacity < shards:
+            raise ValueError(f"capacity {capacity} < shards {shards}: "
+                             "every shard needs at least one slot")
+        self.shards = int(shards)
+        self.capacity = int(capacity)
+        self.shard_capacity = -(-self.capacity // self.shards)
+        self.sketch_dim = int(sketch_dim)
+        self.seed = int(seed)
+        self.cluster_seed = self.seed if cluster_seed is None else int(
+            cluster_seed)
+        self.mesh, self.client_axis = mesh, client_axis
+        self._sessions = [
+            AggregationSession(self.shard_capacity, sketch_dim=sketch_dim,
+                               cfg=cfg, seed=seed, cluster_seed=cluster_seed,
+                               sketch_transform=sketch_transform, mesh=mesh,
+                               client_axis=client_axis)
+            for _ in range(self.shards)]
+        self._fill = 0                 # global clients ingested so far
+        # composed top-level serving state (shards > 1 only)
+        self._serving = None           # (state | None, labels, info)
+        self._route_centers = None     # (K'', sketch_dim) weighted centers
+        self._n_clusters = 0
+
+    # ------------------------------------------------------------ ingest
+
+    @property
+    def count(self) -> int:
+        return sum(s.count for s in self._sessions)
+
+    def ingest(self, wave=None, *, sketches=None, client_ids=None):
+        """Ingest one anonymous wave, split at shard boundaries.
+
+        Clients fill shard 0's buffer first, then shard 1's, and so on;
+        a wave straddling a boundary is sliced so each piece lands in
+        its shard.  Returns the wave's global offset (its first
+        client's position in ingestion order)."""
+        if client_ids is not None:
+            raise ValueError(
+                "hierarchical sessions are anonymous-only: keyed client "
+                "slots (client_ids=) need the flat AggregationSession "
+                "(shards=1 via HierarchicalSession delegates to it)")
+        if (wave is None) == (sketches is None):
+            raise ValueError("pass exactly one of wave= or sketches=")
+        if sketches is not None:
+            sketches = jnp.asarray(sketches, jnp.float32)
+            w = int(sketches.shape[0]) if sketches.ndim == 2 else -1
+        else:
+            leaves = jax.tree_util.tree_leaves(wave)
+            if not leaves:
+                raise ValueError("empty parameter wave")
+            w = int(leaves[0].shape[0])
+        if w < 1:
+            raise ValueError("empty wave")
+        if self._fill + w > self.shard_capacity * self.shards:
+            raise ValueError(
+                f"hierarchical capacity exceeded: {self._fill} live + {w} "
+                f"new > {self.shard_capacity * self.shards}")
+        offset = self._fill
+        start = 0
+        while start < w:
+            shard = self._fill // self.shard_capacity
+            room = (shard + 1) * self.shard_capacity - self._fill
+            take = min(room, w - start)
+            if sketches is not None:
+                self._sessions[shard].ingest(
+                    sketches=sketches[start:start + take])
+            else:
+                piece = jax.tree_util.tree_map(
+                    lambda l: l[start:start + take], wave)
+                self._sessions[shard].ingest(piece)
+            self._fill += take
+            start += take
+        self._serving = None if self.shards > 1 else self._serving
+        return offset
+
+    @property
+    def sketches(self) -> jnp.ndarray:
+        """(count, sketch_dim) concatenation of the live shard sketch
+        rows, in global (ingestion) order — a copy for shards > 1."""
+        if self.shards == 1:
+            return self._sessions[0].sketches
+        live = [s.sketches for s in self._sessions if s.count > 0]
+        return jnp.concatenate(live, axis=0)
+
+    def state(self) -> FederatedState:
+        """The live federation as one stacked ``FederatedState`` (shard
+        states concatenated in global order) — a copy for shards > 1."""
+        if self.shards == 1:
+            return self._sessions[0].state()
+        states = [s.state() for s in self._sessions if s.count > 0]
+        params = jax.tree_util.tree_map(
+            lambda *ls: jnp.concatenate(ls, axis=0),
+            *[st.params for st in states])
+        return FederatedState(params=params,
+                              opt_state=jax.vmap(adamw_init)(params),
+                              n_clients=self.count)
+
+    # ---------------------------------------------------------- finalize
+
+    def finalize(self, *, algorithm="kmeans-device", k: Optional[int] = None,
+                 algo_options: Optional[dict] = None, engine: str = "device",
+                 aggregator="mean"):
+        """Two-level steps 2-4; same ``(new_state, labels, info)``
+        contract as ``AggregationSession.finalize`` with hierarchy
+        fields added to ``info`` (``shards``, ``per_shard_clusters``,
+        ``comm_level_bytes``)."""
+        if self.count == 0:
+            raise ValueError("nothing ingested")
+        kwargs = dict(algorithm=algorithm, k=k, algo_options=algo_options,
+                      engine=engine, aggregator=aggregator)
+        if self.shards == 1:
+            out = self._sessions[0].finalize(**kwargs)
+            out[2].setdefault("shards", 1)
+            self._serving = out
+            return out
+        with obs.span("hierarchy.finalize", shards=self.shards,
+                      count=self.count):
+            return self._finalize_two_level(**kwargs)
+
+    def _finalize_two_level(self, *, algorithm, k, algo_options, engine,
+                            aggregator):
+        live = [s for s in self._sessions if s.count > 0]
+        # ---- level 0: the fused round per shard -----------------------
+        shard_rounds = []
+        with obs.span("hierarchy.level0", shards=len(live)):
+            for s in live:
+                shard_rounds.append(s.finalize(
+                    algorithm=algorithm, k=k, algo_options=algo_options,
+                    engine=engine, aggregator=aggregator))
+        centers, counts, models, offsets = [], [], [], []
+        off = 0
+        for s, (state_s, labels_s, _) in zip(live, shard_rounds):
+            kp = s.n_clusters
+            offsets.append(off)
+            off += kp
+            centers.append(s.route_centers)                    # (K'_s, dim)
+            counts.append(np.bincount(labels_s, minlength=kp))
+            if state_s is not None:
+                first = np.unique(labels_s, return_index=True)[1]
+                models.append(jax.tree_util.tree_map(
+                    lambda l: l[jnp.asarray(first, jnp.int32)],
+                    state_s.params))                           # (K'_s, ...)
+        top_points = jnp.concatenate(centers, axis=0)          # (M, dim)
+        weights = np.concatenate(counts).astype(np.float64)    # (M,)
+        m_top = int(top_points.shape[0])
+        level0_bytes = self.count * self.sketch_dim * _F32
+        level1_bytes = m_top * (self.sketch_dim + 1) * _F32    # + the count
+        obs.gauge("hierarchy.comm.level0_bytes", float(level0_bytes))
+        obs.gauge("hierarchy.comm.level1_bytes", float(level1_bytes))
+        obs.gauge("hierarchy.top_points", float(m_top))
+
+        # ---- level 1: cluster the size-weighted shard centers ---------
+        k_top = None if k is None else min(int(k), m_top)
+        with obs.span("hierarchy.level1", points=m_top):
+            top = AggregationSession(m_top, sketch_dim=self.sketch_dim,
+                                     seed=self.seed,
+                                     cluster_seed=self.cluster_seed,
+                                     mesh=self.mesh,
+                                     client_axis=self.client_axis)
+            top.ingest(sketches=top_points)
+            _, top_labels, top_info = top.finalize(
+                algorithm=algorithm, k=k_top, algo_options=algo_options,
+                engine=engine, aggregator="mean")
+        k2 = int(top_info["n_clusters"])
+        w_j = jnp.asarray(weights, jnp.float32)
+        lab_j = jnp.asarray(top_labels, jnp.int32)
+        # count-weighted top centers: the global sketch mean of each top
+        # cluster's member clients (shard centers are member means)
+        sums = jnp.zeros((k2, self.sketch_dim), jnp.float32).at[lab_j].add(
+            w_j[:, None] * top_points)
+        denom = jnp.maximum(
+            jnp.zeros((k2,), jnp.float32).at[lab_j].add(w_j), 1e-12)
+        top_centers = sums / denom[:, None]
+
+        # ---- compose ---------------------------------------------------
+        labels = np.concatenate([
+            np.asarray(top_labels)[offsets[i] + labels_s]
+            for i, (_, labels_s, _) in enumerate(shard_rounds)])
+        info = {
+            "n_clusters": k2,
+            "engine": top_info["engine"],
+            "count": self.count,
+            "meta": top_info["meta"],
+            "shards": len(live),
+            "per_shard_clusters": [s.n_clusters for s in live],
+            "comm_level_bytes": {"level0": level0_bytes,
+                                 "level1": level1_bytes},
+        }
+        new_state = None
+        if models:
+            # (M, ...) shard-cluster models -> per-row weighted top means
+            stacked = jax.tree_util.tree_map(
+                lambda *ls: jnp.concatenate(ls, axis=0), *models)
+            top_models = cached_program(_weighted_mean_program, self.mesh,
+                                        self.client_axis)(
+                lab_j, top_centers, stacked, w_j)
+            per_client = jax.tree_util.tree_map(
+                lambda l: jnp.concatenate([
+                    l[jnp.asarray(offsets[i] + labels_s, jnp.int32)]
+                    for i, (_, labels_s, _) in enumerate(shard_rounds)],
+                    axis=0),
+                top_models)
+            new_state = FederatedState(
+                params=per_client,
+                opt_state=jax.vmap(adamw_init)(per_client),
+                n_clients=self.count, step=0)
+        self._route_centers = top_centers
+        self._n_clusters = k2
+        self._serving = (new_state, labels, info)
+        return new_state, labels, info
+
+    # ------------------------------------------------------------- serve
+
+    def route(self, sketch=None, *, params=None):
+        """Nearest composed top-level cluster, single-sync per batch —
+        the flat session's serving contract over the hierarchy."""
+        if self.shards == 1:
+            return self._sessions[0].route(sketch, params=params)
+        if self._serving is None:
+            raise ValueError("route() needs finalize() first")
+        if (sketch is None) == (params is None):
+            raise ValueError("pass exactly one of sketch or params=")
+        if params is not None:
+            sketch = self._sessions[0]._sketch_one(params)
+        sketch = jnp.asarray(sketch, jnp.float32)
+        single = sketch.ndim == 1
+        pts = sketch[None] if single else sketch
+        with obs.span("hierarchy.route", n=int(pts.shape[0])):
+            labels, _ = cached_program(_route_program)(
+                pts, self._route_centers)
+            out = np.asarray(jax.device_get(labels))
+        return int(out[0]) if single else out
+
+    def cluster_model(self, cluster_id: int):
+        if self.shards == 1:
+            return self._sessions[0].cluster_model(cluster_id)
+        state = self._require_serving()[0]
+        if state is None:
+            raise ValueError("sketch-only session holds no parameters")
+        cid = int(cluster_id)
+        if not 0 <= cid < self._n_clusters:
+            raise IndexError(
+                f"cluster id {cid} out of range for {self._n_clusters} "
+                "recovered clusters")
+        # any member client row of the top cluster carries its model;
+        # labels are compact, so first occurrence is a member
+        labels = self._require_serving()[1]
+        idx = int(np.argmax(labels == cid))
+        return jax.tree_util.tree_map(lambda l: l[idx], state.params)
+
+    def _require_serving(self):
+        if self._serving is None:
+            raise ValueError("finalize() first")
+        return self._serving
+
+    @property
+    def n_clusters(self) -> int:
+        if self.shards == 1:
+            return self._sessions[0].n_clusters
+        self._require_serving()
+        return self._n_clusters
+
+    @property
+    def route_centers(self) -> jnp.ndarray:
+        if self.shards == 1:
+            return self._sessions[0].route_centers
+        self._require_serving()
+        return self._route_centers
+
+
+def hierarchical_one_shot_aggregate(state: FederatedState, cfg=None, *,
+                                    shards: int, algorithm="kmeans-device",
+                                    k: Optional[int] = None,
+                                    algo_options: Optional[dict] = None,
+                                    sketch_dim: int = 256, seed: int = 0,
+                                    cluster_seed: Optional[int] = None,
+                                    aggregator="mean",
+                                    engine: str = "device",
+                                    mesh=None, client_axis: str = "data"):
+    """The two-level round as a function call — ``one_shot_aggregate``'s
+    contract (``(new_state, labels, info)``) over a sharded server.
+    ``shards=1`` is bit-exact with the flat device round."""
+    sess = HierarchicalSession(state.n_clients, shards=shards,
+                               sketch_dim=sketch_dim, cfg=cfg, seed=seed,
+                               cluster_seed=cluster_seed, mesh=mesh,
+                               client_axis=client_axis)
+    cap = sess.shard_capacity
+    for start in range(0, state.n_clients, cap):
+        stop = min(start + cap, state.n_clients)
+        sess.ingest(jax.tree_util.tree_map(lambda l: l[start:stop],
+                                           state.params))
+    return sess.finalize(algorithm=algorithm, k=k, algo_options=algo_options,
+                         engine=engine, aggregator=aggregator)

@@ -748,7 +748,10 @@ class AggregationSession:
         with obs.span("session.route", n=n):
             labels, batch_d2 = cached_program(_route_program)(
                 pts, self._route_centers)
-            out = np.asarray(labels)
+            # one transfer for both outputs — the route hot path's only
+            # host sync (asserted by tests/test_session_mutation.py)
+            out, batch_d2 = jax.device_get((labels, batch_d2))
+            out = np.asarray(out)
             batch_d2 = float(batch_d2)
         obs.count("session.route.requests", n)
         # drift gauge: routed traffic's mean d^2 to its assigned center,

@@ -92,10 +92,21 @@ def make_staleness_policy(spec, **options):
     if name == "none":
         return NoStaleness()
     if name in ("max_age", "sliding_window"):
-        max_age = int(arg) if arg else options.get("max_age")
-        return SlidingWindow() if max_age is None else SlidingWindow(max_age)
+        try:
+            max_age = int(arg) if arg else options.get("max_age")
+            return (SlidingWindow() if max_age is None
+                    else SlidingWindow(max_age))
+        except ValueError as err:
+            raise ValueError(
+                f"invalid staleness spec {spec!r}: max_age must be an "
+                f"integer >= 1 ({err})") from None
     if name == "exp_decay":
-        half_life = float(arg) if arg else options.get("half_life")
-        return ExpDecay() if half_life is None else ExpDecay(half_life)
+        try:
+            half_life = float(arg) if arg else options.get("half_life")
+            return ExpDecay() if half_life is None else ExpDecay(half_life)
+        except ValueError as err:
+            raise ValueError(
+                f"invalid staleness spec {spec!r}: half_life must be a "
+                f"number > 0 ({err})") from None
     raise ValueError(f"unknown staleness policy {spec!r}; "
                      "known: none | max_age | exp_decay")

@@ -38,6 +38,8 @@ def _proj_kernel(v_ref, r_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("be", "interpret"))
 def group_ball_proj_pallas(v, radius, *, be: int = 512, interpret: bool = False):
     e, d = v.shape
+    if e == 0:          # degenerate edge set (m=1): nothing to project
+        return jnp.zeros((0, d), jnp.float32)
     radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (e,))
     be = min(be, _rup(e, 8))
     ep = _rup(e, be)
@@ -70,6 +72,8 @@ def group_ball_proj_batched_pallas(v, radius, *, be: int = 512,
                                    interpret: bool = False):
     """Batched row-wise ball projection: v (b, e, d), radius (b, e)."""
     b, e, d = v.shape
+    if e == 0:          # degenerate edge set (m=1): nothing to project
+        return jnp.zeros((b, 0, d), jnp.float32)
     radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (b, e))
     be = min(be, _rup(e, 8))
     ep = _rup(e, be)

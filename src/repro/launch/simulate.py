@@ -46,6 +46,7 @@ from repro.core.clustering import (
 )
 from repro.core.engine import list_edge_sets, make_staleness_policy
 from repro.core.engine.aggregators import list_aggregators, make_aggregator
+from repro.core.engine.hierarchy import HierarchicalSession
 from repro.core.engine.session import AggregationSession
 from repro.core.erm import batched_ridge_erm, logistic_erm
 from repro.core.federated_methods import (
@@ -96,6 +97,7 @@ def _wave_erm(key, optima, labels, *, wave: int, n: int, d: int,
 
 def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
              wave: int = 4096, task: str = "ridge", sketch_dim: int = 64,
+             shards: int = 1,
              algorithm: str = "kmeans-device", init: str = "kmeans++",
              kmeans_iters: int = 50, restarts: int = 1, cc_iters: int = 300,
              edges: str = "complete", knn_k: int = 8,
@@ -190,12 +192,30 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
     # the churned-in joiners, and the sliding-window staleness policy
     mutated = (reupload_frac > 0 or churn > 0 or max_age is not None
                or refinalize_threshold is not None)
+    if shards > 1:
+        # the hierarchical server is anonymous-only and one-shot-only:
+        # keyed mutation and the iterative baselines both need the flat
+        # session's single buffer
+        if mutated:
+            raise ValueError("--shards > 1 is incompatible with the "
+                             "mutation knobs (--reupload-frac/--churn/"
+                             "--max-age/--refinalize-threshold): keyed "
+                             "slots need the flat session")
+        if method != "odcl":
+            raise ValueError(f"--shards > 1 only runs the one-shot round "
+                             f"(method='odcl'), got method={method!r}")
     capacity = clients + (churn * mutation_rounds if mutated else 0)
     # the staleness window opens at the mutation loop (below), so the
     # initial federation — streamed in over clients/wave ingest waves —
     # counts as one snapshot rather than aging itself out
-    session = AggregationSession(capacity, sketch_dim=sketch_dim, seed=seed,
-                                 sketch_transform=sketch_hook, mesh=mesh)
+    if shards > 1:
+        session = HierarchicalSession(capacity, shards=shards,
+                                      sketch_dim=sketch_dim, seed=seed,
+                                      sketch_transform=sketch_hook, mesh=mesh)
+    else:
+        session = AggregationSession(capacity, sketch_dim=sketch_dim,
+                                     seed=seed, sketch_transform=sketch_hook,
+                                     mesh=mesh)
     t0 = time.perf_counter()
     t_ingest = 0.0
     for start in range(0, clients, wave):
@@ -260,6 +280,7 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
             clients, sketch_dim, params_bytes_per_client(new_state))
         n_clusters = info["n_clusters"]
         meta = {"engine": info["engine"], **info["meta"]}
+        comm_level_bytes = info.get("comm_level_bytes")
     else:
         # iterative methods loop sketch-space rounds over the streamed-in
         # federation (C=10k+ states stay wholly on device)
@@ -275,6 +296,7 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         labels = res.labels
         comm_rounds, comm_bytes = res.comm_rounds, res.comm_bytes
         n_clusters, meta = res.n_clusters, res.meta
+        comm_level_bytes = None
     t_agg = time.perf_counter() - t1
 
     truth = np.asarray(true_labels)
@@ -389,7 +411,7 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
             "finalize_repeats": finalize_repeats,
             "finalize_p50_ms": h_fin.get("p50"),
             "finalize_p99_ms": h_fin.get("p99"),
-            "drift": session.drift,
+            "drift": getattr(session, "drift", None),
             # mutable-serving columns (None outside mutation mode)
             "reupload_frac": reupload_frac if mutated else None,
             "churn": churn if mutated else None,
@@ -413,9 +435,11 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         "clients": clients, "clusters": clusters, "dim": dim,
         "samples": samples, "wave": wave, "task": task,
         "sketch_dim": sketch_dim, "seed": seed, "method": method,
-        "algorithm": algorithm, "restarts": restarts,
+        "algorithm": algorithm, "restarts": restarts, "shards": shards,
+        "comm_level_bytes": comm_level_bytes,
         "edges": edges if convex_family else None,
-        "knn_k": knn_k if (convex_family and edges == "knn") else None,
+        "knn_k": knn_k if (convex_family and edges.startswith("knn"))
+                 else None,
         "scenario": getattr(scen, "name", None),
         "scenario_options": scenario_options or None,
         "aggregator": agg.name,
@@ -456,6 +480,10 @@ def main(argv=None):
                     help="clients generated+solved+ingested per vmap wave")
     ap.add_argument("--task", choices=("ridge", "logistic"), default="ridge")
     ap.add_argument("--sketch-dim", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="level-0 shards of the two-level hierarchical "
+                         "round (1 = the flat bit-exact session; >1 "
+                         "clusters per shard, then the S*k shard centers)")
     ap.add_argument("--algorithm", default="kmeans-device",
                     choices=_device_runnable_algorithms(),
                     help="admissible clustering family for the one-shot "
@@ -545,7 +573,8 @@ def main(argv=None):
     summary = simulate(
         clients=args.clients, clusters=args.clusters, dim=args.dim,
         samples=args.samples, wave=args.wave, task=args.task,
-        sketch_dim=args.sketch_dim, algorithm=args.algorithm,
+        sketch_dim=args.sketch_dim, shards=args.shards,
+        algorithm=args.algorithm,
         init=args.init, kmeans_iters=args.kmeans_iters,
         restarts=args.restarts, cc_iters=args.cc_iters,
         edges=args.edges, knn_k=args.knn_k,
@@ -561,6 +590,7 @@ def main(argv=None):
     print(f"[simulate] C={summary['clients']} K={summary['clusters']} "
           f"task={summary['task']} wave={summary['wave']} "
           f"algo={summary['algorithm']} "
+          f"shards={summary['shards']} "
           f"edges={summary['edges'] or '-'} "
           f"scenario={summary['scenario'] or '-'} "
           f"agg={summary['aggregator']} "
@@ -569,6 +599,11 @@ def main(argv=None):
           f"ingest {ph['ingest_s']:.2f}s  "
           f"server rounds {ph['aggregate_s']:.2f}s "
           f"({summary['comm_bytes'] / 1e6:.2f}MB moved)")
+    clb = summary["comm_level_bytes"]
+    if clb is not None:
+        print(f"[simulate] hierarchy: level0 {clb['level0'] / 1e6:.2f}MB "
+              f"(client uploads)  level1 {clb['level1'] / 1e6:.4f}MB "
+              f"(shard centers)")
     mse = summary["mse"]
     print(f"[simulate] recovered K'={summary['n_clusters_recovered']} "
           f"purity={summary['purity']:.3f} "

@@ -16,7 +16,13 @@ from repro.models import (
 )
 from repro.models.transformer import prefill_with_cache
 
-DECODE_ARCHS = [a for a in ARCH_IDS if a != "hubert_xlarge"]
+# every decode-vs-forward case costs 8-16s (token-by-token decode loop);
+# the fast gate keeps the cheapest arch as representative and the full
+# sweep runs under -m slow
+_FAST_DECODE_ARCH = "xlstm_125m"
+DECODE_ARCHS = [
+    a if a == _FAST_DECODE_ARCH else pytest.param(a, marks=pytest.mark.slow)
+    for a in ARCH_IDS if a != "hubert_xlarge"]
 
 
 def _tok_cfg(arch, **overrides):
@@ -47,7 +53,9 @@ def test_decode_matches_forward(arch):
     assert float(jnp.max(jnp.abs(dec - full))) / scale < 1e-3
 
 
-@pytest.mark.parametrize("arch", ["qwen2_0_5b", "xlstm_125m", "hymba_1_5b"])
+@pytest.mark.parametrize("arch", [
+    pytest.param("qwen2_0_5b", marks=pytest.mark.slow), "xlstm_125m",
+    pytest.param("hymba_1_5b", marks=pytest.mark.slow)])
 def test_prefill_cache_matches_decode(arch):
     cfg = _tok_cfg(arch, serve_window=None)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -71,6 +79,7 @@ def test_prefill_cache_matches_decode(arch):
                                        rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_ring_buffer_windowed_decode():
     """Sliding-window serving: cache capacity < sequence length."""
     cfg = _tok_cfg("qwen2_0_5b", serve_window=8)

@@ -255,3 +255,60 @@ def test_simulate_convex_large_c():
                        algorithm="convex-device", cc_iters=200)
     assert summary["purity"] >= 0.99
     assert summary["n_clusters_recovered"] == 8
+
+
+# ------------------------------------------- degenerate edge-set sweep
+
+@pytest.mark.parametrize("edges", ["complete", "knn", "knn-approx"])
+@pytest.mark.parametrize("m", [1, 2, 3])
+def test_solver_survives_degenerate_sizes(edges, m):
+    """m in {1, 2, 3} with knn_k >= m and tile > m must solve, not
+    crash (E=0 at m=1 hits the empty-dual AMA and kernel guards)."""
+    rng = np.random.default_rng(m)
+    pts = jnp.asarray(rng.normal(size=(m, 4)), jnp.float32)
+    res = device_convex_cluster(jax.random.PRNGKey(0), pts, lam=1e-3,
+                                iters=50, edges=edges, knn_k=8)
+    labels = np.asarray(res.labels)
+    assert labels.shape == (m,)
+    assert 1 <= int(res.n_clusters) <= m
+    assert np.isfinite(np.asarray(res.u)).all()
+
+
+@pytest.mark.parametrize("edges", ["knn", "knn-approx"])
+@pytest.mark.parametrize("m", [2, 3])
+def test_clusterpath_survives_degenerate_sizes(edges, m):
+    rng = np.random.default_rng(m + 10)
+    pts = jnp.asarray(rng.normal(size=(m, 3)), jnp.float32)
+    res = device_clusterpath(jax.random.PRNGKey(0), pts, n_lambdas=4,
+                             iters=50, edges=edges, knn_k=8)
+    assert np.asarray(res.labels).shape == (m,)
+
+
+def test_ama_empty_edge_set_returns_input():
+    """E=0 (a single client's fusion graph): the fixed point is the
+    input itself, zero iterations, an empty dual."""
+    from repro.core.engine.device_convex import _ama_fixed_point
+    from repro.core.engine.edges import Edges
+
+    a = jnp.asarray([[1.0, -2.0, 3.0]], jnp.float32)
+    empty = Edges(i_idx=jnp.zeros((0,), jnp.int32),
+                  j_idx=jnp.zeros((0,), jnp.int32),
+                  weights=jnp.zeros((0,), jnp.float32),
+                  inv_eta=1.0)
+    u, nu, n_iter = _ama_fixed_point(a, jnp.asarray([0.5, 1.0]), empty,
+                                     iters=100, tol=1e-7)
+    assert u.shape == (2, 1, 3)
+    np.testing.assert_array_equal(np.asarray(u[0]), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(u[1]), np.asarray(a))
+    assert nu.shape == (2, 0, 3)
+    assert int(n_iter) == 0
+
+
+def test_group_prox_kernels_handle_zero_edges():
+    from repro.kernels.group_prox import group_ball_proj_pallas
+
+    flat = group_ball_proj_pallas(jnp.zeros((0, 4)), jnp.zeros((0,)))
+    assert flat.shape == (0, 4)
+    batched = group_ball_proj_batched_pallas(jnp.zeros((3, 0, 4)),
+                                             jnp.zeros((3, 0)))
+    assert batched.shape == (3, 0, 4)

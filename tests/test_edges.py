@@ -12,7 +12,9 @@ import numpy as np
 import pytest
 
 from repro.core.clustering import lambda_interval
+from repro.core.engine.edges import COMPLETE_EDGES_MAX_M
 from repro.core.engine import (
+    ApproxKnnEdges,
     CompleteEdges,
     Edges,
     KnnEdges,
@@ -207,3 +209,95 @@ def test_edge_components_match_dense_on_complete_graph():
                                          jnp.float32(0.1))
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(via_edges))
     assert len(np.unique(np.asarray(dense))) == 4
+
+
+# ------------------------------------------------- approximate kNN (LSH)
+
+def knn_oracle(pts, k):
+    """Dense NumPy per-row k nearest neighbours (index sets)."""
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    return np.argsort(d2, axis=1)[:, :k]
+
+
+def test_knn_approx_registered():
+    assert "knn-approx" in list_edge_sets()
+    assert isinstance(get_edge_set("knn-approx"), ApproxKnnEdges)
+
+
+def test_knn_approx_small_m_falls_back_to_exact_bit_for_bit():
+    # m <= 3*bucket: the candidate window spans every point, so the
+    # approximate builder must run the exact tiled top-k instead
+    pts = jnp.asarray(make_blobs(0, k=3, per=10)[0])
+    exact = KnnEdges()(pts, knn_k=5)
+    approx = ApproxKnnEdges()(pts, knn_k=5)
+    np.testing.assert_array_equal(np.asarray(exact.i_idx),
+                                  np.asarray(approx.i_idx))
+    np.testing.assert_array_equal(np.asarray(exact.j_idx),
+                                  np.asarray(approx.j_idx))
+    np.testing.assert_array_equal(np.asarray(exact.weights),
+                                  np.asarray(approx.weights))
+    np.testing.assert_array_equal(np.asarray(exact.inv_eta),
+                                  np.asarray(approx.inv_eta))
+
+
+def test_knn_approx_recall_against_dense_oracle():
+    # large enough to force the LSH candidate stage (m > 3*bucket)
+    pts, _ = make_blobs(4, k=3, per=100, d=6)
+    k, bucket = 5, 32
+    assert len(pts) > 3 * bucket
+    edges = ApproxKnnEdges()(jnp.asarray(pts), knn_k=k, bucket=bucket)
+    oracle = knn_oracle(pts, k)
+    truth = {(min(i, int(j)), max(i, int(j)))
+             for i, row in enumerate(oracle) for j in row}
+    found = active_pairs(edges)
+    recall = len(found & truth) / len(truth)
+    assert recall >= 0.9, f"LSH recall {recall:.3f} below 0.9"
+
+
+def test_knn_approx_recovers_planted_clusters_at_interval_lambda():
+    pts, true = make_blobs(0, k=3, per=80, d=6)
+    lo, hi = lambda_interval(pts, true)
+    # 240 points > 3 * the default bucket (64): the LSH path engages
+    res = device_convex_cluster(jax.random.PRNGKey(0), jnp.asarray(pts),
+                                lam=0.5 * (lo + hi), iters=400,
+                                edges="knn-approx", knn_k=5)
+    assert int(res.n_clusters) == 3
+    assert same_partition(np.asarray(res.labels), true)
+
+
+# ------------------------------------------------- degenerate sizes
+
+@pytest.mark.parametrize("name", ["complete", "knn", "knn-approx"])
+@pytest.mark.parametrize("m", [1, 2, 3])
+def test_degenerate_sizes_build_valid_edges(name, m):
+    # knn_k >= m and tile > m: the builders must clamp, not crash
+    pts = jnp.asarray(np.random.default_rng(m).normal(size=(m, 4)),
+                      jnp.float32)
+    edges = get_edge_set(name)(pts, knn_k=8, tile=1024, bucket=64)
+    if m == 1:
+        assert int(edges.n_edges) == 0
+    i = np.asarray(edges.i_idx)
+    j = np.asarray(edges.j_idx)
+    assert ((0 <= i) & (i < max(m, 1))).all()
+    assert ((0 <= j) & (j < max(m, 1))).all()
+    if m >= 2:
+        # every unordered pair of a 2-3 point set is a nearest
+        # neighbour, so all builders agree on the active pair set
+        assert active_pairs(edges) == {(a, b) for a in range(m)
+                                       for b in range(a + 1, m)}
+
+
+# ------------------------------------------------------------ OOM guard
+
+def test_complete_edges_guard_refuses_quadratic_blowup():
+    pts = jnp.zeros((COMPLETE_EDGES_MAX_M + 1, 2), jnp.float32)
+    with pytest.raises(ValueError, match="knn-approx"):
+        CompleteEdges()(pts)
+    with pytest.raises(ValueError, match="max_m"):
+        CompleteEdges()(jnp.zeros((64, 2)), max_m=32)
+
+
+def test_complete_edges_guard_override():
+    edges = CompleteEdges()(jnp.zeros((64, 2)), max_m=64)
+    assert int(edges.n_edges) == 64 * 63 // 2

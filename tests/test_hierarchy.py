@@ -1,0 +1,195 @@
+"""The two-level hierarchical round (core/engine/hierarchy.py).
+
+Pins the composition contracts: shards=1 is BIT-EXACT with the flat
+fused ``one_shot_aggregate(engine="device")`` round (hypothesis
+property — delegation, not a 1-shard two-level pass), sharded rounds
+recover the planted clusters with exact global per-cluster means, the
+per-level communication accounting shrinks at the top, and the guard
+rails (anonymous-only ingest, capacity, empty finalize) hold.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import HierarchicalSession, hierarchical_one_shot_aggregate
+from repro.core.federated import one_shot_aggregate
+
+from conftest import same_partition
+from test_session import blob_state, make_blobs
+
+
+def hier_ingest(sess, pts, pattern=(7, 12)):
+    off, i = 0, 0
+    while off < len(pts):
+        w = min(pattern[i % len(pattern)], len(pts) - off)
+        sess.ingest({"theta": jnp.asarray(pts[off:off + w])})
+        off += w
+        i += 1
+    return sess
+
+
+# ----------------------------------------------- S=1 bit-exact delegation
+
+@pytest.mark.parametrize("seed,sizes,d", [
+    (0, [9, 7, 11], 8), (3, [5, 5], 4), (11, [8, 3, 6, 7], 12)])
+def test_shards_1_bit_exact_with_fused_round(seed, sizes, d):
+    pts, _ = make_blobs(seed, sizes, d)
+    k = len(sizes)
+    ref_state, ref_labels, _ = one_shot_aggregate(
+        blob_state(pts), None, algorithm="kmeans-device", k=k,
+        sketch_dim=32, seed=3, engine="device")
+    state, labels, info = hierarchical_one_shot_aggregate(
+        blob_state(pts), shards=1, k=k, sketch_dim=32, seed=3)
+    np.testing.assert_array_equal(labels, ref_labels)
+    np.testing.assert_array_equal(np.asarray(state.params["theta"]),
+                                  np.asarray(ref_state.params["theta"]))
+    assert info["shards"] == 1
+
+
+def test_shards_1_bit_exact_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           sizes=st.lists(st.integers(2, 9), min_size=2, max_size=4),
+           d=st.integers(4, 12))
+    def prop(seed, sizes, d):
+        pts, _ = make_blobs(seed, sizes, d)
+        k = len(sizes)
+        ref_state, ref_labels, _ = one_shot_aggregate(
+            blob_state(pts), None, algorithm="kmeans-device", k=k,
+            sketch_dim=16, seed=seed % 97, engine="device")
+        state, labels, _ = hierarchical_one_shot_aggregate(
+            blob_state(pts), shards=1, k=k, sketch_dim=16, seed=seed % 97)
+        np.testing.assert_array_equal(labels, ref_labels)
+        np.testing.assert_array_equal(np.asarray(state.params["theta"]),
+                                      np.asarray(ref_state.params["theta"]))
+
+    prop()
+
+
+# -------------------------------------------------- sharded composition
+
+def test_sharded_round_recovers_planted_clusters():
+    pts, true = make_blobs(1, [40, 40, 40], 8)
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(len(pts))
+    state, labels, info = hierarchical_one_shot_aggregate(
+        blob_state(pts[perm]), shards=4, k=3, sketch_dim=32, seed=0)
+    assert info["shards"] == 4
+    assert info["n_clusters"] == 3
+    assert same_partition(labels, true[perm])
+
+
+def test_sharded_models_are_exact_global_cluster_means():
+    # the weighted top-level composition must equal the global
+    # per-cluster mean: flat-round parity on well-separated blobs where
+    # both levels recover the truth exactly
+    pts, true = make_blobs(2, [30, 25, 35], 6, sep=40.0, noise=0.05)
+    state, labels, _ = hierarchical_one_shot_aggregate(
+        blob_state(pts), shards=3, k=3, sketch_dim=24, seed=0)
+    assert same_partition(labels, true)
+    served = np.asarray(state.params["theta"])
+    for c in np.unique(labels):
+        got = served[labels == c]
+        want = np.broadcast_to(pts[labels == c].mean(axis=0), got.shape)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_ingest_split_matches_single_wave():
+    # the same clients, chunked differently across ingest waves, land in
+    # the same shards (contiguous fill) -> identical composed round
+    pts, _ = make_blobs(3, [20, 20], 5)
+    a = HierarchicalSession(len(pts), shards=2, sketch_dim=16, seed=0)
+    b = HierarchicalSession(len(pts), shards=2, sketch_dim=16, seed=0)
+    a.ingest({"theta": jnp.asarray(pts)})
+    hier_ingest(b, pts, pattern=(3, 11, 6))
+    _, lab_a, _ = a.finalize(k=2)
+    _, lab_b, _ = b.finalize(k=2)
+    np.testing.assert_array_equal(lab_a, lab_b)
+
+
+def test_per_level_comm_accounting():
+    pts, _ = make_blobs(4, [30, 30, 30], 6)
+    sess = HierarchicalSession(len(pts), shards=3, sketch_dim=16, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts)})
+    _, _, info = sess.finalize(k=3)
+    clb = info["comm_level_bytes"]
+    assert clb["level0"] == len(pts) * 16 * 4
+    # top level moves one row per shard-cluster (plus its count), far
+    # below the flat round's per-client uploads
+    m_top = sum(info["per_shard_clusters"])
+    assert clb["level1"] == m_top * (16 + 1) * 4
+    assert clb["level1"] < clb["level0"]
+
+
+def test_sketch_only_hierarchical_round_routes():
+    pts, true = make_blobs(5, [25, 25], 6)
+    flat = HierarchicalSession(len(pts), shards=1, sketch_dim=16, seed=0)
+    sk = flat._sessions[0].sketch_params({"theta": jnp.asarray(pts)})
+    sess = HierarchicalSession(len(pts), shards=2, sketch_dim=16, seed=0)
+    sess.ingest(sketches=sk)
+    state, labels, info = sess.finalize(k=2)
+    assert state is None
+    assert same_partition(labels, true)
+    routed = sess.route(sk)
+    np.testing.assert_array_equal(routed, labels)
+    with pytest.raises(ValueError, match="no parameters"):
+        sess.cluster_model(0)
+
+
+def test_route_and_cluster_model_compose():
+    pts, _ = make_blobs(6, [30, 30, 30], 8)
+    sess = HierarchicalSession(len(pts), shards=3, sketch_dim=32, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts)})
+    state, labels, _ = sess.finalize(k=3)
+    assert sess.n_clusters == 3
+    # every ingested client routes to its own composed cluster
+    sk = sess._sessions[0].sketch_params({"theta": jnp.asarray(pts)})
+    np.testing.assert_array_equal(sess.route(sk), labels)
+    # the served model is the client's own averaged row
+    cid = int(labels[0])
+    np.testing.assert_allclose(
+        np.asarray(sess.cluster_model(cid)["theta"]),
+        np.asarray(state.params["theta"][0]), rtol=1e-6)
+
+
+def test_convex_family_streams_through_hierarchy():
+    pts, true = make_blobs(7, [14, 12, 13], 6, sep=30.0, noise=0.1)
+    sess = HierarchicalSession(len(pts), shards=2, sketch_dim=24, seed=1)
+    sess.ingest({"theta": jnp.asarray(pts)})
+    _, labels, info = sess.finalize(
+        algorithm="clusterpath-device",
+        algo_options={"edges": "knn", "knn_k": 5, "iters": 300})
+    assert info["n_clusters"] == 3
+    assert same_partition(labels, true)
+
+
+# ------------------------------------------------------------ guard rails
+
+def test_keyed_ingest_rejected():
+    sess = HierarchicalSession(8, shards=2, sketch_dim=8)
+    with pytest.raises(ValueError, match="anonymous-only"):
+        sess.ingest({"theta": jnp.zeros((2, 4))}, client_ids=[0, 1])
+
+
+def test_capacity_and_empty_guards():
+    sess = HierarchicalSession(8, shards=2, sketch_dim=8)
+    with pytest.raises(ValueError, match="nothing ingested"):
+        sess.finalize(k=2)
+    with pytest.raises(ValueError, match="capacity exceeded"):
+        sess.ingest({"theta": jnp.zeros((9, 4))})
+    with pytest.raises(ValueError, match="shards"):
+        HierarchicalSession(4, shards=0)
+    with pytest.raises(ValueError, match="capacity"):
+        HierarchicalSession(2, shards=4)
+
+
+def test_simulate_guards_shards_against_mutation():
+    from repro.launch.simulate import simulate
+    with pytest.raises(ValueError, match="shards"):
+        simulate(clients=64, clusters=2, shards=2, churn=4)
+    with pytest.raises(ValueError, match="shards"):
+        simulate(clients=64, clusters=2, shards=2, method="ifca")

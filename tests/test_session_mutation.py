@@ -389,3 +389,44 @@ if HAVE_HYPOTHESIS:
         np.testing.assert_array_equal(
             np.asarray(state.params["theta"]),
             np.asarray(ref_state.params["theta"]))
+
+
+@pytest.mark.parametrize("spec", ["max_age=3.5", "max_age=x", "max_age=0",
+                                  "max_age=-2"])
+def test_make_staleness_policy_rejects_bad_max_age(spec):
+    """Malformed CLI spellings must raise one ValueError echoing the
+    spec string, not a raw int() traceback or a silent no-op policy."""
+    with pytest.raises(ValueError, match="invalid staleness spec") as ei:
+        make_staleness_policy(spec)
+    assert spec in str(ei.value)
+    assert "max_age" in str(ei.value)
+
+
+@pytest.mark.parametrize("spec", ["exp_decay=x", "exp_decay=0",
+                                  "exp_decay=-1.5"])
+def test_make_staleness_policy_rejects_bad_half_life(spec):
+    with pytest.raises(ValueError, match="invalid staleness spec") as ei:
+        make_staleness_policy(spec)
+    assert spec in str(ei.value)
+
+
+# ------------------------------------------------- route host-sync budget
+
+def test_route_batch_is_a_single_host_sync(monkeypatch):
+    """The batched route path must cross the host boundary exactly once
+    per batch — labels and the drift accumulator ride one device_get."""
+    pts, _ = make_blobs(0, [8, 8], 6)
+    sess = keyed_session(pts, list(range(len(pts))), sketch_dim=16)
+    sess.finalize(k=2)
+    sk = sess.sketch_params({"theta": jnp.asarray(pts)})
+
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: calls.append(1) or real(x))
+    sess.route(np.asarray(sk))          # batch of 16
+    assert calls == [1]
+    calls.clear()
+    sess.route(np.asarray(sk)[0])       # single probe: same budget
+    assert calls == [1]
+    assert sess.drift is not None

@@ -10,7 +10,11 @@ from repro.configs import get_config
 from repro.models import decode_step, forward, init_decode_cache, init_params
 
 
-@pytest.mark.parametrize("arch", ["qwen2_0_5b", "yi_9b", "gemma_2b"])
+# each case replays the full token-by-token decode twice (~10s); the
+# fast gate keeps one GQA representative, the rest run under -m slow
+@pytest.mark.parametrize("arch", [
+    pytest.param("qwen2_0_5b", marks=pytest.mark.slow), "yi_9b",
+    pytest.param("gemma_2b", marks=pytest.mark.slow)])
 def test_splitk_matches_baseline(arch):
     cfg = dataclasses.replace(get_config(arch).reduced(), serve_window=None)
     params = init_params(jax.random.PRNGKey(0), cfg)
