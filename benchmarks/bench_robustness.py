@@ -21,6 +21,32 @@ to ``BENCH_robustness.json``:
     center update can undo (a seeding pathology, not an aggregation
     one).
 
+  * **Breakdown sweep** — coordinated sign-flip at fractions PAST the
+    trim budget (f in {0.25, 0.3, 0.35} with ``trim_beta = 0.1``, so the
+    per-coordinate trim discards at most 20% while up to 35% of uploads
+    collude).  This is where the aggregators' breakdown points separate:
+    ``trimmed_mean`` behaves like the mean once the colluding mass
+    survives the trim (purity collapses to 0.64 at f = 0.3 on the worst
+    seed, MSE 2-3x the clean rows), while ``geometric_median``
+    (Weiszfeld, breakdown 0.5) holds purity and the best MSE through
+    f = 0.35.
+
+  * **Spoof sweep** — colluding sketch-channel forgery
+    (``attack='spoof'``): every attacker uploads ONE shared crafted
+    sketch row, a zero-variance fake cluster planted inside the data
+    cloud (scale 2).  Forged rows co-assign with an honest cluster, so
+    the in-cluster colluding share (28-62% for f = 0.05-0.2) exceeds
+    the trim budget from f = 0.05 on: the mean/trimmed served models
+    are dragged toward the forgery while the geometric median rejects
+    the colluders outright (MSE 2e-4 vs 1e-2 at f = 0.05) whenever the
+    partition is recovered.  The sweep also documents the geometric
+    median's one genuine pathology: an exact zero-variance point mass
+    below breakdown can still capture a Weiszfeld center (the GM of
+    "44% identical + 56% spread" snaps onto the identical mass), so
+    its PURITY under spoof is seeding-dominated — robust aggregation
+    fixes the served models, not a partition the seeding already gave
+    away (the same lesson as the kmeans++ note above).
+
   * **DP sweep** — the (eps, delta)-Gaussian sketch release at clip 1
     for eps in {2..64}: purity/MSE vs privacy budget, overlaid against
     the paper's separability threshold in the style of
@@ -53,6 +79,9 @@ SCHEMA_VERSION = 1
 
 BYZ_FRACS = (0.0, 0.05, 0.1, 0.15, 0.2)
 AGGREGATORS = ("mean", "trimmed_mean", "median")
+BREAKDOWN_FRACS = (0.25, 0.3, 0.35)
+SPOOF_FRACS = (0.05, 0.1, 0.15, 0.2)
+ROBUST_AGGREGATORS = ("mean", "trimmed_mean", "geometric_median")
 SEEDS = (0, 1)
 DP_EPSILONS = (2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
 
@@ -62,6 +91,12 @@ BASE = dict(clients=1024, clusters=8, dim=16, samples=64, wave=512,
 # Byzantine rows: random-seed multi-restart Lloyd (see module docstring)
 # with the trim budget above the attacked fraction
 BYZ = dict(init="random", restarts=8, trim_beta=0.25)
+# breakdown/spoof rows: the trim budget deliberately BELOW the attacked
+# fraction — the regime that separates trimmed_mean from the geometric
+# median's 0.5 breakdown
+ROBUST = dict(init="random", restarts=8, trim_beta=0.1)
+SPOOF_SCALE = 2.0    # forged row inside the data cloud (far blobs just
+                     # steal a center cleanly for every aggregator)
 # DP rows: no attacker blobs -> kmeans++ seeding is the reliable choice
 DP = dict(init="kmeans++", restarts=4, aggregator="mean")
 
@@ -89,26 +124,53 @@ def _dp_separability(eps: float, *, clients, clusters, dim, samples,
     return achieved, predicted
 
 
-def run(*, base=None, byz=None, dp=None, byz_fracs=BYZ_FRACS,
-        aggregators=AGGREGATORS, seeds=SEEDS, dp_epsilons=DP_EPSILONS,
-        out: str = OUT):
+def run(*, base=None, byz=None, robust=None, dp=None, byz_fracs=BYZ_FRACS,
+        aggregators=AGGREGATORS, breakdown_fracs=BREAKDOWN_FRACS,
+        spoof_fracs=SPOOF_FRACS, robust_aggregators=ROBUST_AGGREGATORS,
+        seeds=SEEDS, dp_epsilons=DP_EPSILONS, out: str = OUT):
     base = {**BASE, **(base or {})}
     byz = {**BYZ, **(byz or {})}
+    robust = {**ROBUST, **(robust or {})}
     dp = {**DP, **(dp or {})}
     rows = []
+
+    def _quality_row(sweep, frac, **kw):
+        s = simulate(**base, seed=kw.pop("seed"),
+                     scenario="byzantine", **kw)
+        # the per-run obs snapshot / serving blocks are engine-bench
+        # concerns; robustness rows track quality only
+        s.pop("obs", None), s.pop("serving", None), s.pop("qps_server", None)
+        rows.append({"sweep": sweep, "frac": frac, **s})
+        return s
 
     for f in byz_fracs:
         for seed in seeds:
             for agg in aggregators:
-                s = simulate(**base, **byz, seed=seed, aggregator=agg,
-                             scenario="byzantine",
-                             scenario_options={"frac": f,
-                                               "attack": "sign_flip"})
-                # the per-run obs snapshot / serving block are engine-
-                # bench concerns; robustness rows track quality only
-                s.pop("obs", None), s.pop("serving", None)
-                rows.append({"sweep": "byzantine", "frac": f, **s})
+                s = _quality_row(
+                    "byzantine", f, **byz, seed=seed, aggregator=agg,
+                    scenario_options={"frac": f, "attack": "sign_flip"})
                 emit(f"bench_rob/byz/f{f:g}/s{seed}/{agg}", 0.0,
+                     f"purity={s['purity']:.3f}:mse={s['mse']:.3g}")
+
+    # past the trim budget: 2*trim_beta < f <= geometric median breakdown
+    for f in breakdown_fracs:
+        for seed in seeds:
+            for agg in robust_aggregators:
+                s = _quality_row(
+                    "breakdown", f, **robust, seed=seed, aggregator=agg,
+                    scenario_options={"frac": f, "attack": "sign_flip"})
+                emit(f"bench_rob/brk/f{f:g}/s{seed}/{agg}", 0.0,
+                     f"purity={s['purity']:.3f}:mse={s['mse']:.3g}")
+
+    # colluding sketch-channel forgery inside the data cloud
+    for f in spoof_fracs:
+        for seed in seeds:
+            for agg in robust_aggregators:
+                s = _quality_row(
+                    "spoof", f, **robust, seed=seed, aggregator=agg,
+                    scenario_options={"frac": f, "attack": "spoof",
+                                      "scale": SPOOF_SCALE})
+                emit(f"bench_rob/spoof/f{f:g}/s{seed}/{agg}", 0.0,
                      f"purity={s['purity']:.3f}:mse={s['mse']:.3g}")
 
     for eps in (*dp_epsilons, None):     # None = the eps->inf baseline
@@ -116,7 +178,7 @@ def run(*, base=None, byz=None, dp=None, byz_fracs=BYZ_FRACS,
         s = simulate(**base, **dp, seed=seeds[0],
                      scenario="dp" if eps is not None else None,
                      scenario_options=opts)
-        s.pop("obs", None), s.pop("serving", None)
+        s.pop("obs", None), s.pop("serving", None), s.pop("qps_server", None)
         ach, pred = _dp_separability(eps, seed=seeds[0], **base)
         row = {"sweep": "dp", "epsilon": eps, **s,
                "achieved_alpha": ach, "predicted_alpha": pred,
@@ -133,8 +195,8 @@ def run(*, base=None, byz=None, dp=None, byz_fracs=BYZ_FRACS,
     # the headline numbers the PR's acceptance pins: at 10% sign-flip
     # attackers the robust rows hold purity while the mean's served
     # models have degraded by orders of magnitude vs its clean rows
-    def _sel(frac, agg):
-        return [r for r in rows if r["sweep"] == "byzantine"
+    def _sel(frac, agg, sweep="byzantine"):
+        return [r for r in rows if r["sweep"] == sweep
                 and r["frac"] == frac and r["aggregator"] == agg]
 
     crit = None
@@ -154,11 +216,31 @@ def run(*, base=None, byz=None, dp=None, byz_fracs=BYZ_FRACS,
              f"trim_purity={crit['trimmed_purity_min']:.3f}:"
              f"mean_mse_x={crit['mean_mse_degradation_x']:.3g}")
 
+    # past-breakdown headline: at f = 0.3 > 2*trim_beta the geometric
+    # median holds purity and the best MSE where trimmed_mean degrades
+    crit_breakdown = None
+    if 0.3 in breakdown_fracs:
+        gm, tm = _sel(0.3, "geometric_median", "breakdown"), \
+                 _sel(0.3, "trimmed_mean", "breakdown")
+        crit_breakdown = {
+            "frac": 0.3,
+            "trim_beta": robust["trim_beta"],
+            "geomed_purity_min": min(r["purity"] for r in gm),
+            "trimmed_purity_min": min(r["purity"] for r in tm),
+            "geomed_mse_max": max(r["mse"] for r in gm),
+            "trimmed_mse_max": max(r["mse"] for r in tm),
+        }
+        emit("bench_rob/criterion_breakdown", 0.0,
+             f"geomed_purity={crit_breakdown['geomed_purity_min']:.3f}:"
+             f"trim_purity={crit_breakdown['trimmed_purity_min']:.3f}")
+
     report = {"bench": "robustness", "schema_version": SCHEMA_VERSION,
               "backend": jax.default_backend(),
-              "config": {"base": base, "byzantine": byz, "dp": dp,
+              "config": {"base": base, "byzantine": byz, "robust": robust,
+                         "spoof_scale": SPOOF_SCALE, "dp": dp,
                          "seeds": list(seeds)},
-              "criterion": crit, "rows": rows}
+              "criterion": crit, "criterion_breakdown": crit_breakdown,
+              "rows": rows}
     with open(out, "w") as fh:
         json.dump(report, fh, indent=2)
     emit("bench_rob/report", 0.0, out)
@@ -173,8 +255,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.reduced:
         return run(base=dict(clients=256, wave=128),
-                   byz=dict(restarts=4),
-                   byz_fracs=(0.0, 0.1), seeds=(0,),
+                   byz=dict(restarts=4), robust=dict(restarts=4),
+                   byz_fracs=(0.0, 0.1), breakdown_fracs=(0.3,),
+                   spoof_fracs=(0.1,), seeds=(0,),
                    dp_epsilons=(8.0, 32.0), out=args.out)
     return run(out=args.out)
 

@@ -15,7 +15,10 @@ them:
     ``knn-approx`` convex row must match the exact ``knn`` row's
     purity within slack while beating its edge-build wall-clock;
     ``BENCH_robustness.json`` must be schema_version 1 with the
-    robustness row keys.
+    robustness row keys; ``BENCH_serving.json`` must be schema_version
+    1 with the loadgen row keys, >= 2 closed-loop concurrency points,
+    and a passing batched-beats-direct criterion at every point the
+    loadgen marked ``pass``.
   * ``--quick``: re-run the cheapest engine row (kmeans-device, C=256)
     through the real ``bench_engine_scale`` path into a temp file and
     compare it against the committed baseline row under per-metric
@@ -42,9 +45,11 @@ for p in (ROOT, os.path.join(ROOT, "src")):
 
 ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
 ROBUSTNESS_JSON = os.path.join(ROOT, "BENCH_robustness.json")
+SERVING_JSON = os.path.join(ROOT, "BENCH_serving.json")
 
 ENGINE_SCHEMA_VERSION = 4
 ROBUSTNESS_SCHEMA_VERSION = 1
+SERVING_SCHEMA_VERSION = 1
 
 ENGINE_ROW_KEYS = {
     "clients", "algorithm", "phases", "purity", "n_clusters_recovered",
@@ -63,6 +68,16 @@ ENGINE_ROW_KEYS = {
 HIER_MIN_CLIENTS = 100_000
 HIER_MIN_PURITY = 0.99
 ROBUSTNESS_ROW_KEYS = {"sweep", "scenario", "aggregator", "purity"}
+
+SERVING_ROW_KEYS = {
+    "mode", "batched", "callers", "rate", "max_batch", "max_wait_ms",
+    "queue_depth", "ingest_waves", "backpressure", "flush_size_p50",
+    "flush_size_p95", "flush_size_max", "queue_depth_p95",
+    "staleness_at_serve_p95", "refinalize_under_load_ms", "drops",
+    "n_requests", "n_errors", "timeouts", "qps", "route_p50_ms",
+    "route_p99_ms", "duration_s", "clients", "clusters", "sketch_dim",
+}
+SERVING_MIN_CLOSED_POINTS = 2
 
 # --quick tolerances vs the committed baseline row
 PURITY_SLACK = 0.02          # absolute purity drop allowed
@@ -173,6 +188,46 @@ def validate_robustness(report: dict, failures: list) -> None:
                + (f"; missing {sorted(missing)}" if missing else ""))
 
 
+def validate_serving(report: dict, failures: list) -> None:
+    """Schema 1 of the RouteServer loadgen report: full row schema,
+    >= 2 closed-loop concurrency points whose batched rows beat their
+    per-request twins, an ingest-while-serving row proving the
+    double-buffered refinalize ran under route traffic, and zero
+    dropped requests anywhere."""
+    _check(failures,
+           report.get("schema_version") == SERVING_SCHEMA_VERSION,
+           f"serving schema_version == {SERVING_SCHEMA_VERSION} "
+           f"(got {report.get('schema_version')})")
+    rows = report.get("rows") or []
+    _check(failures, bool(rows), "serving report has rows")
+    for i, row in enumerate(rows):
+        missing = SERVING_ROW_KEYS - set(row)
+        _check(failures, not missing,
+               f"serving row {i} ({row.get('mode')}/"
+               f"batched={row.get('batched')}/callers={row.get('callers')})"
+               f" has required keys" + (f"; missing {sorted(missing)}"
+                                        if missing else ""))
+        if not missing:
+            _check(failures, row["drops"] == 0 and row["n_errors"] == 0,
+                   f"serving row {i} drops == 0 and n_errors == 0 "
+                   f"(got {row['drops']}/{row['n_errors']})")
+    crit = report.get("criterion") or {}
+    _check(failures, len(crit) >= SERVING_MIN_CLOSED_POINTS,
+           f"serving criterion has >= {SERVING_MIN_CLOSED_POINTS} "
+           f"closed-loop concurrency points (got {len(crit)})")
+    for point, c in crit.items():
+        _check(failures, bool(c.get("pass")),
+               f"serving criterion {point}: batched "
+               f"{c.get('batched_qps', 0):.0f}/s beats per-request "
+               f"{c.get('direct_qps', 0):.0f}/s")
+    under = [r for r in rows if r.get("ingest_waves")]
+    ok = bool(under) and all(r["refinalize_under_load_ms"] is not None
+                             for r in under)
+    _check(failures, ok,
+           "serving report has an ingest-while-serving row with a "
+           "measured refinalize_under_load_ms")
+
+
 def _row_key(row: dict):
     return (row["algorithm"], row.get("edges") or "complete",
             row["clients"], row.get("shards", 1))
@@ -243,12 +298,14 @@ def main(argv=None) -> int:
                          "no-flag default)")
     ap.add_argument("--engine-json", default=ENGINE_JSON)
     ap.add_argument("--robustness-json", default=ROBUSTNESS_JSON)
+    ap.add_argument("--serving-json", default=SERVING_JSON)
     args = ap.parse_args(argv)
 
     failures: list = []
     engine = _load(args.engine_json)
     validate_engine(engine, failures)
     validate_robustness(_load(args.robustness_json), failures)
+    validate_serving(_load(args.serving_json), failures)
     if args.quick and not args.validate_only:
         quick_check(engine, failures)
 

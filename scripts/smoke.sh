@@ -5,18 +5,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-# Streaming-session + edge-set + device convex + hierarchy gates: the
-# newest engine paths fail fast and loudly before the multi-minute full
-# suite below.
+# Streaming-session + edge-set + device convex + hierarchy + serving +
+# runtime gates: the newest engine paths fail fast and loudly before the
+# multi-minute full suite below.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" \
     --durations=20 \
     tests/test_session.py tests/test_edges.py tests/test_device_convex.py \
-    tests/test_hierarchy.py
+    tests/test_hierarchy.py tests/test_serving.py tests/test_runtime.py
 
 # The fast gate must not silently shrink: @slow markings, marker typos
 # and bad deselects all surface as a collected-count drift here.
 # Update the expected count when tests are added/removed on purpose.
-EXPECTED_FAST_GATE_TESTS=391
+EXPECTED_FAST_GATE_TESTS=425
 collected=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     -m "not slow" --collect-only 2>/dev/null | tail -1 | grep -oE '[0-9]+' | head -1)
 if [ "$collected" != "$EXPECTED_FAST_GATE_TESTS" ]; then
@@ -43,6 +43,8 @@ from repro.core.engine import AggregationSession, HierarchicalSession
 from repro.core.engine import list_aggregators, list_edge_sets, make_aggregator
 from repro.core.federated_methods import list_federated_methods
 from repro.scenarios import build_scenario, list_scenarios
+from repro.serving import BackpressureError, RouteServer, RouteTimeout
+from repro import runtime
 
 assert len(list_algorithms()) >= 8, list_algorithms()
 assert "odcl" in list_methods()
@@ -55,8 +57,13 @@ assert {"complete", "knn", "knn-approx"} <= set(list_edge_sets())
 assert callable(AggregationSession)
 assert callable(HierarchicalSession)
 assert {"odcl", "ifca", "fedavg", "local-only"} <= set(list_federated_methods())
-assert {"mean", "trimmed_mean", "median"} <= set(list_aggregators())
+assert {"mean", "trimmed_mean", "median",
+        "geometric_median"} <= set(list_aggregators())
 assert make_aggregator("trimmed_mean", beta=0.2).beta == 0.2
+assert make_aggregator("geometric_median").breakdown == 0.5
+assert callable(RouteServer) and issubclass(RouteTimeout, Exception)
+assert issubclass(BackpressureError, Exception)
+assert callable(runtime.apply_env_presets)
 assert {"drift", "longtail", "byzantine", "dp"} <= set(list_scenarios())
 assert build_scenario("longtail+byzantine", frac=0.1).transforms_sketches is False
 print("benchmark driver imports OK;",
@@ -139,6 +146,17 @@ PYTHONPATH=src python -m repro.launch.train --reduced --clients 4 \
 PYTHONPATH=src python -m repro.launch.serve --reduced --batch 2 \
     --prompt-len 8 --gen 4 --ckpt-dir "$SMOKE_CKPT" --route-by-sketch \
     --clusters 2 --client 3 --route-sketch-dim 32
+
+# concurrent serving gate: tiny closed-loop load generation through the
+# RouteServer (cross-caller batching, bounded queue, request timeouts)
+# with a floor on sustained route throughput.  No --require-criterion:
+# at 2 callers there is not enough concurrency for batching to win; the
+# full-size criterion lives in the committed BENCH_serving.json and is
+# validated by the check_bench_regression gate at the bottom.
+PYTHONPATH=src python -m repro.serving.loadgen \
+    --clients 256 --clusters 4 --sketch-dim 32 --callers 2 --duration 2 \
+    --max-batch 16 --no-ingest --floor-qps 50 \
+    --out "$SMOKE_CKPT/BENCH_serving.json"
 
 # reduced robustness bench: Byzantine x aggregator + DP-epsilon sweeps
 # end-to-end, written to a throwaway path (the committed

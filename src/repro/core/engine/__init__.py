@@ -66,6 +66,7 @@ auto-upgrades too.
 """
 from repro.core.engine.aggregators import (
     Aggregator,
+    GeometricMedianAggregator,
     MeanAggregator,
     MedianAggregator,
     TrimmedMeanAggregator,
@@ -113,6 +114,7 @@ __all__ = [
     "Edges",
     "EdgeSet",
     "ExpDecay",
+    "GeometricMedianAggregator",
     "KnnEdges",
     "MeanAggregator",
     "MedianAggregator",

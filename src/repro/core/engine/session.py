@@ -58,7 +58,7 @@ graph — streams the same way.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +109,40 @@ def _mean_row_scale(pts):
     inertia itself is degenerate (~0)."""
     centred = pts - jnp.mean(pts, axis=0, keepdims=True)
     return jnp.mean(jnp.sum(centred * centred, axis=1))
+
+
+class SessionSnapshot(NamedTuple):
+    """An immutable view of the live rows at one logical clock tick.
+
+    ``snapshot()`` gathers the live sketch/param rows into standalone
+    device arrays; jnp arrays are immutable and every later ingest
+    rebinds the session's buffers functionally, so the snapshot stays
+    valid while ingest keeps mutating the live buffers underneath —
+    the double-buffer half of ingest-while-finalize.  ``clock`` keys
+    the serialized-replay equivalence contract: a round computed from
+    this snapshot is bit-exact with a sequential replay that finalizes
+    right after the ``clock``-th ingested wave.
+    """
+    sketches: jnp.ndarray          # (count, sketch_dim), live rows only
+    params: Optional[object]       # stacked live-params pytree or None
+    weights: Optional[object]      # staleness weights or None
+    count: int                     # live clients at snapshot time
+    clock: int                     # session clock at snapshot time
+
+
+class ServedRound(NamedTuple):
+    """Everything the serving paths read, bundled so a finalize can
+    publish its result as ONE attribute write — atomic under the GIL,
+    which is what lets a background finalize swap the served round
+    while concurrent ``route()`` callers keep reading the old one."""
+    out: tuple                     # (state | None, labels, info)
+    centers: jnp.ndarray           # (K', sketch_dim) active centers
+    first_idx: np.ndarray          # (K',) one member index per cluster
+    n_clusters: int
+    finalized_d2: float            # mean row d^2 at finalize (drift anchor)
+    finalized_scale: float         # mean row scale (degenerate fallback)
+    clock: int                     # snapshot clock this round was built from
+    count: int                     # snapshot live-client count
 
 
 class AggregationSession:
@@ -166,20 +200,15 @@ class AggregationSession:
         self._clock = 0                # logical time, +1 per ingested wave
         # ---- finalize / serving state --------------------------------
         self._final = None             # round of the CURRENT buffer contents
-        self._serving = None           # last finalized round (stale-ok serving)
+        self._served: Optional[ServedRound] = None  # atomically-swapped
         self._finalize_kwargs = None   # replayed by refinalize()
-        self._n_clusters = 0
-        self._route_centers = None     # (K', sketch_dim) active centers
-        self._first_idx = None         # (K',) one member index per cluster
         # warm-start cache for the incremental re-finalize
         self._warm_algo_name = None
         self._warm_state = None
         self._warm_count = 0
-        # drift bookkeeping: per-row inertia of the finalized clustering
-        # vs the running per-row inertia of everything routed since —
-        # the gauge maybe_refinalize() triggers on
-        self._finalized_d2 = None      # mean row d^2 at finalize time
-        self._finalized_scale = None   # mean row scale (degenerate fallback)
+        # drift bookkeeping: the finalized anchor lives in the served
+        # round; these accumulate routed traffic's inertia since the
+        # last install — the gauge maybe_refinalize() triggers on
         self._routed_d2_sum = 0.0      # accumulated routed row d^2
         self._routed_n = 0
 
@@ -488,6 +517,43 @@ class AggregationSession:
 
     # ---------------------------------------------------------- finalize
 
+    def snapshot(self) -> SessionSnapshot:
+        """Atomically capture the live rows at the current clock.
+
+        The returned arrays are standalone (immutable jnp values; the
+        session rebinds its buffers functionally on every ingest), so a
+        finalize computed from a snapshot on a background thread stays
+        bit-exact even while ingest keeps mutating the live buffers —
+        the double-buffer half of ingest-while-finalize.  Callers that
+        ingest from multiple threads must serialize ``ingest`` and
+        ``snapshot`` against each other (``serving.RouteServer`` does)
+        so the snapshot lands between wave commits at a definite clock.
+        """
+        self.evict_stale()
+        if self._count == 0:
+            raise ValueError("nothing ingested")
+        rows = self._live_rows()
+        if rows.size == self._high:
+            sketches = self._sketches[:self._high]
+            params = (None if self._params is None else
+                      jax.tree_util.tree_map(lambda l: l[:self._high],
+                                             self._params))
+        else:
+            rows_j = jnp.asarray(rows, jnp.int32)
+            sketches, params = cached_program(_gather_rows_program)(
+                (self._sketches, self._params), rows_j)
+        if jax.default_backend() != "cpu":
+            # ingest donates the capacity buffers on accelerator
+            # backends; force materialized copies so the snapshot never
+            # aliases memory a later wave is allowed to overwrite
+            sketches = jnp.array(sketches, copy=True)
+            if params is not None:
+                params = jax.tree_util.tree_map(
+                    lambda l: jnp.array(l, copy=True), params)
+        return SessionSnapshot(sketches=sketches, params=params,
+                               weights=self._live_weights(rows),
+                               count=self._count, clock=self._clock)
+
     def finalize(self, *, algorithm="kmeans-device", k: Optional[int] = None,
                  algo_options: Optional[dict] = None,
                  engine: str = "device", aggregator="mean"):
@@ -500,16 +566,18 @@ class AggregationSession:
         come back and routing becomes available).  The device path is
         bit-exact with the fused round on the same clients.
         ``aggregator`` selects the per-cluster parameter reduction from
-        the registry (``mean`` | ``trimmed_mean`` | ``median`` | an
-        ``Aggregator`` instance) on both engines.  The call's arguments
-        are remembered: ``refinalize()`` / ``maybe_refinalize()`` replay
-        them warm-started.
+        the registry (``mean`` | ``trimmed_mean`` | ``median`` |
+        ``geometric_median`` | an ``Aggregator`` instance) on both
+        engines.  The call's arguments are remembered: ``refinalize()``
+        / ``maybe_refinalize()`` replay them warm-started.
+
+        Equivalent to ``finalize_snapshot(self.snapshot(), ...)`` —
+        concurrent servers take the snapshot under their ingest lock
+        and run the compute off-thread instead.
         """
-        kwargs = dict(algorithm=algorithm, k=k, algo_options=algo_options,
-                      engine=engine, aggregator=aggregator)
-        out = self._run_finalize(warm=False, **kwargs)
-        self._finalize_kwargs = kwargs
-        return out
+        return self.finalize_snapshot(
+            self.snapshot(), algorithm=algorithm, k=k,
+            algo_options=algo_options, engine=engine, aggregator=aggregator)
 
     def refinalize(self):
         """Re-run the last ``finalize`` configuration over the current
@@ -519,7 +587,8 @@ class AggregationSession:
         otherwise).  Requires a prior ``finalize()``."""
         if self._finalize_kwargs is None:
             raise ValueError("refinalize() needs a prior finalize()")
-        return self._run_finalize(warm=True, **self._finalize_kwargs)
+        return self.finalize_snapshot(self.snapshot(), warm=True,
+                                      **self._finalize_kwargs)
 
     def maybe_refinalize(self, threshold: float = 1.5):
         """Drift-triggered incremental re-finalize: when the ``drift``
@@ -533,14 +602,32 @@ class AggregationSession:
         obs.count("session.refinalize.triggered")
         return self.refinalize()
 
-    def _run_finalize(self, *, algorithm, k, algo_options, engine,
-                      aggregator, warm: bool):
+    def finalize_snapshot(self, snap: SessionSnapshot, *, warm: bool = False,
+                          **kwargs):
+        """Compute a round from ``snap`` and publish it: the synchronous
+        compose of ``compute_round`` + ``install_round``.  Accepts the
+        same keyword arguments as ``finalize``."""
+        out, served = self.compute_round(snap, warm=warm, **kwargs)
+        return self.install_round(out, served)
+
+    def compute_round(self, snap: SessionSnapshot, *, warm: bool = False,
+                      algorithm="kmeans-device", k: Optional[int] = None,
+                      algo_options: Optional[dict] = None,
+                      engine: str = "device", aggregator="mean"):
+        """Steps 2-4 over a snapshot WITHOUT touching the serving state.
+
+        Returns ``(out, served)`` where ``out`` is the usual round tuple
+        and ``served`` is the ``ServedRound`` that ``install_round``
+        publishes.  Safe to run on a background thread while ingest and
+        route keep going (the warm-start cache is the one piece of
+        shared mutable state — concurrent ``compute_round`` calls must
+        be serialized by the caller, as ``RouteServer`` does with its
+        finalize lock)."""
         if engine not in ("auto", "host", "device"):
             raise ValueError(f"engine must be auto|host|device, got "
                              f"{engine!r}")
-        self.evict_stale()
-        if self._count == 0:
-            raise ValueError("nothing ingested")
+        kwargs = dict(algorithm=algorithm, k=k, algo_options=algo_options,
+                      engine=engine, aggregator=aggregator)
         if engine == "host":
             # explicit device names downgrade to their host base (or
             # raise for twin-less device-only families) instead of
@@ -559,34 +646,34 @@ class AggregationSession:
         if use_device:
             algo = dev
         k_eff = k if algo.requires_k else None
-        rows = self._live_rows()
-        if rows.size == self._high:
-            sketches = self._sketches[:self._high]
-            params = (None if self._params is None else
-                      jax.tree_util.tree_map(lambda l: l[:self._high],
-                                             self._params))
-        else:
-            rows_j = jnp.asarray(rows, jnp.int32)
-            sketches, params = cached_program(_gather_rows_program)(
-                (self._sketches, self._params), rows_j)
-        weights = self._live_weights(rows)
         span = "session.refinalize" if warm else "session.finalize"
-        with obs.span(span, count=self._count,
+        with obs.span(span, count=snap.count,
                       algorithm=getattr(algo, "name", str(algo)),
                       engine="device" if use_device else "host"):
             if use_device:
-                out = self._finalize_device(algo, k_eff, algo_options,
-                                            sketches, params, aggregator,
-                                            weights, warm)
+                out, served = self._finalize_device(
+                    algo, k_eff, algo_options, snap, aggregator, warm)
             else:
-                out = self._finalize_host(algo, k_eff, algo_options,
-                                          sketches, params, aggregator,
-                                          weights)
-        self._final = out
-        self._serving = out
+                out, served = self._finalize_host(
+                    algo, k_eff, algo_options, snap, aggregator)
+        self._finalize_kwargs = kwargs
+        return out, served
+
+    def install_round(self, out, served: ServedRound):
+        """Publish a computed round: ONE attribute write swaps what
+        ``route()`` / ``cluster_model()`` serve (atomic under the GIL),
+        and the drift gauge re-anchors on the new round.  ``_final``
+        (the this-round-matches-the-buffer marker) is only set when the
+        snapshot's clock is still current — a round computed while
+        ingest kept mutating stays served but is known stale."""
+        self._served = served
+        self._routed_d2_sum = 0.0
+        self._routed_n = 0
+        if served.clock == self._clock:
+            self._final = out
         return out
 
-    def _warm_usable(self, algo, warm: bool) -> bool:
+    def _warm_usable(self, algo, warm: bool, count: int) -> bool:
         if not warm or self._warm_state is None:
             return False
         if getattr(algo, "name", None) != self._warm_algo_name:
@@ -594,19 +681,19 @@ class AggregationSession:
         if not callable(getattr(algo, "device_warm_call", None)):
             return False
         if (getattr(algo, "warm_requires_same_count", False)
-                and self._count != self._warm_count):
+                and count != self._warm_count):
             obs.count("session.refinalize.cold_fallback")
             return False
         return True
 
-    def _cache_warm_state(self, algo, res) -> None:
+    def _cache_warm_state(self, algo, res, count: int) -> None:
         if not callable(getattr(algo, "device_warm_call", None)):
             return
         state = algo.warm_state(res)
         if state is not None:
             self._warm_algo_name = getattr(algo, "name", None)
             self._warm_state = state
-            self._warm_count = self._count
+            self._warm_count = count
 
     def _average_params(self, res, params, aggregator, weights):
         """The finalize's parameter-averaging phase: the shared
@@ -626,15 +713,16 @@ class AggregationSession:
             res.labels, res.centers, params,
             jnp.asarray(weights, jnp.float32))
 
-    def _finalize_device(self, algo, k, algo_options, sketches, params,
-                         aggregator="mean", weights=None, warm=False):
+    def _finalize_device(self, algo, k, algo_options, snap, aggregator,
+                         warm):
+        sketches, params = snap.sketches, snap.params
         cluster_key = jax.random.PRNGKey(self.cluster_seed)
         opts = tuple(sorted((algo_options or {}).items()))
         # the cluster and mean phases run as two AOT programs (labels /
         # centers stay on device between them) so the obs layer sees the
         # finalize latency split; the warm path swaps only the cluster
         # program (the mean phase is identical either way)
-        if self._warm_usable(algo, warm):
+        if self._warm_usable(algo, warm, snap.count):
             res = cached_program(_warm_cluster_program, algo, k, opts)(
                 cluster_key, sketches, self._warm_state)
             mode = "warm"
@@ -642,57 +730,70 @@ class AggregationSession:
             res = cached_program(_cluster_program, algo, k, opts)(
                 cluster_key, sketches)
             mode = "cold"
-        self._cache_warm_state(algo, res)
+        self._cache_warm_state(algo, res, snap.count)
         if params is None:
             labels, uniq, first = compact_labels(res.labels)
             info = {"n_clusters": int(len(uniq)),
                     "meta": meta_to_host(res.meta),
-                    "engine": "device", "count": self._count,
-                    "refinalize": mode if warm else None}
-            self._set_routing(res.centers[jnp.asarray(uniq)], first,
-                              int(len(uniq)))
-            self._note_finalized(sketches, res.centers, res.labels)
-            return None, labels, info
-        new_params = self._average_params(res, params, aggregator, weights)
+                    "engine": "device", "count": snap.count,
+                    "refinalize": mode if warm else None,
+                    "snapshot_clock": snap.clock}
+            out = (None, labels, info)
+            served = self._make_served(out, res.centers[jnp.asarray(uniq)],
+                                       first, int(len(uniq)), sketches,
+                                       res.centers, res.labels, snap)
+            return out, served
+        new_params = self._average_params(res, params, aggregator,
+                                          snap.weights)
         state = FederatedState(params=params, opt_state=None,
-                               n_clients=self._count, step=0)
+                               n_clients=snap.count, step=0)
         new_state, labels, info, uniq, first = materialize_round(
             new_params, res, state)
-        info["count"] = self._count
+        info["count"] = snap.count
         info["refinalize"] = mode if warm else None
-        self._set_routing(res.centers[jnp.asarray(uniq)], first,
-                          int(len(uniq)))
-        self._note_finalized(sketches, res.centers, res.labels)
-        return new_state, labels, info
+        info["snapshot_clock"] = snap.clock
+        out = (new_state, labels, info)
+        served = self._make_served(out, res.centers[jnp.asarray(uniq)],
+                                   first, int(len(uniq)), sketches,
+                                   res.centers, res.labels, snap)
+        return out, served
 
-    def _note_finalized(self, sketches, centers, labels):
-        """Anchor the drift gauge: record the finalized clustering's mean
-        per-row inertia (plus the absolute row scale, the degenerate-
-        inertia fallback) and reset the routed-traffic accumulator."""
-        self._finalized_d2 = float(
-            _sum_sq_to_assigned(sketches, centers, jnp.asarray(labels))
-        ) / max(self._count, 1)
-        self._finalized_scale = float(_mean_row_scale(sketches))
-        self._routed_d2_sum = 0.0
-        self._routed_n = 0
+    def _make_served(self, out, centers, first_idx, n_clusters, sketches,
+                     all_centers, labels, snap) -> ServedRound:
+        """Bundle a computed round with its drift anchor (the finalized
+        clustering's mean per-row inertia, plus the absolute row scale
+        as the degenerate-inertia fallback) into the one value
+        ``install_round`` swaps in."""
+        finalized_d2 = float(
+            _sum_sq_to_assigned(sketches, all_centers, jnp.asarray(labels))
+        ) / max(snap.count, 1)
+        return ServedRound(out=out, centers=centers,
+                           first_idx=np.asarray(first_idx),
+                           n_clusters=int(n_clusters),
+                           finalized_d2=finalized_d2,
+                           finalized_scale=float(_mean_row_scale(sketches)),
+                           clock=snap.clock, count=snap.count)
 
-    def _finalize_host(self, algo, k, algo_options, sketches, params,
-                       aggregator="mean", weights=None):
+    def _finalize_host(self, algo, k, algo_options, snap, aggregator):
         from repro.core.odcl import run_clustering
 
+        sketches, params, weights = snap.sketches, snap.params, snap.weights
         with obs.span("session.finalize.cluster", engine="host"):
             result = run_clustering(jax.random.PRNGKey(self.cluster_seed),
                                     np.asarray(sketches), algo, k=k,
                                     **(algo_options or {}))
         labels, _, first = compact_labels(result.labels)
         info = {"n_clusters": result.n_clusters, "meta": result.meta,
-                "engine": "host", "count": self._count}
+                "engine": "host", "count": snap.count,
+                "snapshot_clock": snap.clock}
         centers = jnp.asarray(result.centers, jnp.float32)
-        self._set_routing(centers, first, result.n_clusters)
-        self._note_finalized(sketches, centers, jnp.asarray(labels))
-        if params is None:
-            return None, labels, info
         labels_j = jnp.asarray(labels)
+        if params is None:
+            out = (None, labels, info)
+            served = self._make_served(out, centers, first,
+                                       result.n_clusters, sketches, centers,
+                                       labels_j, snap)
+            return out, served
         with obs.span("session.finalize.mean", engine="host"):
             if weights is not None:
                 if get_aggregator(aggregator).name != "mean":
@@ -712,13 +813,11 @@ class AggregationSession:
             jax.block_until_ready(new_params)
         new_state = FederatedState(
             params=new_params, opt_state=jax.vmap(adamw_init)(new_params),
-            n_clients=self._count, step=0)
-        return new_state, labels, info
-
-    def _set_routing(self, centers, first_idx, n_clusters: int):
-        self._route_centers = centers
-        self._first_idx = np.asarray(first_idx)
-        self._n_clusters = int(n_clusters)
+            n_clients=snap.count, step=0)
+        out = (new_state, labels, info)
+        served = self._make_served(out, centers, first, result.n_clusters,
+                                   sketches, centers, labels_j, snap)
+        return out, served
 
     # ------------------------------------------------------------- serve
 
@@ -735,7 +834,8 @@ class AggregationSession:
         mutate the buffers — ``drift`` measures how stale that is, and
         ``maybe_refinalize`` repairs it.
         """
-        if self._serving is None:
+        served = self._served
+        if served is None:
             raise ValueError("route() needs finalize() first")
         if (sketch is None) == (params is None):
             raise ValueError("pass exactly one of sketch or params=")
@@ -745,9 +845,14 @@ class AggregationSession:
         single = sketch.ndim == 1
         pts = sketch[None] if single else sketch
         n = int(pts.shape[0])
+        if n == 0:
+            # tracing a zero-row assign program would succeed and cache
+            # a useless signature; fail loudly instead
+            raise ValueError("route() needs at least one probe "
+                             "(got an empty batch)")
         with obs.span("session.route", n=n):
             labels, batch_d2 = cached_program(_route_program)(
-                pts, self._route_centers)
+                pts, served.centers)
             # one transfer for both outputs — the route hot path's only
             # host sync (asserted by tests/test_session_mutation.py)
             out, batch_d2 = jax.device_get((labels, batch_d2))
@@ -769,39 +874,69 @@ class AggregationSession:
         """Sketch a stacked parameter wave (leading axis = clients) with
         the session's own JL projection, WITHOUT ingesting — the input
         shape batched ``route()`` consumes for request batches."""
+        leaves = jax.tree_util.tree_leaves(wave)
+        if not leaves:
+            raise ValueError("empty parameter wave")
+        if int(leaves[0].shape[0]) == 0:
+            raise ValueError("sketch_params() needs at least one client "
+                             "row (got an empty wave)")
         return jax.vmap(self._sketch_one)(wave)
 
     def cluster_model(self, cluster_id: int):
         """The averaged model of one recovered cluster (a single-model
         pytree, no leading client axis) — what a routed client is served.
         """
-        if self._serving is None:
+        served = self._served
+        if served is None:
             raise ValueError("cluster_model() needs finalize() first")
-        state = self._serving[0]
+        state = served.out[0]
         if state is None:
             raise ValueError("sketch-only session holds no parameters")
         cid = int(cluster_id)
-        if not 0 <= cid < self._n_clusters:
+        if not 0 <= cid < served.n_clusters:
             # a negative id would silently wrap to another cluster's row
             raise IndexError(
-                f"cluster id {cid} out of range for {self._n_clusters} "
+                f"cluster id {cid} out of range for {served.n_clusters} "
                 "recovered clusters")
-        idx = int(self._first_idx[cid])
+        idx = int(served.first_idx[cid])
         return jax.tree_util.tree_map(lambda l: l[idx], state.params)
+
+    @property
+    def clock(self) -> int:
+        """Logical session time: +1 per ingested wave.  The key of the
+        serialized-replay equivalence contract — a snapshot at clock t
+        replays as 'finalize right after the t-th wave'."""
+        return self._clock
+
+    @property
+    def served_round(self) -> Optional[ServedRound]:
+        """The ``ServedRound`` route() currently reads (``None`` before
+        the first finalize) — one immutable value, so concurrent readers
+        see a consistent centers/first_idx/drift-anchor bundle."""
+        return self._served
+
+    @property
+    def finalize_config(self) -> Optional[dict]:
+        """The last finalize()'s arguments (what refinalize replays),
+        or ``None`` before any finalize."""
+        return (None if self._finalize_kwargs is None
+                else dict(self._finalize_kwargs))
 
     @property
     def n_clusters(self) -> int:
         """Recovered cluster count of the clustering currently served."""
-        if self._serving is None:
+        served = self._served
+        if served is None:
             raise ValueError("finalize() first")
-        return self._n_clusters
+        return served.n_clusters
 
     @property
     def route_centers(self) -> jnp.ndarray:
         """(K', sketch_dim) active cluster centers (device-resident)."""
-        if self._serving is None:
+        served = self._served
+        if served is None:
             raise ValueError("finalize() first")
-        return self._route_centers
+        return served.centers
 
     @property
     def drift(self) -> Optional[float]:
@@ -816,12 +951,13 @@ class AggregationSession:
         the gauge cannot explode to ~1e12 and mis-trigger.  ``None``
         until at least one finalize and one route happened.
         """
-        if self._finalized_d2 is None or self._routed_n == 0:
+        served = self._served
+        if served is None or self._routed_n == 0:
             return None
         routed = self._routed_d2_sum / self._routed_n
-        scale = self._finalized_scale or 0.0
-        if self._finalized_d2 > 1e-9 * max(scale, 1e-30):
-            return routed / self._finalized_d2
+        scale = served.finalized_scale or 0.0
+        if served.finalized_d2 > 1e-9 * max(scale, 1e-30):
+            return routed / served.finalized_d2
         return routed / max(scale, 1e-12)
 
     # ------------------------------------------------------------- state

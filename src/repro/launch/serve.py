@@ -18,21 +18,33 @@ Two ways to pick the served model from a stacked federated checkpoint:
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --ckpt-dir ckpts \
       --route-by-sketch --clusters 2 --client 3
+
+``--server`` upgrades --route-by-sketch into the concurrent serving
+frontend: instead of one route for one client, the rebuilt session goes
+behind a ``RouteServer`` and every checkpointed client's sketch is
+routed by concurrent caller threads through the cross-caller batcher:
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --ckpt-dir ckpts \
+      --route-by-sketch --server --server-callers 4 --clusters 2
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro import runtime
 
-from repro import obs
-from repro.checkpoint import latest_step, restore_checkpoint
-from repro.configs import get_config
-from repro.models import init_params
-from repro.models.transformer import (
+runtime.apply_env_presets()  # REPRO_PLATFORM etc. — before jax loads
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import obs  # noqa: E402
+from repro.checkpoint import latest_step, restore_checkpoint  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.models.transformer import (  # noqa: E402
     abstract_params,
     decode_step,
     init_decode_cache,
@@ -96,6 +108,43 @@ def route_from_checkpoint(stacked, cfg, client: int, *, algorithm: str,
     return session.cluster_model(cid), cid, {"labels": labels, **info}
 
 
+def serve_routes(stacked, cfg, *, algorithm: str, clusters: int,
+                 sketch_dim: int, callers: int, duration_s: float,
+                 seed: int = 0) -> dict:
+    """``--server``: rebuild the cluster structure from a stacked
+    checkpoint exactly like ``route_from_checkpoint``, then put the
+    session behind a ``RouteServer`` and route every checkpointed
+    client's sketch from concurrent caller threads through the
+    cross-caller batcher.  Returns a small report dict."""
+    from repro.core.engine.session import AggregationSession
+    from repro.serving.loadgen import closed_loop, warm_route_buckets
+    from repro.serving.server import RouteServer
+
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    session = AggregationSession(n, sketch_dim=sketch_dim, cfg=cfg,
+                                 seed=seed)
+    session.ingest(stacked)
+    session.finalize(algorithm=algorithm, k=clusters, engine="device")
+    probes = np.asarray(session.sketch_params(stacked))
+    max_batch = min(32, max(1, n))
+    warm_route_buckets(session, probes[0], max_batch)
+    with RouteServer(session, max_batch=max_batch, max_wait_ms=0.5) as srv:
+        # every checkpointed client once, through the batched path —
+        # the routed ids are the serving-time cluster assignment
+        routed = [srv.route(p, timeout=30.0) for p in probes]
+        stats = closed_loop(srv, probes, callers=callers,
+                            duration_s=duration_s, batched=True)
+    counts = np.bincount(routed, minlength=session.n_clusters)
+    return {
+        "clients": n,
+        "n_clusters": session.n_clusters,
+        "routed": routed,
+        "cluster_sizes": counts.tolist(),
+        "callers": callers,
+        **stats,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -118,6 +167,19 @@ def main(argv=None):
     ap.add_argument("--route-algorithm", default="kmeans-device",
                     help="registered clustering for --route-by-sketch")
     ap.add_argument("--route-sketch-dim", type=int, default=64)
+    ap.add_argument("--server", action="store_true",
+                    help="concurrent serving mode: rebuild the cluster "
+                         "structure (like --route-by-sketch) and route "
+                         "ALL clients through a RouteServer with "
+                         "concurrent caller threads; without --ckpt-dir "
+                         "a synthetic stacked checkpoint is generated")
+    ap.add_argument("--server-callers", type=int, default=4,
+                    help="closed-loop caller threads for --server")
+    ap.add_argument("--server-duration", type=float, default=2.0,
+                    help="seconds of closed-loop load for --server")
+    ap.add_argument("--server-clients", type=int, default=16,
+                    help="synthetic stacked-checkpoint size when --server "
+                         "runs without --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write every obs span/event (routing, finalize) "
@@ -134,6 +196,51 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
+
+    if args.server:
+        if args.ckpt_dir:
+            step = latest_step(args.ckpt_dir)
+            if step is None:
+                raise SystemExit(f"no checkpoints found in {args.ckpt_dir}")
+            stacked = restore_checkpoint(args.ckpt_dir, step, params)
+            leading = jax.tree_util.tree_leaves(stacked)[0].shape
+            if leading == jax.tree_util.tree_leaves(params)[0].shape:
+                raise SystemExit("--server needs a stacked federated "
+                                 "checkpoint (leading client axis); this "
+                                 "one is a single model")
+            stacked = jax.tree_util.tree_map(
+                lambda l, r: jnp.asarray(l, r.dtype), stacked, params)
+            src = f"checkpoint step {step} ({leading[0]} clients)"
+        else:
+            # no checkpoint: a synthetic stacked federated checkpoint —
+            # per-cluster offsets + small per-client noise, so routing
+            # has real structure to recover
+            n, k = args.server_clients, args.clusters
+            group = jnp.arange(n) % k
+            leaves, treedef = jax.tree_util.tree_flatten(params)
+            stacked_leaves = []
+            for i, leaf in enumerate(leaves):
+                k1, k2 = jax.random.split(jax.random.fold_in(key, i + 1))
+                offs = jax.random.normal(k1, (k,) + leaf.shape, leaf.dtype)
+                noise = 0.05 * jax.random.normal(
+                    k2, (n,) + leaf.shape, leaf.dtype)
+                stacked_leaves.append(leaf[None] + offs[group] + noise)
+            stacked = jax.tree_util.tree_unflatten(treedef, stacked_leaves)
+            src = f"{n} synthetic clients"
+        report = serve_routes(
+            stacked, cfg, algorithm=args.route_algorithm,
+            clusters=args.clusters, sketch_dim=args.route_sketch_dim,
+            callers=args.server_callers, duration_s=args.server_duration,
+            seed=args.seed)
+        print(f"[server] {src}: K'={report['n_clusters']} "
+              f"cluster sizes {report['cluster_sizes']}")
+        print(f"[server] {report['callers']} callers  "
+              f"{report['qps']:.0f} routes/s  "
+              f"p50={report['route_p50_ms']:.2f}ms "
+              f"p99={report['route_p99_ms']:.2f}ms  "
+              f"errors={report['n_errors']} timeouts={report['timeouts']}")
+        return report
+
     if args.ckpt_dir:
         step = latest_step(args.ckpt_dir)
         if step is None:

@@ -110,6 +110,7 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
              max_age: int | None = None,
              refinalize_threshold: float | None = None,
              mutation_rounds: int = 3, drift_scale: float = 2.0,
+             qps_callers: int = 0, qps_duration: float = 2.0,
              mesh=None) -> dict:
     """Generate a K-cluster federation of ``clients`` users, stream the
     wave-solved local ERMs into an ``AggregationSession``, run the
@@ -427,6 +428,43 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
             "batched_routes_per_s": batched_routes_per_s,
         }
 
+    # concurrent QPS serving: the RouteServer front-end over the same
+    # finalized session — M closed-loop caller threads through the
+    # cross-caller batcher vs the same callers on the per-request path
+    qps_server = None
+    if qps_callers > 0:
+        if shards > 1 or method != "odcl":
+            raise ValueError("--qps-callers needs the flat session's "
+                             "one-shot round (shards=1, method='odcl')")
+        from repro.serving.loadgen import closed_loop, warm_route_buckets
+        from repro.serving.server import RouteServer
+        n_probe = min(1024, clients)
+        lab_q = jnp.arange(n_probe, dtype=jnp.int32) % clusters
+        theta_q = _wave_erm(
+            jax.random.fold_in(k_data, 0x9195), optima, lab_q,
+            wave=n_probe, n=samples, d=dim, task=task)
+        probes = np.asarray(session.sketch_params({"theta": theta_q}))
+        warm_route_buckets(session, probes[0], 64)
+        server = RouteServer(session, max_batch=64, max_wait_ms=0.5)
+        server.start()
+        try:
+            direct = closed_loop(server, probes, callers=qps_callers,
+                                 duration_s=qps_duration, batched=False)
+            batched = closed_loop(server, probes, callers=qps_callers,
+                                  duration_s=qps_duration, batched=True)
+        finally:
+            server.stop()
+        qps_server = {
+            "callers": int(qps_callers),
+            "duration_s": float(qps_duration),
+            "direct_qps": direct["qps"],
+            "batched_qps": batched["qps"],
+            "batched_p50_ms": batched["route_p50_ms"],
+            "batched_p99_ms": batched["route_p99_ms"],
+            "timeouts": batched["timeouts"] + direct["timeouts"],
+            "errors": batched["n_errors"] + direct["n_errors"],
+        }
+
     if trace_sink is not None:
         obs.remove_sink(trace_sink)
         trace_sink.close()
@@ -454,6 +492,7 @@ def simulate(*, clients: int, clusters: int, dim: int = 16, samples: int = 64,
         "mse": mse,
         "meta": meta,
         "serving": serving,
+        "qps_server": qps_server,
         "obs": obs.snapshot(),
     }
 
@@ -558,6 +597,12 @@ def main(argv=None):
     ap.add_argument("--refinalize-threshold", type=float, default=None,
                     help="drift ratio above which maybe_refinalize() warm-"
                          "starts a re-finalize after the mutation rounds")
+    ap.add_argument("--qps-callers", type=int, default=0,
+                    help="run the RouteServer QPS probe: this many "
+                         "closed-loop caller threads, per-request vs "
+                         "cross-caller batched (0 = off)")
+    ap.add_argument("--qps-duration", type=float, default=2.0,
+                    help="seconds per QPS measurement loop")
     ap.add_argument("--out", default=None, help="write the summary JSON here")
     args = ap.parse_args(argv)
 
@@ -585,7 +630,8 @@ def main(argv=None):
         finalize_repeats=args.finalize_repeats,
         reupload_frac=args.reupload_frac, churn=args.churn,
         max_age=args.max_age,
-        refinalize_threshold=args.refinalize_threshold)
+        refinalize_threshold=args.refinalize_threshold,
+        qps_callers=args.qps_callers, qps_duration=args.qps_duration)
     ph = summary["phases"]
     print(f"[simulate] C={summary['clients']} K={summary['clusters']} "
           f"task={summary['task']} wave={summary['wave']} "
@@ -630,6 +676,14 @@ def main(argv=None):
                   f"warm p50={'-' if rw is None else format(rw, '.1f')}ms  "
                   f"batched route={'-' if bb is None else format(bb, '.2f')}ms "
                   f"({'-' if sv['batched_routes_per_s'] is None else format(sv['batched_routes_per_s'], '.0f')}/s)")
+    qs = summary["qps_server"]
+    if qs is not None:
+        print(f"[simulate] qps: {qs['callers']} callers  "
+              f"direct {qs['direct_qps']:.0f}/s  "
+              f"batched {qs['batched_qps']:.0f}/s "
+              f"({qs['batched_qps'] / max(qs['direct_qps'], 1e-9):.2f}x)  "
+              f"p50={qs['batched_p50_ms']:.2f}ms "
+              f"p99={qs['batched_p99_ms']:.2f}ms")
     if args.trace:
         print(f"[simulate] trace -> {args.trace}")
     if args.out:

@@ -1,0 +1,27 @@
+"""Concurrent serving subsystem: the QPS front-end over
+``AggregationSession``.
+
+``RouteServer`` (``serving/server.py``) batches concurrent callers'
+route requests into one fused program per flush and runs finalize on
+snapshotted buffers while ingest continues; ``serving/loadgen.py`` is
+the open/closed-loop load generator producing ``BENCH_serving.json``.
+"""
+from repro.serving.batching import (
+    BackpressureError,
+    RequestQueue,
+    RouteFuture,
+    RouteTimeout,
+    ServerClosed,
+    ServingError,
+)
+from repro.serving.server import RouteServer
+
+__all__ = [
+    "RouteServer",
+    "RouteFuture",
+    "RequestQueue",
+    "ServingError",
+    "BackpressureError",
+    "RouteTimeout",
+    "ServerClosed",
+]

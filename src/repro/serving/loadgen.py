@@ -1,0 +1,444 @@
+"""Load generators for the route server -> ``BENCH_serving.json``.
+
+Two driving modes against a ``RouteServer`` over a finalized
+sketch-only session:
+
+  * closed loop — M caller threads, each routing as fast as its last
+    answer returns (fixed concurrency; what the qps criterion uses).
+    ``batched=False`` switches the same callers to the per-request
+    ``route_direct`` baseline, which is what cross-caller batching has
+    to beat.
+  * open loop — Poisson arrivals at a target rate, submitted
+    asynchronously; latency is measured from the INTENDED arrival time
+    (queueing delay included), the honest open-loop convention.
+
+An optional ingest-while-serving mode re-uploads keyed sketch waves
+during the run and triggers one background warm refinalize midway, so
+``staleness_at_serve`` and ``refinalize_under_load_ms`` measure the
+double-buffered ingest-while-finalize path under route traffic.
+
+``BENCH_serving.json`` schema_version 1: one row per (mode, batched,
+concurrency) point with qps, route p50/p99 ms, flush-size and
+queue-depth percentiles, timeout/backpressure counts, staleness at
+serve, and refinalize-under-load latency.
+
+Run as a module (this applies ``repro.runtime`` env presets BEFORE the
+first jax import, so ``REPRO_CPU_THREADS=1`` pins the container)::
+
+    PYTHONPATH=src python -m repro.serving.loadgen \
+        --clients 4096 --clusters 8 --sketch-dim 64 \
+        --callers 4,16 --duration 5 --out BENCH_serving.json
+"""
+from __future__ import annotations
+
+from repro import runtime
+
+runtime.apply_env_presets()        # must precede the first jax import
+
+import argparse                    # noqa: E402
+import json                        # noqa: E402
+import threading                   # noqa: E402
+import time                        # noqa: E402
+from typing import Optional        # noqa: E402
+
+import numpy as np                 # noqa: E402
+
+from repro import obs              # noqa: E402
+from repro.core.engine import AggregationSession   # noqa: E402
+from repro.serving.batching import (               # noqa: E402
+    RouteTimeout,
+    ServingError,
+)
+from repro.serving.server import RouteServer       # noqa: E402
+
+SCHEMA_VERSION = 1
+
+
+# --------------------------------------------------------------- fixture
+
+
+def make_population(*, clients: int, clusters: int, sketch_dim: int,
+                    seed: int = 0, spread: float = 8.0):
+    """A separable Gaussian mixture directly in sketch space: cluster
+    centers at ``spread * N(0, I)``, unit-variance rows.  Returns
+    ``(rows, assignment, centers)`` as numpy arrays."""
+    rng = np.random.default_rng(seed)
+    centers = spread * rng.standard_normal((clusters, sketch_dim))
+    assignment = rng.integers(0, clusters, size=clients)
+    rows = centers[assignment] + rng.standard_normal((clients, sketch_dim))
+    return (rows.astype(np.float32), assignment,
+            centers.astype(np.float32))
+
+
+def build_session(*, clients: int, clusters: int, sketch_dim: int,
+                  seed: int = 0, wave: int = 1024,
+                  capacity: Optional[int] = None):
+    """Ingest the mixture in keyed waves and finalize kmeans-device —
+    the serving fixture every loadgen mode starts from.  Returns
+    ``(session, rows)`` (the rows double as route probes and as the
+    re-upload pool for the ingest-while-serving mode)."""
+    rows, _, _ = make_population(clients=clients, clusters=clusters,
+                                 sketch_dim=sketch_dim, seed=seed)
+    session = AggregationSession(capacity or clients,
+                                 sketch_dim=sketch_dim, seed=seed)
+    for lo in range(0, clients, wave):
+        chunk = rows[lo:lo + wave]
+        session.ingest(sketches=chunk,
+                       client_ids=list(range(lo, lo + len(chunk))))
+    session.finalize(algorithm="kmeans-device", k=clusters)
+    return session, rows
+
+
+def warm_route_buckets(session, probe: np.ndarray, max_batch: int) -> None:
+    """Pre-compile every padded flush signature (1, 2, 4, ...,
+    max_batch) so AOT compiles never land inside a measured run."""
+    n = 1
+    while True:
+        session.route(np.repeat(probe[None], n, axis=0))
+        if n >= max_batch:
+            break
+        n = min(n * 2, max_batch)
+
+
+# ------------------------------------------------------------ generators
+
+
+def closed_loop(server: RouteServer, probes: np.ndarray, *, callers: int,
+                duration_s: float, batched: bool = True,
+                timeout: float = 5.0) -> dict:
+    """Fixed-concurrency driving: each of ``callers`` threads routes
+    back-to-back until the deadline.  Returns qps + latency stats."""
+    start = time.monotonic() + 0.05        # let every thread reach the line
+    stop_at = start + duration_s
+    results: list = [None] * callers
+
+    def worker(tid: int) -> None:
+        lat: list = []
+        n_err = n_to = 0
+        idx = tid
+        while True:
+            now = time.monotonic()
+            if now >= stop_at:
+                break
+            if now < start:
+                time.sleep(start - now)
+                continue
+            sk = probes[idx % len(probes)]
+            idx += callers
+            t0 = time.perf_counter()
+            try:
+                if batched:
+                    server.route(sk, timeout=timeout)
+                else:
+                    server.route_direct(sk)
+            except RouteTimeout:
+                n_to += 1
+                continue
+            except ServingError:
+                n_err += 1
+                continue
+            lat.append((time.perf_counter() - t0) * 1e3)
+        results[tid] = (lat, n_err, n_to)
+
+    threads = [threading.Thread(target=worker, args=(tid,), daemon=True)
+               for tid in range(callers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(duration_s + timeout + 10.0)
+    lats = [v for r in results if r for v in r[0]]
+    n_err = sum(r[1] for r in results if r)
+    n_to = sum(r[2] for r in results if r)
+    return _latency_stats(lats, n_err, n_to, duration_s)
+
+
+def open_loop(server: RouteServer, probes: np.ndarray, *, rate: float,
+              duration_s: float, timeout: float = 5.0) -> dict:
+    """Poisson-arrival driving at ``rate`` requests/s; latency is
+    completion minus INTENDED arrival, so batching delay and queueing
+    both count against the server."""
+    rng = np.random.default_rng(1)
+    arrivals: list = []
+    t = rng.exponential(1.0 / rate)
+    while t < duration_s:
+        arrivals.append(t)
+        t += rng.exponential(1.0 / rate)
+    start = time.monotonic()
+    pending: list = []
+    n_err = 0
+    for i, t_arr in enumerate(arrivals):
+        target = start + t_arr
+        now = time.monotonic()
+        if target > now:
+            time.sleep(target - now)
+        try:
+            fut = server.submit(probes[i % len(probes)], timeout=timeout)
+        except ServingError:
+            n_err += 1         # shed by backpressure / shutdown
+            continue
+        pending.append((target, fut))
+    lats: list = []
+    n_to = 0
+    settle_by = time.monotonic() + timeout + 1.0
+    for target, fut in pending:
+        try:
+            fut.result(max(0.01, settle_by - time.monotonic()))
+            lats.append((fut.done_at - target) * 1e3)
+        except RouteTimeout:
+            n_to += 1
+        except ServingError:
+            n_err += 1
+    stats = _latency_stats(lats, n_err, n_to, duration_s)
+    stats["offered_rate"] = float(rate)
+    return stats
+
+
+def _latency_stats(lats: list, n_err: int, n_to: int,
+                   duration_s: float) -> dict:
+    arr = np.asarray(lats, np.float64)
+    return {
+        "n_requests": int(arr.size),
+        "n_errors": int(n_err),
+        "timeouts": int(n_to),
+        "qps": float(arr.size / duration_s),
+        "route_p50_ms": float(np.percentile(arr, 50)) if arr.size else None,
+        "route_p99_ms": float(np.percentile(arr, 99)) if arr.size else None,
+        "duration_s": float(duration_s),
+    }
+
+
+class _IngestLoad:
+    """Background keyed re-uploads during a serving run: waves of
+    existing client ids get fresh (noised) rows, so capacity stays fixed
+    while the live buffer genuinely mutates under the served round."""
+
+    def __init__(self, server: RouteServer, rows: np.ndarray, *,
+                 wave: int = 256, period_s: float = 0.2, seed: int = 7):
+        self.server, self.rows = server, rows
+        self.wave, self.period_s = int(wave), float(period_s)
+        self.rng = np.random.default_rng(seed)
+        self.waves_done = 0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self) -> None:
+        n = len(self.rows)
+        while not self._stop.is_set():
+            ids = self.rng.choice(n, size=min(self.wave, n), replace=False)
+            noise = 0.1 * self.rng.standard_normal(
+                (len(ids), self.rows.shape[1])).astype(np.float32)
+            self.server.ingest(sketches=self.rows[ids] + noise,
+                               client_ids=[int(i) for i in ids])
+            self.waves_done += 1
+            self._stop.wait(self.period_s)
+
+    def start(self) -> "_IngestLoad":
+        self._thread.start()
+        return self
+
+    def stop(self) -> int:
+        self._stop.set()
+        self._thread.join(30.0)
+        return self.waves_done
+
+
+# ------------------------------------------------------------ bench rows
+
+
+def run_row(session, probes, *, mode: str, batched: bool,
+            callers: Optional[int] = None, rate: Optional[float] = None,
+            duration_s: float = 5.0, max_batch: int = 64,
+            max_wait_ms: float = 0.5, queue_depth: int = 1024,
+            ingest: bool = False, config: Optional[dict] = None) -> dict:
+    """One bench point: a fresh ``RouteServer`` over the shared session,
+    one load-generator run, obs aggregates folded into the row."""
+    obs.reset()
+    warm_route_buckets(session, probes[0], max_batch)
+    server = RouteServer(session, max_batch=max_batch,
+                         max_wait_ms=max_wait_ms, queue_depth=queue_depth)
+    server.start()
+    load = None
+    refinal = None
+    timer = None
+    try:
+        if ingest:
+            load = _IngestLoad(server, probes).start()
+            # one warm refinalize mid-run, computed on a snapshot while
+            # ingest + routing continue
+            def _trigger():
+                nonlocal refinal
+                refinal = server.refinalize(background=True)
+            timer = threading.Timer(duration_s / 2, _trigger)
+            timer.daemon = True
+            timer.start()
+        if mode == "closed":
+            stats = closed_loop(server, probes, callers=int(callers),
+                                duration_s=duration_s, batched=batched)
+        elif mode == "open":
+            stats = open_loop(server, probes, rate=float(rate),
+                              duration_s=duration_s)
+        else:
+            raise ValueError(f"mode must be closed|open, got {mode!r}")
+        if refinal is not None:
+            refinal.result(120.0)
+    finally:
+        if timer is not None:
+            timer.cancel()
+        waves = load.stop() if load is not None else 0
+        server.stop(drain=True)
+    snap = obs.snapshot()
+    hists = snap["histograms"]
+    counters = snap["counters"]
+
+    def _h(name, field):
+        h = hists.get(name, {})
+        return h.get(field) if h.get("count") else None
+
+    row = {
+        "mode": mode,
+        "batched": bool(batched),
+        "callers": None if callers is None else int(callers),
+        "rate": None if rate is None else float(rate),
+        "max_batch": int(max_batch),
+        "max_wait_ms": float(max_wait_ms),
+        "queue_depth": int(queue_depth),
+        "ingest_waves": int(waves),
+        "backpressure": int(counters.get("serving.backpressure", 0)),
+        "flush_size_p50": _h("serving.flush_size", "p50"),
+        "flush_size_p95": _h("serving.flush_size", "p95"),
+        "flush_size_max": _h("serving.flush_size", "max"),
+        "queue_depth_p95": _h("serving.queue_depth", "p95"),
+        "staleness_at_serve_p95": _h("serving.staleness_at_serve", "p95"),
+        "refinalize_under_load_ms": _h("serving.refinalize_under_load.ms",
+                                       "p50"),
+        "drops": 0,     # every submitted request resolves: result/timeout
+        **stats,
+    }
+    if config:
+        row.update(config)
+    return row
+
+
+def run(*, clients: int = 4096, clusters: int = 8, sketch_dim: int = 64,
+        callers=(4, 16), duration_s: float = 5.0, max_batch: int = 64,
+        max_wait_ms: float = 0.5, queue_depth: int = 1024,
+        open_rate: Optional[float] = None, ingest: bool = True,
+        seed: int = 0, out: Optional[str] = None) -> dict:
+    """The full sweep: per concurrency point one batched + one
+    per-request closed-loop row, plus (optionally) one open-loop row
+    and one batched-under-ingest row; emits the schema-1 report with
+    the batching-beats-per-request criterion."""
+    config = {"clients": int(clients), "clusters": int(clusters),
+              "sketch_dim": int(sketch_dim)}
+    session, rows = build_session(clients=clients, clusters=clusters,
+                                  sketch_dim=sketch_dim, seed=seed)
+    bench_rows: list = []
+    criterion: dict = {}
+    for m in callers:
+        direct = run_row(session, rows, mode="closed", batched=False,
+                         callers=m, duration_s=duration_s,
+                         max_batch=max_batch, max_wait_ms=max_wait_ms,
+                         queue_depth=queue_depth, config=config)
+        batched = run_row(session, rows, mode="closed", batched=True,
+                          callers=m, duration_s=duration_s,
+                          max_batch=max_batch, max_wait_ms=max_wait_ms,
+                          queue_depth=queue_depth, config=config)
+        bench_rows += [direct, batched]
+        criterion[f"callers={m}"] = {
+            "batched_qps": batched["qps"],
+            "direct_qps": direct["qps"],
+            "speedup": (batched["qps"] / direct["qps"]
+                        if direct["qps"] else None),
+            "pass": batched["qps"] > direct["qps"],
+        }
+        print(f"closed callers={m}: direct {direct['qps']:.0f}/s, "
+              f"batched {batched['qps']:.0f}/s "
+              f"(p50 {batched['route_p50_ms']:.2f}ms)")
+    if ingest:
+        under = run_row(session, rows, mode="closed", batched=True,
+                        callers=max(callers), duration_s=duration_s,
+                        max_batch=max_batch, max_wait_ms=max_wait_ms,
+                        queue_depth=queue_depth, ingest=True,
+                        config=config)
+        bench_rows.append(under)
+        ref_ms = under["refinalize_under_load_ms"]
+        print(f"under-ingest callers={max(callers)}: "
+              f"{under['qps']:.0f}/s, refinalize "
+              f"{'n/a' if ref_ms is None else f'{ref_ms:.0f}ms'}, "
+              f"{under['ingest_waves']} waves")
+    if open_rate:
+        op = run_row(session, rows, mode="open", batched=True,
+                     rate=open_rate, duration_s=duration_s,
+                     max_batch=max_batch, max_wait_ms=max_wait_ms,
+                     queue_depth=queue_depth, config=config)
+        bench_rows.append(op)
+        print(f"open rate={open_rate}/s: served {op['qps']:.0f}/s "
+              f"(p99 {op['route_p99_ms']:.2f}ms)")
+    report = {
+        "bench": "serving",
+        "schema_version": SCHEMA_VERSION,
+        "config": {**config, "duration_s": float(duration_s),
+                   "max_batch": int(max_batch),
+                   "max_wait_ms": float(max_wait_ms),
+                   "queue_depth": int(queue_depth), "seed": int(seed)},
+        "criterion": criterion,
+        "rows": bench_rows,
+    }
+    if out:
+        with open(out, "w") as fh:
+            json.dump(report, fh, indent=1)
+        print(f"wrote {out} ({len(bench_rows)} rows)")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--clients", type=int, default=4096)
+    ap.add_argument("--clusters", type=int, default=8)
+    ap.add_argument("--sketch-dim", type=int, default=64)
+    ap.add_argument("--callers", default="4,16",
+                    help="comma-separated closed-loop concurrency points")
+    ap.add_argument("--duration", type=float, default=5.0)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=0.5)
+    ap.add_argument("--queue-depth", type=int, default=1024)
+    ap.add_argument("--open-rate", type=float, default=None,
+                    help="also run one Poisson open-loop row at this rate")
+    ap.add_argument("--no-ingest", action="store_true",
+                    help="skip the ingest-while-serving row")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--floor-qps", type=float, default=None,
+                    help="exit 1 unless the best batched closed-loop row "
+                         "reaches this many routes/s (the smoke gate)")
+    ap.add_argument("--require-criterion", action="store_true",
+                    help="exit 1 unless batched beats per-request at EVERY "
+                         "concurrency point (needs enough callers to "
+                         "amortize — batching has nothing to coalesce "
+                         "below ~4)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    callers = tuple(int(c) for c in str(args.callers).split(",") if c)
+    report = run(clients=args.clients, clusters=args.clusters,
+                 sketch_dim=args.sketch_dim, callers=callers,
+                 duration_s=args.duration, max_batch=args.max_batch,
+                 max_wait_ms=args.max_wait_ms,
+                 queue_depth=args.queue_depth, open_rate=args.open_rate,
+                 ingest=not args.no_ingest, seed=args.seed, out=args.out)
+    if not all(c["pass"] for c in report["criterion"].values()):
+        print("criterion not met: cross-caller batching did not beat "
+              "per-request routing at every concurrency point")
+        if args.require_criterion:
+            return 1
+    if args.floor_qps is not None:
+        best = max(r["qps"] for r in report["rows"]
+                   if r["mode"] == "closed" and r["batched"])
+        if best < args.floor_qps:
+            print(f"floor FAILED: best batched qps {best:.0f} < "
+                  f"{args.floor_qps}")
+            return 1
+        print(f"floor OK: best batched qps {best:.0f} >= {args.floor_qps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

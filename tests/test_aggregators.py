@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import (
+    GeometricMedianAggregator,
     MeanAggregator,
     MedianAggregator,
     TrimmedMeanAggregator,
@@ -247,6 +248,64 @@ def test_cluster_aggregate_tree_mean_matches_manual():
     expect = means[np.asarray(labels)].reshape(12, 2, 2)
     np.testing.assert_allclose(np.asarray(out["w"]), expect,
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------- geometric median
+
+def test_geometric_median_rejects_colluding_blob():
+    """30% of one cluster's rows collude at a distant shared point —
+    past the per-coordinate trim budget, so the trimmed mean is dragged,
+    while the Weiszfeld geometric median (breakdown 0.5) stays at the
+    honest mode."""
+    rng = np.random.default_rng(0)
+    honest = 5.0 + 0.2 * rng.normal(size=(70, 6)).astype(np.float32)
+    colluders = np.full((30, 6), 120.0, np.float32)
+    flat = np.concatenate([honest, colluders])
+    labels = np.zeros(100, np.int32)
+    args = _inputs(flat, labels, 1)
+    err = {name: float(np.linalg.norm(
+        np.asarray(make_aggregator(name, beta=0.1)(*args))[0] - 5.0))
+        for name in ("mean", "trimmed_mean", "geometric_median")}
+    assert err["geometric_median"] < 2.0
+    assert err["geometric_median"] < 0.1 * err["trimmed_mean"]
+    assert err["geometric_median"] < 0.1 * err["mean"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_geometric_median_near_mean_on_clean_data(seed):
+    """On symmetric clean clusters the geometric median lands near the
+    mean (it is not a different estimand, just a robust one)."""
+    flat, labels, onehot, counts = _random_problem(seed, c=48, k=3)
+    gm = np.asarray(GeometricMedianAggregator(iters=32)(
+        flat, labels, onehot, counts))
+    mean = np.asarray(MeanAggregator()(flat, labels, onehot, counts))
+    live = np.asarray(counts) > 0
+    assert np.linalg.norm(gm[live] - mean[live], axis=1).max() < 1.0
+
+
+def test_geometric_median_degenerate_clusters():
+    """Size-1 cluster -> its member exactly; empty cluster -> 0."""
+    flat = np.array([[7.0, -3.0], [1.0, 1.0], [3.0, 3.0]], np.float32)
+    labels = np.array([0, 1, 1], np.int32)
+    out = np.asarray(GeometricMedianAggregator()(*_inputs(flat, labels, 3)))
+    np.testing.assert_allclose(out[0], [7.0, -3.0], atol=1e-4)
+    np.testing.assert_allclose(out[1], [2.0, 2.0], atol=1e-3)
+    np.testing.assert_array_equal(out[2], 0.0)
+
+
+def test_geometric_median_registry_and_jit():
+    assert "geometric_median" in list_aggregators()
+    assert GeometricMedianAggregator().breakdown == 0.5
+    agg = make_aggregator("geometric_median", iters=8)
+    assert isinstance(agg, GeometricMedianAggregator)
+    assert agg.iters == 8
+    with pytest.raises(ValueError, match="iters"):
+        GeometricMedianAggregator(iters=0)
+    flat, labels, onehot, counts = _random_problem(11)
+    eager = agg(flat, labels, onehot, counts)
+    jitted = jax.jit(agg)(flat, labels, onehot, counts)
+    np.testing.assert_array_equal(np.asarray(jitted), np.asarray(eager))
 
 
 def test_device_kmeans_trimmed_restart_selection_objective():

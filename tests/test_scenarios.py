@@ -203,13 +203,16 @@ def test_bench_robustness_schema(tmp_path):
     out = tmp_path / "BENCH_robustness.json"
     report = bench_robustness.run(
         base=dict(clients=128, wave=128, samples=32),
-        byz=dict(restarts=2),
+        byz=dict(restarts=2), robust=dict(restarts=2),
         aggregators=("mean", "trimmed_mean"),
-        byz_fracs=(0.1,), seeds=(0,), dp_epsilons=(32.0,),
+        robust_aggregators=("trimmed_mean", "geometric_median"),
+        byz_fracs=(0.1,), breakdown_fracs=(0.3,), spoof_fracs=(0.1,),
+        seeds=(0,), dp_epsilons=(32.0,),
         out=str(out))
     on_disk = json.loads(out.read_text())
     assert on_disk["bench"] == "robustness"
-    assert len(on_disk["rows"]) == len(report["rows"]) == 4
+    # 2 byzantine + 2 breakdown + 2 spoof + 2 dp (eps=32 + inf baseline)
+    assert len(on_disk["rows"]) == len(report["rows"]) == 8
     for row in on_disk["rows"]:
         for key in ("sweep", "scenario", "aggregator", "purity", "mse"):
             assert key in row, f"row missing {key!r}: {sorted(row)}"
@@ -217,6 +220,11 @@ def test_bench_robustness_schema(tmp_path):
     byz = [r for r in on_disk["rows"] if r["sweep"] == "byzantine"]
     assert {r["aggregator"] for r in byz} == {"mean", "trimmed_mean"}
     assert all(r["scenario"] == "byzantine" for r in byz)
+    for sweep in ("breakdown", "spoof"):
+        part = [r for r in on_disk["rows"] if r["sweep"] == sweep]
+        assert {r["aggregator"] for r in part} == {"trimmed_mean",
+                                                   "geometric_median"}
+        assert all(r["scenario"] == "byzantine" for r in part)
     dp = [r for r in on_disk["rows"] if r["sweep"] == "dp"]
     assert all(r["scenario"] == "dp" for r in dp)
     assert all("achieved_alpha" in r and "predicted_alpha" in r for r in dp)

@@ -1,0 +1,397 @@
+"""The concurrent serving subsystem (``repro/serving/``).
+
+What this file pins down:
+
+* queue/batching mechanics without a session (backpressure, caller- and
+  server-side timeouts, drain vs drop shutdown);
+* the RouteServer front-end (batched answers bit-equal to direct
+  ``session.route``, the params route path, lifecycle guards);
+* the double-buffered ingest-while-finalize contract — a round computed
+  on a snapshot while ingest keeps mutating the live buffer serves
+  EXACTLY what a serialized replay (same keyed waves in clock order,
+  finalize right after the snapshot's clock) would serve;
+* the full threaded stress: N ingest threads + M route callers +
+  drift-triggered background refinalizes, with zero dropped or
+  duplicated requests and a bit-exact serialized replay of the final
+  served round.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.engine import AggregationSession
+from repro.serving import (
+    BackpressureError,
+    RequestQueue,
+    RouteFuture,
+    RouteServer,
+    RouteTimeout,
+    ServerClosed,
+)
+from repro.serving.batching import _Request
+from repro.serving.loadgen import make_population
+
+DIM = 16
+K = 4
+
+
+def _population(clients=256, seed=0):
+    rows, _, _ = make_population(clients=clients, clusters=K,
+                                 sketch_dim=DIM, seed=seed)
+    return rows
+
+
+def _served_session(rows, *, capacity=None, wave=64, seed=0):
+    """Keyed ingest in waves + cold finalize; returns (session, log)
+    where log holds (clock, ids, wave_rows) — the replay source."""
+    session = AggregationSession(capacity or len(rows), sketch_dim=DIM,
+                                 seed=seed)
+    log = []
+    for lo in range(0, len(rows), wave):
+        chunk = rows[lo:lo + wave]
+        ids = list(range(lo, lo + len(chunk)))
+        session.ingest(sketches=chunk, client_ids=ids)
+        log.append((session.clock, ids, chunk))
+    session.finalize(algorithm="kmeans-device", k=K)
+    return session, log
+
+
+def _replay(log, round_clocks, *, capacity, seed=0):
+    """The serialized-equivalence oracle: a fresh session, the SAME
+    keyed waves in clock order, and a finalize (then warm refinalizes)
+    right after each recorded snapshot clock."""
+    replay = AggregationSession(capacity, sketch_dim=DIM, seed=seed)
+    waves = sorted(log)
+    clocks = [c for c, _, _ in waves]
+    assert len(set(clocks)) == len(clocks), "duplicated wave commit"
+    applied = 0
+
+    def ingest_upto(clk):
+        nonlocal applied
+        while applied < len(waves) and waves[applied][0] <= clk:
+            c, ids, chunk = waves[applied]
+            replay.ingest(sketches=chunk, client_ids=ids)
+            assert replay.clock == c
+            applied += 1
+
+    for i, clk in enumerate(round_clocks):
+        ingest_upto(clk)
+        if i == 0:
+            replay.finalize(algorithm="kmeans-device", k=K)
+        else:
+            replay.refinalize()
+    return replay
+
+
+def _assert_same_round(live, rep):
+    assert live.clock == rep.clock
+    assert live.n_clusters == rep.n_clusters
+    np.testing.assert_array_equal(np.asarray(live.centers),
+                                  np.asarray(rep.centers))
+    np.testing.assert_array_equal(np.asarray(live.first_idx),
+                                  np.asarray(rep.first_idx))
+    np.testing.assert_array_equal(np.asarray(live.out[1]),
+                                  np.asarray(rep.out[1]))
+    assert live.finalized_d2 == rep.finalized_d2
+
+
+# ------------------------------------------------- queue mechanics (no jax)
+
+def _req(deadline=None):
+    return _Request(np.zeros(DIM, np.float32), RouteFuture(),
+                    time.monotonic(), deadline)
+
+
+def test_queue_backpressure_nonblocking_and_timed():
+    q = RequestQueue(2)
+    q.put(_req()), q.put(_req())
+    with pytest.raises(BackpressureError, match="full"):
+        q.put(_req(), block=False)
+    t0 = time.monotonic()
+    with pytest.raises(BackpressureError, match="full"):
+        q.put(_req(), block=True, timeout=0.05)
+    assert time.monotonic() - t0 >= 0.04
+    with pytest.raises(ValueError, match=">= 1"):
+        RequestQueue(0)
+
+
+def test_queue_next_batch_coalesces_and_respects_max_batch():
+    q = RequestQueue(16)
+    for _ in range(5):
+        q.put(_req())
+    batch = q.next_batch(3, 0.0)
+    assert len(batch) == 3
+    assert len(q.next_batch(8, 0.0)) == 2
+
+
+def test_queue_stop_drop_returns_backlog_and_rejects_puts():
+    q = RequestQueue(8)
+    q.put(_req()), q.put(_req())
+    dropped = q.stop(drop=True)
+    assert len(dropped) == 2 and len(q) == 0
+    assert q.next_batch(4, 0.0) is None
+    with pytest.raises(ServerClosed):
+        q.put(_req())
+
+
+def test_future_caller_side_timeout_and_single_use():
+    fut = RouteFuture()
+    with pytest.raises(RouteTimeout, match="no route result"):
+        fut.result(0.01)
+    fut.set_result(3)
+    assert fut.result(0.01) == 3 and fut.done()
+    assert fut.done_at is not None
+
+
+# ------------------------------------------------------- server basic routes
+
+def test_server_batched_routes_match_direct():
+    rows = _population()
+    session, _ = _served_session(rows)
+    expect = np.asarray(session.route(rows[:32]))
+    with RouteServer(session, max_batch=8, max_wait_ms=1.0) as srv:
+        futs = [srv.submit(r) for r in rows[:32]]
+        got = np.asarray([f.result(30.0) for f in futs])
+        single = srv.route(rows[7], timeout=30.0)
+    np.testing.assert_array_equal(got, expect)
+    assert single == expect[7]
+    assert srv.route_direct(rows[7]) == expect[7]
+
+
+def test_server_params_route_path():
+    rng = np.random.default_rng(0)
+    theta = np.concatenate([
+        j * 30.0 + rng.standard_normal((16, 8)).astype(np.float32)
+        for j in range(2)])
+    session = AggregationSession(32, sketch_dim=DIM, seed=0)
+    session.ingest({"theta": theta})
+    session.finalize(algorithm="kmeans-device", k=2)
+    with RouteServer(session) as srv:
+        probe = {"theta": theta[3]}
+        got = srv.route(params=probe, timeout=30.0)
+    assert got == int(session.route(params=probe))
+
+
+def test_server_submit_validation_and_lifecycle():
+    rows = _population(64)
+    session, _ = _served_session(rows, wave=64)
+    srv = RouteServer(session)
+    srv.start(), srv.start()                      # idempotent
+    with pytest.raises(ValueError, match="exactly one"):
+        srv.submit(rows[0], params={"theta": rows[0]})
+    with pytest.raises(ValueError, match="exactly one"):
+        srv.submit()
+    with pytest.raises(ValueError, match=r"\(16,\)"):
+        srv.submit(rows[:2])
+    srv.stop()
+    with pytest.raises(ServerClosed):
+        srv.submit(rows[0])
+    with pytest.raises(ServerClosed):
+        srv.start()
+    with pytest.raises(ValueError, match="max_batch"):
+        RouteServer(session, max_batch=0)
+
+
+def test_server_side_deadline_expires_requests():
+    rows = _population(64)
+    session, _ = _served_session(rows, wave=64)
+    obs.reset()
+    # a long micro-batch window, so the request's own 1ms deadline has
+    # long passed when the flush finally examines it
+    with RouteServer(session, max_wait_ms=200.0) as srv:
+        fut = srv.submit(rows[0], timeout=0.001)
+        with pytest.raises(RouteTimeout, match="expired"):
+            fut.result(10.0)
+    assert obs.snapshot()["counters"].get("serving.timeouts") == 1
+
+
+def test_server_backpressure_and_drop_shutdown():
+    rows = _population(64)
+    session, _ = _served_session(rows, wave=64)
+    srv = RouteServer(session, queue_depth=2, block_on_full=False)
+    # batcher not started: the queue only fills
+    futs = [srv.submit(rows[0]), srv.submit(rows[1])]
+    with pytest.raises(BackpressureError):
+        srv.submit(rows[2])
+    srv.stop(drain=False)
+    for fut in futs:
+        with pytest.raises(ServerClosed):
+            fut.result(1.0)
+
+
+def test_server_drain_serves_backlog_on_stop():
+    rows = _population(64)
+    session, _ = _served_session(rows, wave=64)
+    srv = RouteServer(session, max_batch=4, max_wait_ms=50.0)
+    futs = [srv.submit(r) for r in rows[:8]]      # queued, no batcher yet
+    srv.start()
+    srv.stop(drain=True)
+    got = np.asarray([f.result(30.0) for f in futs])
+    np.testing.assert_array_equal(got, np.asarray(session.route(rows[:8])))
+
+
+# ------------------------------------- ingest-while-finalize double buffering
+
+def test_ingest_during_finalize_serves_snapshot_bit_exact():
+    """finalize(background=True) snapshots atomically BEFORE returning;
+    a wave ingested while the round computes leaves the served round on
+    the snapshot — bit-exact with the serialized replay that stops
+    ingesting at the snapshot's clock."""
+    rows = _population(256)
+    session, log = _served_session(rows, capacity=512)
+    extra = _population(64, seed=9)
+    with RouteServer(session) as srv:
+        fut = srv.finalize(background=True, algorithm="kmeans-device", k=K)
+        snap_clock = session.clock
+        _, clk = srv.ingest(sketches=extra,
+                            client_ids=list(range(256, 320)))
+        log.append((clk, list(range(256, 320)), extra))
+        assert clk == snap_clock + 1
+        out = fut.result(120.0)
+    assert out[2]["snapshot_clock"] == snap_clock
+    served = session.served_round
+    assert served.clock == snap_clock          # known-stale by one wave
+    assert session.clock == snap_clock + 1
+    replay = _replay(log, [snap_clock], capacity=512)
+    _assert_same_round(served, replay.served_round)
+
+
+def test_sync_finalize_through_server_matches_session():
+    rows = _population(128)
+    session, log = _served_session(rows)
+    with RouteServer(session) as srv:
+        out = srv.finalize(algorithm="kmeans-device", k=K)
+    assert out[2]["snapshot_clock"] == session.clock
+    replay = _replay(log, [session.clock], capacity=128)
+    _assert_same_round(session.served_round, replay.served_round)
+
+
+def test_refinalize_requires_prior_finalize():
+    session = AggregationSession(64, sketch_dim=DIM, seed=0)
+    session.ingest(sketches=_population(64)[:32],
+                   client_ids=list(range(32)))
+    with RouteServer(session) as srv:
+        with pytest.raises(ValueError, match="prior finalize"):
+            srv.refinalize()
+        assert srv.maybe_refinalize() is None      # no drift, no config
+
+
+# ----------------------------------------------------------- threaded stress
+
+def test_stress_threads_and_serialized_replay():
+    """3 ingest threads re-uploading keyed waves, 4 route callers, and
+    drift-triggered background warm refinalizes — all concurrent.  Every
+    submitted request resolves exactly once (completions == submissions,
+    no errors), and the final served round is bit-exact with the
+    serialized replay of the logged waves + round snapshots."""
+    clients, n_ingesters, n_callers = 384, 3, 4
+    rows = _population(clients)
+    session, log = _served_session(rows, capacity=512, wave=128)
+    info0 = session.served_round
+    round_clocks = [info0.clock]
+    log_lock = threading.Lock()
+    stop_routing = threading.Event()
+    counts = [None] * n_callers
+    obs.reset()
+
+    srv = RouteServer(session, max_batch=16, max_wait_ms=1.0,
+                      queue_depth=256)
+    srv.start()
+
+    def ingester(tid):
+        rng = np.random.default_rng(100 + tid)
+        for _ in range(5):
+            ids = rng.choice(clients, size=64, replace=False)
+            chunk = (rows[ids] + 0.2 * rng.standard_normal(
+                (len(ids), DIM)).astype(np.float32))
+            _, clk = srv.ingest(sketches=chunk,
+                                client_ids=[int(i) for i in ids])
+            with log_lock:
+                log.append((clk, [int(i) for i in ids], chunk))
+            time.sleep(0.003)
+
+    def caller(tid):
+        rng = np.random.default_rng(200 + tid)
+        n_sub = n_done = n_to = 0
+        while not stop_routing.is_set():
+            sk = rows[rng.integers(0, clients)]
+            n_sub += 1
+            try:
+                srv.route(sk, timeout=30.0)
+                n_done += 1
+            except RouteTimeout:
+                n_to += 1
+        counts[tid] = (n_sub, n_done, n_to)
+
+    ingesters = [threading.Thread(target=ingester, args=(t,), daemon=True)
+                 for t in range(n_ingesters)]
+    callers = [threading.Thread(target=caller, args=(t,), daemon=True)
+               for t in range(n_callers)]
+    rounds = []
+    for t in ingesters + callers:
+        t.start()
+    while any(t.is_alive() for t in ingesters):
+        fut = srv.maybe_refinalize(threshold=-1.0, background=True)
+        if fut is not None:
+            rounds.append(fut)
+        time.sleep(0.02)
+    for t in ingesters:
+        t.join()
+    if not rounds:
+        # loaded machine: no drift-triggered round landed inside the
+        # ingest window — force one under live route traffic so the
+        # replay still covers a mid-stream round
+        rounds.append(srv.refinalize(background=True))
+    # one last round over a quiet buffer, so the served round is final
+    rounds.append(srv.refinalize(background=True))
+    results = [f.result(120.0) for f in rounds]
+    stop_routing.set()
+    for t in callers:
+        t.join(60.0)
+    srv.stop()
+
+    # zero dropped / duplicated requests
+    assert all(c is not None for c in counts), "a caller thread hung"
+    n_sub = sum(c[0] for c in counts)
+    n_done = sum(c[1] for c in counts)
+    n_to = sum(c[2] for c in counts)
+    assert n_done + n_to == n_sub and n_to == 0
+    snap = obs.snapshot()["counters"]
+    assert snap.get("serving.requests", 0) == n_sub
+    assert snap.get("serving.flush_errors", 0) == 0
+    assert n_done > 0 and len(results) >= 2
+
+    # serialized-replay equivalence of the final served round
+    round_clocks += [r[2]["snapshot_clock"] for r in results]
+    assert round_clocks == sorted(round_clocks)
+    served = session.served_round
+    assert served.clock == round_clocks[-1] == session.clock
+    replay = _replay(log, round_clocks, capacity=512)
+    _assert_same_round(served, replay.served_round)
+
+
+# -------------------------------------------------------------- loadgen smoke
+
+def test_loadgen_smoke_report_schema():
+    from repro.serving import loadgen
+
+    report = loadgen.run(clients=128, clusters=K, sketch_dim=DIM,
+                         callers=(2,), duration_s=0.4, max_batch=16,
+                         queue_depth=64, open_rate=None, ingest=True)
+    assert report["bench"] == "serving"
+    assert report["schema_version"] == loadgen.SCHEMA_VERSION
+    assert "callers=2" in report["criterion"]
+    assert len(report["rows"]) == 3            # direct, batched, ingest
+    for row in report["rows"]:
+        for key in ("mode", "batched", "qps", "n_requests", "n_errors",
+                    "timeouts", "drops", "flush_size_p50",
+                    "backpressure", "ingest_waves",
+                    "refinalize_under_load_ms", "clients"):
+            assert key in row
+        assert row["n_errors"] == 0 and row["drops"] == 0
+    under = report["rows"][-1]
+    assert under["ingest_waves"] > 0
+    assert under["refinalize_under_load_ms"] is not None

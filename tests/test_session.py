@@ -187,6 +187,68 @@ def test_session_guard_rails():
     assert sess.sketches.shape == (3, 16)
 
 
+def test_empty_batch_guards():
+    """Zero-row waves and probes fail loudly instead of tracing a
+    zero-size program (or silently serving nothing)."""
+    pts, _ = make_blobs(2, [6, 6], 5)
+    sess = AggregationSession(len(pts), sketch_dim=16, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts)})
+    sess.finalize(algorithm="kmeans-device", k=2)
+    with pytest.raises(ValueError, match="at least one probe"):
+        sess.route(np.zeros((0, 16), np.float32))
+    with pytest.raises(ValueError, match="at least one client row"):
+        sess.sketch_params({"theta": jnp.zeros((0, 5))})
+    with pytest.raises(ValueError, match="empty parameter wave"):
+        sess.sketch_params({})
+
+
+def test_snapshot_compute_install_composes_to_finalize():
+    """The split server API (snapshot -> compute_round -> install_round)
+    is exactly finalize() taken apart: same round bit-for-bit, and the
+    snapshot is immune to ingests that land between compute and
+    install."""
+    pts, _ = make_blobs(9, [10, 8, 9], 6)
+    sess = AggregationSession(32, sketch_dim=16, seed=0)
+    sess.ingest({"theta": jnp.asarray(pts[:20])})
+
+    ref = AggregationSession(32, sketch_dim=16, seed=0)
+    ref.ingest({"theta": jnp.asarray(pts[:20])})
+    ref_out = ref.finalize(algorithm="kmeans-device", k=3)
+
+    snap = sess.snapshot()
+    assert snap.count == 20 and snap.clock == sess.clock
+    out, served = sess.compute_round(snap, algorithm="kmeans-device", k=3)
+    # the live buffer moves on BEFORE install: the round stays the
+    # snapshot's, and the session knows it is stale (clock mismatch)
+    sess.ingest({"theta": jnp.asarray(pts[20:])})
+    sess.install_round(out, served)
+    np.testing.assert_array_equal(np.asarray(out[1]),
+                                  np.asarray(ref_out[1]))
+    np.testing.assert_array_equal(np.asarray(sess.served_round.centers),
+                                  np.asarray(ref.served_round.centers))
+    assert out[2]["snapshot_clock"] == served.clock < sess.clock
+    assert sess.served_round.count == 20
+    # finalize_config was captured by compute_round: refinalize covers
+    # the grown buffer with the same algorithm/k
+    _, labels, info = sess.refinalize()
+    assert labels.shape == (len(pts),)
+    assert info["snapshot_clock"] == sess.clock
+
+
+def test_snapshot_requires_data_and_clock_ticks_per_wave():
+    sess = AggregationSession(8, sketch_dim=16)
+    with pytest.raises(ValueError, match="nothing ingested"):
+        sess.snapshot()
+    assert sess.clock == 0
+    sess.ingest(sketches=np.zeros((2, 16), np.float32))
+    sess.ingest(sketches=np.ones((3, 16), np.float32))
+    assert sess.clock == 2
+    snap = sess.snapshot()
+    assert snap.count == 5 and snap.clock == 2
+    assert snap.params is None                  # sketch-only session
+    np.testing.assert_array_equal(np.asarray(snap.sketches)[:2], 0.0)
+
+
 def test_rejected_wave_does_not_lock_ingest_mode():
     """A wave that fails validation must leave the session untouched —
     in particular an invalid sketch wave on a fresh session must not
